@@ -1,0 +1,21 @@
+"""Shared benchmark plumbing: every figure module exposes ``run() ->
+list[(name, us_per_call, derived)]`` and run.py prints the CSV."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def timed(name: str, fn: Callable[[], str]) -> Row:
+    t0 = time.time()
+    derived = fn()
+    us = (time.time() - t0) * 1e6
+    return (name, us, derived)
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")

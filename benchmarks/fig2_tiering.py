@@ -1,0 +1,22 @@
+"""Fig. 2 — aggregated bandwidth of tiered-memory management schemes."""
+
+from repro.core.device_model import platform_a
+from repro.core.littles_law import OpClass
+from repro.memsim.runner import tiering_schemes
+
+from benchmarks.common import Row, timed
+
+
+def run() -> list:
+    rows: list[Row] = []
+    p = platform_a()
+    for op in OpClass:
+        def one(op=op):
+            r = tiering_schemes(p, op)
+            return (
+                f"ideal={r['ideal_combined']:.0f}GBps;"
+                f"native={r['native']:.0f};interleave={r['interleave']:.0f};"
+                f"os_managed={r['os_managed']:.0f}"
+            )
+        rows.append(timed(f"fig2_tiering_{op.value}", one))
+    return rows

@@ -1,0 +1,23 @@
+"""Fig. 3 — DDR vs CXL single/multi-thread bandwidth, default and 1:1."""
+
+from repro.core.device_model import platform_a, platform_b
+from repro.memsim.runner import bandwidth_matrix
+
+from benchmarks.common import Row, timed
+
+
+def run() -> list:
+    rows: list[Row] = []
+    for label, p in (
+        ("A", platform_a()), ("A-1to1", platform_a(1, 1)),
+        ("B", platform_b()), ("B-1to1", platform_b(1, 1)),
+    ):
+        def one(p=p):
+            out = bandwidth_matrix(p)
+            parts = [
+                f"{r['op']}/{r['tier']}/{r['threads']}t={r['bandwidth_gbps']:.1f}"
+                for r in out
+            ]
+            return ";".join(parts)
+        rows.append(timed(f"fig3_bw_platform{label}", one))
+    return rows

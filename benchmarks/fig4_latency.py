@@ -1,0 +1,19 @@
+"""Fig. 4 — average and tail (p99) latency, DDR vs CXL, thread sweep."""
+
+from repro.core.device_model import platform_a
+from repro.memsim.runner import latency_matrix
+
+from benchmarks.common import Row, timed
+
+
+def run() -> list:
+    p = platform_a()
+
+    def one():
+        out = latency_matrix(p)
+        return ";".join(
+            f"{r['tier']}/{r['threads']}t:avg={r['avg_ns']:.0f}ns,p99={r['p99_ns']:.0f}"
+            for r in out
+        )
+
+    return [timed("fig4_latency_platformA", one)]

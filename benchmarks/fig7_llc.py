@@ -1,0 +1,20 @@
+"""Fig. 7 — LLC partition sweep (CAT analogue) under tiered co-run."""
+
+from repro.core.device_model import platform_a
+from repro.memsim.runner import llc_partition_sweep
+
+from benchmarks.common import Row, timed
+
+
+def run() -> list:
+    p = platform_a()
+    rows: list[Row] = []
+    for wss in (60.0, 120.0):
+        def one(wss=wss):
+            out = llc_partition_sweep(p, wss)
+            return ";".join(
+                f"ddr_share={r['ddr_llc_share']:.2f}:ddr={r['ddr_gbps']:.0f}"
+                f",cxl={r['cxl_gbps']:.0f}" for r in out
+            )
+        rows.append(timed(f"fig7_llc_wss{int(wss)}MB", one))
+    return rows

@@ -1,0 +1,19 @@
+"""Fig. 8 — cross-core CAS latency under DDR vs CXL background traffic."""
+
+from repro.core.device_model import platform_a
+from repro.memsim.runner import sync_interference
+
+from benchmarks.common import Row, timed
+
+
+def run() -> list:
+    p = platform_a()
+
+    def one():
+        out = sync_interference(p)
+        return ";".join(
+            f"{r['bg_tier']}/{r['bg_threads']}bg={r['cas_latency_ns']:.0f}ns"
+            for r in out
+        )
+
+    return [timed("fig8_sync_interference", one)]

@@ -1,0 +1,30 @@
+"""Fig. 9 — memory service time vs thread count (MIKU's detection signal),
+cross-validated against the JAX MVA solver."""
+
+from repro.core.device_model import platform_a
+from repro.core.littles_law import OpClass
+from repro.core.mva import analyze
+from repro.memsim.runner import service_time_curve
+
+from benchmarks.common import Row, timed
+
+
+def run() -> list:
+    p = platform_a()
+
+    def one():
+        out = service_time_curve(p)
+        return ";".join(
+            f"{r['tier']}/{r['threads']}t={r['service_time_ns']:.0f}ns"
+            for r in out
+        )
+
+    def mva():
+        parts = []
+        for n in (1, 4, 16):
+            r = analyze(p, OpClass.LOAD, fast_threads=0, slow_threads=n)
+            parts.append(f"cxl/{n}t={float(r.residency_slow):.0f}ns")
+        return ";".join(parts)
+
+    return [timed("fig9_service_time_des", one),
+            timed("fig9_service_time_mva", mva)]

@@ -1,0 +1,73 @@
+"""Roofline table over the dry-run sweep (assignment §Roofline).
+
+Reads ``dryrun_baseline.json`` (written by ``repro.launch.dryrun``) if
+present — re-running the 88-cell sweep inside the benchmark harness would
+take ~20 min — and emits one row per cell with the three terms, the
+dominant bottleneck, MODEL_FLOPS ratio, and roofline fraction.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from repro.configs import SHAPES, get_arch
+from repro.roofline.analysis import V5E, model_flops
+from repro.roofline.hlo_costs import HloCost
+
+from benchmarks.common import Row, timed
+
+_DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                             "dryrun_baseline.json")
+
+
+def load_cells(path: Optional[str] = None) -> list:
+    path = path or _DEFAULT_PATH
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def cell_row(cell: dict) -> Optional[str]:
+    if not cell.get("ok"):
+        return None
+    spec = get_arch(cell["arch"])
+    shape = SHAPES[cell["shape"]]
+    n_dev = 512 if "2x16" in cell["mesh"] else 256
+    flops = cell["flops_per_device"]
+    nbytes = cell.get("bytes_min_per_device") or cell["bytes_per_device"]
+    coll = sum(cell["collective_bytes"].values())
+    compute_s = flops / V5E.peak_flops
+    memory_s = nbytes / V5E.hbm_bw
+    coll_s = coll / V5E.link_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(spec, shape)
+    ratio = mf / max(flops * n_dev, 1e-9)
+    ideal = mf / (n_dev * V5E.peak_flops)
+    frac = ideal / max(max(terms.values()), 1e-30)
+    return (
+        f"compute={compute_s:.3g}s;memory={memory_s:.3g}s;"
+        f"collective={coll_s:.3g}s;dominant={dominant};"
+        f"useful_ratio={ratio:.3f};roofline_frac={frac:.3f}"
+    )
+
+
+def run() -> list:
+    rows: list[Row] = []
+    cells = load_cells()
+    if not cells:
+        return [("roofline_table", 0.0,
+                 "dryrun_baseline.json missing: run python -m repro.launch.dryrun")]
+    for cell in cells:
+        if cell["mesh"] != "pod16x16":
+            continue  # roofline table is single-pod per the assignment
+        derived = cell_row(cell)
+        if derived is None:
+            continue
+        rows.append(
+            (f"roofline_{cell['arch']}_{cell['shape']}", 0.0, derived)
+        )
+    return rows

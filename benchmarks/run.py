@@ -1,0 +1,42 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        fig2_tiering,
+        fig3_bandwidth,
+        fig4_latency,
+        fig5_corun,
+        fig7_llc,
+        fig8_sync,
+        fig9_service,
+        fig10_miku,
+        fig11_llm,
+        fig13_spark,
+        fig14_kv,
+        roofline_table,
+    )
+    from benchmarks.common import emit
+
+    modules = [
+        fig2_tiering, fig3_bandwidth, fig4_latency, fig5_corun, fig7_llc,
+        fig8_sync, fig9_service, fig10_miku, fig11_llm, fig13_spark,
+        fig14_kv, roofline_table,
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for mod in modules:
+        if only and only not in mod.__name__:
+            continue
+        try:
+            emit(mod.run())
+        except Exception as ex:  # keep the harness going; failures visible
+            emit([(mod.__name__, 0.0, f"ERROR:{type(ex).__name__}:{ex}")])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Watch MIKU stabilize: per-window controller decisions and the estimated
+slow-tier service time during a DDR/CXL co-run (paper Fig. 9/10 dynamics).
+
+Run:  PYTHONPATH=src python examples/corun_miku_demo.py
+"""
+
+from repro.core.des import run_corun
+from repro.core.device_model import platform_a
+from repro.core.littles_law import OpClass
+from repro.memsim.calibration import default_miku
+
+
+def main() -> None:
+    platform = platform_a()
+    controller = default_miku(platform)
+    result = run_corun(
+        platform, op=OpClass.STORE, n_threads=16, sim_ns=250_000,
+        controller=controller,
+    )
+    print("window  t_slow(ns)  threshold  cores  rate   phase")
+    for i, (d, e) in enumerate(
+        zip(controller.decisions, controller.estimator.history)
+    ):
+        cores = d.max_concurrency if d.max_concurrency is not None else "-"
+        print(
+            f"{i:4d} {e.t_slow_raw:11.0f} {e.threshold:10.0f} "
+            f"{cores!s:>6} {d.rate_factor:5.2f}  {d.phase.value}"
+        )
+    print(
+        f"\nfinal bandwidth: DDR {result.bandwidth('ddr'):.1f} GB/s, "
+        f"CXL {result.bandwidth('cxl'):.1f} GB/s"
+    )
+
+
+if __name__ == "__main__":
+    main()

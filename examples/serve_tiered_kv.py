@@ -1,0 +1,21 @@
+"""Tiered serving demo: co-located HBM-resident and host-tier-resident LLM
+instances — DataRacing vs MIKU (the paper's §6 LLM case study on TPU tiers).
+
+Run:  PYTHONPATH=src python examples/serve_tiered_kv.py
+"""
+
+from repro.launch.serve import build_cluster
+
+
+def main() -> None:
+    for mode in ("racing", "miku"):
+        cl = build_cluster("llama31-8b", smoke=True, n_requests=24, mode=mode)
+        res = cl.run()
+        line = "  ".join(
+            f"{k}={v['tokens_per_s']:.0f}tok/s" for k, v in res.items()
+        )
+        print(f"{mode:7s}: {line}")
+
+
+if __name__ == "__main__":
+    main()

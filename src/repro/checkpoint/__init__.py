@@ -1,0 +1,9 @@
+from repro.checkpoint.ckpt import (
+    CheckpointManager,
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "latest_step"]

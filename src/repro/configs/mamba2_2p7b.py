@@ -1,0 +1,58 @@
+"""mamba2-2.7b — attention-free SSD state-space model (arXiv:2405.21060).
+
+Assigned: 64L d_model=2560 (attn-free) d_ff=0 vocab=50280 ssm_state=128.
+d_inner = 2*d = 5120, P = 64 => 80 SSM heads, 1 group.
+
+Arch-applicability note (DESIGN.md §4): no KV cache exists, so the paper's
+tiered-KV serving technique is inapplicable; MIKU still governs the
+training-time optimizer-state offload stream for this arch.
+"""
+
+from repro.configs import ArchSpec
+from repro.models.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    n_layers=64,
+    d_model=2560,
+    n_q_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab=50280,
+    block="ssm",
+    rope_theta=None,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    ssm_expand=2,
+    tied_embeddings=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-smoke",
+        n_layers=2,
+        d_model=128,
+        n_q_heads=0,
+        n_kv_heads=0,
+        head_dim=0,
+        d_ff=0,
+        vocab=512,
+        block="ssm",
+        rope_theta=None,
+        ssm_state=16,
+        ssm_head_dim=32,
+        ssm_chunk=16,
+        tied_embeddings=True,
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="mamba2-2.7b",
+    config=CONFIG,
+    smoke=smoke_config(),
+    long_context=True,  # O(1) decode state
+    notes="attention-free SSD; KV tiering inapplicable (no KV cache)",
+)

@@ -1,0 +1,69 @@
+# The paper's primary contribution: tiered-memory characterization substrate
+# (device models, DES, MVA) + MIKU dynamic memory request control
+# (Little's-Law estimator + hierarchical throttle controller), plus the
+# TPU-native tier/offload runtime they govern.
+
+from repro.core.controller import (
+    Decision,
+    MikuConfig,
+    MikuController,
+    Phase,
+    StragglerGovernor,
+)
+from repro.core.des import SimResult, TieredMemorySim, WorkloadSpec
+from repro.core.device_model import (
+    CXL_DEVICE,
+    DDR5_DIMM,
+    DeviceModel,
+    PlatformModel,
+    PLATFORMS,
+    platform_a,
+    platform_b,
+    tpu_host_platform,
+)
+from repro.core.littles_law import (
+    EstimatorConfig,
+    LittlesLawEstimator,
+    OpClass,
+    TierCounters,
+    TierEstimate,
+)
+from repro.core.offload import HostOffloader, TransferQueue
+from repro.core.tiers import (
+    HBM_TIER,
+    HOST_TIER,
+    TieredLayout,
+    TierSpec,
+    host_offload_supported,
+)
+
+__all__ = [
+    "Decision",
+    "MikuConfig",
+    "MikuController",
+    "Phase",
+    "StragglerGovernor",
+    "SimResult",
+    "TieredMemorySim",
+    "WorkloadSpec",
+    "CXL_DEVICE",
+    "DDR5_DIMM",
+    "DeviceModel",
+    "PlatformModel",
+    "PLATFORMS",
+    "platform_a",
+    "platform_b",
+    "tpu_host_platform",
+    "EstimatorConfig",
+    "LittlesLawEstimator",
+    "OpClass",
+    "TierCounters",
+    "TierEstimate",
+    "HostOffloader",
+    "TransferQueue",
+    "HBM_TIER",
+    "HOST_TIER",
+    "TieredLayout",
+    "TierSpec",
+    "host_offload_supported",
+]

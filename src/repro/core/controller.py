@@ -1,0 +1,296 @@
+"""MIKU — Dynamic Memory Request Control (paper §5.2).
+
+The controller half of MIKU.  Given per-window Little's-Law estimates of the
+slow-tier service time (:mod:`repro.core.littles_law`), it decides how much
+concurrency and issue rate slow-tier traffic may use, so that:
+
+  * fast-tier (DDR / HBM) requests are never queued behind a slow-tier
+    backlog in the shared request structure, and
+  * slow-tier traffic still gets its maximum backlog-free throughput
+    (work-conserving, best-effort service — no static reservation).
+
+Mechanism, mirroring the paper:
+
+  1. **Detection** — slow-tier backlog ⇔ estimated ``T_slow`` exceeds a
+     calibrated, read/write-mix-adjusted threshold (and keeps growing).
+  2. **Hierarchical throttling** — on detection, all slow-tier-bound actors
+     are demoted to *level-3*, the most restrictive concurrency level
+     (1 core / 1 in-flight stream).  If ``T_slow`` still exceeds target, the
+     issue *rate* at level-3 is reduced (the MBA-% / CPU-quota analogue).
+  3. **Work-conserving promotion** — while ``T_slow`` sits comfortably below
+     threshold, actors are promoted one level per calm window, up to the
+     instruction-class cap (the paper's empirically-determined backlog-free
+     concurrency: 8 / 4 / 1 cores for load / store / nt-store), and fully
+     unrestricted once the fast tier goes idle.
+
+The controller is deliberately decoupled from any particular substrate: the
+DES applies its decisions as active-core counts + token-bucket rates; the
+serving engine applies them as max-in-flight host-tier fetches + byte-rate
+caps; the straggler governor applies them to per-host dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Optional, Sequence
+
+from repro.core.littles_law import (
+    EstimatorConfig,
+    LittlesLawEstimator,
+    OpClass,
+    TierCounters,
+    TierEstimate,
+)
+
+
+class Phase(enum.Enum):
+    UNRESTRICTED = "unrestricted"
+    RESTRICTED = "restricted"
+
+
+@dataclasses.dataclass(frozen=True)
+class MikuConfig:
+    """Controller calibration (paper §5.2 "Effective CXL request throttling")."""
+
+    #: Ascending concurrency ladder.  levels[0] is "level-3" in the paper's
+    #: naming (most restrictive: one core); the top is least restrictive.
+    levels: Sequence[int] = (1, 2, 4, 8, 16)
+    #: Per-instruction-class backlog-free concurrency caps (paper: 8/4/1
+    #: cores for load/store/nt-store).  Promotion stops here while the fast
+    #: tier is active; caps are lifted when the fast tier idles.
+    class_caps: Dict[OpClass, int] = dataclasses.field(
+        default_factory=lambda: {
+            OpClass.LOAD: 8,
+            OpClass.STORE: 4,
+            OpClass.NT_STORE: 1,
+        }
+    )
+    #: Multiplicative rate steps applied *below* the most restrictive level
+    #: (the MBA/cgroup-quota analogue).
+    min_rate: float = 0.1
+    rate_backoff: float = 0.5
+    rate_recover: float = 2.0
+    #: Consecutive calm (sub-threshold) windows required before a promotion.
+    promote_patience: int = 1
+    #: Promote only while t_slow < margin * threshold (hysteresis band).
+    target_margin: float = 0.85
+    #: While restricted, a backlog estimate that shrank by at least this
+    #: factor vs the previous window is a *draining* backlog: hold position
+    #: instead of throttling further (the paper's "multiple rounds of
+    #: adjustment before T_cxl stabilizes").
+    drain_factor: float = 0.9
+    #: Fast-tier insert share below which the fast tier is considered idle
+    #: and all restrictions are released (work conservation).
+    fast_idle_alpha: float = 0.02
+
+
+@dataclasses.dataclass
+class Decision:
+    """What slow-tier traffic is allowed during the next window."""
+
+    max_concurrency: Optional[int]  # None = unrestricted
+    rate_factor: float  # 1.0 = unthrottled issue rate
+    phase: Phase
+    estimate: Optional[TierEstimate] = None
+
+    @property
+    def restricted(self) -> bool:
+        return self.phase is Phase.RESTRICTED
+
+
+class MikuController:
+    """The MIKU feedback loop over estimation windows."""
+
+    def __init__(
+        self,
+        config: MikuConfig,
+        estimator_config: EstimatorConfig,
+    ):
+        self.config = config
+        self.estimator = LittlesLawEstimator(estimator_config)
+        self.phase = Phase.UNRESTRICTED
+        self._level_idx = len(config.levels) - 1
+        self._rate = 1.0
+        self._calm_windows = 0
+        self._prev_raw: Optional[float] = None
+        self.decisions: list = []
+
+    # -- helpers ----------------------------------------------------------
+    def _class_cap(self, slow_classes: Sequence[OpClass]) -> int:
+        """The most permissive backlog-free cap among active traffic classes
+        is bounded by the least permissive one actually present — a window
+        containing nt-stores must respect the nt-store cap."""
+        caps = [self.config.class_caps[c] for c in slow_classes]
+        return min(caps) if caps else max(self.config.levels)
+
+    def _level_value(self) -> int:
+        return self.config.levels[self._level_idx]
+
+    def _demote_fully(self) -> None:
+        """Paper: 'MIKU moves all threads accessing CXL memory to level-3,
+        the most restrictive level ... to ensure the backlog is promptly
+        resolved'."""
+        self._level_idx = 0
+        self._calm_windows = 0
+        self.phase = Phase.RESTRICTED
+
+    # -- main entry point --------------------------------------------------
+    def window(
+        self,
+        fast_delta: TierCounters,
+        slow_delta: TierCounters,
+    ) -> Decision:
+        cfg = self.config
+        est = self.estimator.update(fast_delta, slow_delta)
+        slow_classes = [c for c, n in slow_delta.class_counts.items() if n > 0]
+
+        raw = est.t_slow_raw if est.valid else None
+        if self.phase is Phase.UNRESTRICTED:
+            # Detection uses the smoothed estimate (robust to one noisy
+            # window, like the paper's 1 s sampling).
+            if est.valid and est.backlogged:
+                self._demote_fully()
+                self._rate = 1.0
+        else:
+            fast_idle = (not est.valid and fast_delta.inserts == 0) or (
+                est.valid and est.alpha < cfg.fast_idle_alpha
+            )
+            if fast_idle:
+                # Work conservation: nobody is being hurt — release.
+                self.phase = Phase.UNRESTRICTED
+                self._level_idx = len(cfg.levels) - 1
+                self._rate = 1.0
+                self._calm_windows = 0
+            elif raw is not None and raw > est.threshold:
+                self._calm_windows = 0
+                draining = (
+                    self._prev_raw is not None
+                    and raw < self._prev_raw * cfg.drain_factor
+                )
+                if draining:
+                    pass  # the restriction is working; let the queue empty
+                elif self._level_idx > 0:
+                    self._demote_fully()
+                else:
+                    # Already at level-3: fine-grained rate control.
+                    self._rate = max(cfg.min_rate, self._rate * cfg.rate_backoff)
+            elif raw is not None and raw < cfg.target_margin * est.threshold:
+                self._calm_windows += 1
+                if self._calm_windows >= cfg.promote_patience:
+                    self._calm_windows = 0
+                    if self._rate < 1.0:
+                        self._rate = min(1.0, self._rate * cfg.rate_recover)
+                    else:
+                        cap = self._class_cap(slow_classes)
+                        nxt = self._level_idx + 1
+                        if (
+                            nxt < len(cfg.levels)
+                            and cfg.levels[nxt] <= max(cap, cfg.levels[0])
+                        ):
+                            self._level_idx = nxt
+            else:
+                # In the hysteresis band (or invalid window): hold position.
+                self._calm_windows = 0
+        if raw is not None:
+            self._prev_raw = raw
+
+        if self.phase is Phase.UNRESTRICTED:
+            decision = Decision(
+                max_concurrency=None, rate_factor=1.0, phase=self.phase, estimate=est
+            )
+        else:
+            decision = Decision(
+                max_concurrency=self._level_value(),
+                rate_factor=self._rate,
+                phase=self.phase,
+                estimate=est,
+            )
+        self.decisions.append(decision)
+        return decision
+
+    def reset(self) -> None:
+        self.phase = Phase.UNRESTRICTED
+        self._level_idx = len(self.config.levels) - 1
+        self._rate = 1.0
+        self._calm_windows = 0
+        self._prev_raw = None
+        self.estimator.reset()
+        self.decisions.clear()
+
+
+# ---------------------------------------------------------------------------
+# Straggler governor — the same estimator applied to per-host step service
+# times (DESIGN.md §5).  A slow host is "an overloaded slow tier": its step
+# service time is estimated per window; hosts whose estimate exceeds the
+# threshold get their input shard rate-capped / redispatched by the launcher.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class HostHealth:
+    host: int
+    t_step: float
+    healthy: bool
+    rate_factor: float
+
+
+class StragglerGovernor:
+    """Detect and mitigate straggler hosts via service-time estimation.
+
+    ``threshold_scale`` x median step time flags a straggler; mitigation
+    follows MIKU's ladder: first cap the straggler's microbatch share
+    (rate_factor), then exclude it (rate 0 ⇒ its shard is redispatched to
+    healthy hosts) if it keeps degrading.  Recovery is gradual, mirroring the
+    work-conserving promotion.
+    """
+
+    def __init__(
+        self,
+        n_hosts: int,
+        threshold_scale: float = 1.35,
+        ewma: float = 0.4,
+        patience: int = 2,
+    ):
+        self.n_hosts = n_hosts
+        self.threshold_scale = threshold_scale
+        self.ewma = ewma
+        self.patience = patience
+        self._t = [0.0] * n_hosts
+        self._bad_windows = [0] * n_hosts
+        self._rate = [1.0] * n_hosts
+
+    def window(self, step_times: Sequence[float]) -> list:
+        assert len(step_times) == self.n_hosts
+        for h, t in enumerate(step_times):
+            if t <= 0:  # host missed the window entirely: worst signal
+                self._bad_windows[h] += 1
+                continue
+            self._t[h] = (
+                t if self._t[h] == 0.0 else self.ewma * t + (1 - self.ewma) * self._t[h]
+            )
+        alive = sorted(t for t in self._t if t > 0)
+        if not alive:
+            return [HostHealth(h, 0.0, True, 1.0) for h in range(self.n_hosts)]
+        median = alive[len(alive) // 2]
+        threshold = self.threshold_scale * median
+        out = []
+        for h in range(self.n_hosts):
+            if self._t[h] > threshold:
+                self._bad_windows[h] += 1
+                if self._bad_windows[h] >= self.patience:
+                    # Demote: halve its shard; floor at exclusion.
+                    self._rate[h] = 0.0 if self._rate[h] <= 0.25 else self._rate[h] / 2
+            else:
+                self._bad_windows[h] = 0
+                if self._rate[h] < 1.0:
+                    self._rate[h] = min(1.0, max(self._rate[h], 0.25) * 2)
+            out.append(
+                HostHealth(
+                    host=h,
+                    t_step=self._t[h],
+                    healthy=self._rate[h] >= 1.0,
+                    rate_factor=self._rate[h],
+                )
+            )
+        return out

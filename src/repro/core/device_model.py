@@ -1,0 +1,236 @@
+"""Memory-device service models for the tiered-memory substrate.
+
+The paper's key architectural finding (§4.1) is that a commercial CXL memory
+expander — despite 4-8x the *capacity* of a DDR5 DIMM — exposes roughly the
+hardware parallelism (bank/channel slots) of a *single* DIMM, while the host's
+DDR pool hardware-interleaves 8-12 DIMMs and therefore aggregates their
+parallelism.  Unloaded, CXL behaves like DDR plus a near-constant protocol +
+PCIe latency; loaded, its few service slots saturate and queueing delay grows
+~exponentially (8-10x observed).
+
+We model every device as ``c`` deterministic servers with per-access service
+time ``s`` (64 B cachelines), plus a pipeline (non-slot-occupying) latency for
+the interconnect/protocol:
+
+    peak_bw  = c * 64 B / s
+    latency(unloaded) = pipeline + s
+    latency(loaded)   = pipeline + s + queue_wait          (DES / MVA)
+
+Store semantics follow the paper: an ordinary store is a read-modify-write
+(two device accesses); an nt-store is a single write access; device write
+service is slower than read service (CXL writes ~2x reads at equal
+concurrency, paper footnote 2).
+
+Calibration targets (Platform A, Table 1 + Figs. 3-6):
+  * DDR  (8x DDR5-4800, hw-interleaved): peak load ~250 GB/s, store (RMW)
+    effective ~85 GB/s of retired-store bandwidth, unloaded latency ~110 ns.
+  * CXL  (1x 256 GB PCIe Gen5x8 device): peak load ~28 GB/s (~ one DIMM),
+    unloaded latency ~290 ns, loaded latency 8-10x DDR's.
+These reproduce the paper's observed ratios; they are inputs, not claims.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.littles_law import ACCESS_MIX, OpClass
+
+CACHELINE = 64  # bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """A memory device (or a hardware-interleaved group of identical devices).
+
+    ``parallelism`` is the number of concurrently-serviceable accesses (bank x
+    channel slots); ``read_service_ns``/``write_service_ns`` is the slot
+    occupancy per 64 B access; ``pipeline_ns`` is latency that does not occupy
+    a service slot (bus flight, protocol).  ``interleave`` multiplies
+    parallelism (hardware interleaving across DIMMs combines their slots —
+    the paper's §4.1 "strong correlation between multi-threaded bandwidth and
+    DIMM-level parallelism").
+    """
+
+    name: str
+    tier: str  # "ddr" | "cxl"
+    parallelism: int
+    read_service_ns: float
+    write_service_ns: float
+    pipeline_ns: float
+    interleave: int = 1
+    access_bytes: int = CACHELINE  # 64 B cachelines (x86) or 512 B bursts (TPU)
+
+    @property
+    def total_slots(self) -> int:
+        return self.parallelism * self.interleave
+
+    def service_ns(self, op: OpClass) -> float:
+        """Total slot-occupancy per *retired instruction* of class ``op``.
+
+        RMW stores occupy a slot for read + write back-to-back.
+        """
+        reads, writes = ACCESS_MIX[op]
+        return reads * self.read_service_ns + writes * self.write_service_ns
+
+    def unloaded_latency_ns(self, op: OpClass) -> float:
+        return self.pipeline_ns + self.service_ns(op)
+
+    def peak_bandwidth_gbps(self, op: OpClass) -> float:
+        """Peak retired-data bandwidth (GB/s) for a pure stream of ``op``."""
+        s = self.service_ns(op)
+        return self.total_slots * self.access_bytes / s  # B/ns == GB/s
+
+    def scaled(self, interleave: int, name: str = "") -> "DeviceModel":
+        return dataclasses.replace(
+            self, interleave=interleave, name=name or f"{self.name}x{interleave}"
+        )
+
+
+# --------------------------------------------------------------------------
+# Calibrated platforms (paper Table 1).
+# --------------------------------------------------------------------------
+
+#: One DDR5-4800 DIMM behind one channel: ~32 GB/s loads.
+DDR5_DIMM = DeviceModel(
+    name="ddr5-dimm",
+    tier="ddr",
+    parallelism=16,  # in-flight bank/channel slots per DIMM
+    read_service_ns=32.0,  # 16*64/32ns = 32 GB/s per DIMM
+    write_service_ns=44.0,
+    pipeline_ns=78.0,  # core->CHA->controller flight: ~110ns unloaded load
+)
+
+#: One Micron (pre-market) 256 GB CXL expander on PCIe Gen5 x8.  Paper §4.1:
+#: "peak bandwidth and hardware parallelism comparable to a single DDR DIMM";
+#: unloaded latency ~ DDR + constant CXL.mem/PCIe overhead.
+CXL_DEVICE = DeviceModel(
+    name="cxl-exp",
+    tier="cxl",
+    parallelism=14,
+    read_service_ns=36.0,  # 14*64/36 = ~25 GB/s peak loads
+    write_service_ns=72.0,  # writes ~2x reads (paper footnote 2)
+    pipeline_ns=255.0,  # ~290ns unloaded load latency
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformModel:
+    """A host platform: an interleaved DDR pool + an interleaved CXL pool
+    behind one shared request-tracking structure (CHA ToR / CCX equivalent).
+
+    ``tor_entries`` bounds simultaneously-tracked requests (dispatched but not
+    completed); ``irq_entries`` bounds staged requests awaiting a ToR entry;
+    ``core_mlp`` bounds per-core outstanding misses (LFB/superqueue);
+    ``llc_service_ns``/``llc_slots`` model LLC-hit handling, which *also*
+    consumes ToR entries (paper §4.3).
+    """
+
+    name: str
+    ddr: DeviceModel
+    cxl: DeviceModel
+    tor_entries: int
+    irq_entries: int
+    core_mlp: int
+    n_cores: int
+    llc_service_ns: float
+    llc_slots: int
+    llc_capacity_mb: float
+
+    def device_for(self, tier: str) -> DeviceModel:
+        return self.ddr if tier == "ddr" else self.cxl
+
+
+def platform_a(ddr_dimms: int = 8, cxl_devices: int = 2) -> PlatformModel:
+    """Intel Xeon Gold 6530 (EMR) socket: 8x DDR5 + 2x CXL (Table 1)."""
+    return PlatformModel(
+        name=f"intel-emr-{ddr_dimms}ddr-{cxl_devices}cxl",
+        ddr=DDR5_DIMM.scaled(ddr_dimms, name=f"ddr5x{ddr_dimms}"),
+        cxl=CXL_DEVICE.scaled(cxl_devices, name=f"cxlx{cxl_devices}"),
+        tor_entries=2048,  # effective shared tracking pool (cachelines)
+        irq_entries=256,
+        core_mlp=160,  # outstanding cachelines/core incl. prefetcher streams
+        n_cores=32,
+        llc_service_ns=18.0,
+        llc_slots=96,
+        llc_capacity_mb=160.0,
+    )
+
+
+def platform_b(ddr_dimms: int = 12, cxl_devices: int = 4) -> PlatformModel:
+    """AMD EPYC 9634 (Genoa) socket: 12x DDR5 + 4x CXL (Table 1)."""
+    return PlatformModel(
+        name=f"amd-genoa-{ddr_dimms}ddr-{cxl_devices}cxl",
+        ddr=DDR5_DIMM.scaled(ddr_dimms, name=f"ddr5x{ddr_dimms}"),
+        cxl=CXL_DEVICE.scaled(cxl_devices, name=f"cxlx{cxl_devices}"),
+        tor_entries=2304,  # CCX-distributed, logically pooled for the model
+        irq_entries=320,
+        core_mlp=192,  # Genoa sustains higher per-thread nt-store bw (§4.1)
+        n_cores=84,
+        llc_service_ns=16.0,
+        llc_slots=128,
+        llc_capacity_mb=384.0,
+    )
+
+
+# --------------------------------------------------------------------------
+# TPU-adapted tier models (DESIGN.md §2): HBM fast tier vs pinned-host slow
+# tier behind the per-chip DMA/transfer path.  Units: one "access" = one
+# 512 B transfer burst; parallelism = outstanding DMA descriptors.
+# --------------------------------------------------------------------------
+
+TPU_BURST = 512  # bytes per modeled DMA burst
+
+# In TPU units one modeled access is a 512 B DMA burst:
+# 64 slots * 512 B / 40 ns = 819 GB/s per chip — the v5e HBM roofline number.
+TPU_HBM = DeviceModel(
+    name="tpu-hbm",
+    tier="ddr",
+    parallelism=64,
+    read_service_ns=40.0,
+    write_service_ns=40.0,
+    pipeline_ns=350.0,
+    access_bytes=TPU_BURST,
+)
+
+TPU_HOST = DeviceModel(
+    # Host DRAM over PCIe, shared by the chips on one host: the "CXL" tier.
+    # 8 outstanding descriptors * 512 B / 64 ns ≈ 64 GB/s, of which a single
+    # chip's share is ~16 GB/s with 4 chips/host.
+    name="tpu-pinned-host",
+    tier="cxl",
+    parallelism=8,
+    read_service_ns=64.0,
+    write_service_ns=128.0,
+    pipeline_ns=1800.0,  # PCIe + runtime enqueue
+    access_bytes=TPU_BURST,
+)
+
+
+def tpu_host_platform(chips_per_host: int = 4) -> PlatformModel:
+    """A TPU host: per-chip HBM (fast) + shared pinned-host pool (slow).
+
+    Used by the serving engine's simulated clock and by the MIKU case-study
+    benchmarks in TPU units (bursts of 512 B).
+    """
+    return PlatformModel(
+        name=f"tpu-host-{chips_per_host}chip",
+        ddr=TPU_HBM.scaled(chips_per_host, name=f"hbm-x{chips_per_host}"),
+        cxl=TPU_HOST,
+        tor_entries=512,  # outstanding transfer descriptors tracked per host
+        irq_entries=128,
+        core_mlp=16,
+        n_cores=chips_per_host * 4,  # issue contexts (cores driving DMA)
+        llc_service_ns=8.0,
+        llc_slots=64,
+        llc_capacity_mb=128.0,  # VMEM-ish staging, only used by LLC-style runs
+    )
+
+
+PLATFORMS: Dict[str, PlatformModel] = {
+    "A": platform_a(),
+    "B": platform_b(),
+    "A-1to1": platform_a(ddr_dimms=1, cxl_devices=1),
+    "B-1to1": platform_b(ddr_dimms=1, cxl_devices=1),
+    "TPU": tpu_host_platform(),
+}

@@ -1,0 +1,285 @@
+"""Little's-Law service-time estimation — the measurement half of MIKU (paper §5.2, Eq. 1).
+
+The paper measures two cumulative uncore events on Intel EMR:
+
+  * ``UNC_CHA_TOR_INSERTS.all``   — requests inserted into the Table of Requests (ToR)
+  * ``UNC_CHA_TOR_OCCUPANCY.all`` — active ToR entries, accumulated per cycle
+
+and derives the average memory service time of all requests currently flowing
+through the shared queue:
+
+    T_avg = ToR.Occupancy / ToR.Inserts
+          = alpha% * T_ddr + (1 - alpha%) * T_cxl                      (Eq. 1)
+
+With ``T_ddr`` measured offline (the paper treats it as a constant — DDR never
+backlogs the ToR) and ``alpha`` tracked from per-tier request counts, MIKU
+solves Eq. 1 for ``T_cxl`` and compares it against a calibrated threshold.
+
+This module is the exact, hardware-agnostic version of that estimator.  The
+"ToR" here is whatever shared request-tracking structure the embedding system
+has: the DES's ToR pool, the serving engine's transfer/batch-slot queue, or a
+launcher's per-host step pipeline (straggler governor).  Counters are
+maintained by the embedding system via :class:`TierCounters`; the estimator is
+pure arithmetic over counter snapshots and therefore unit-testable in
+isolation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Dict, Optional
+
+
+class OpClass(enum.Enum):
+    """Memory instruction classes from the paper's bw-test (§3, §5.2).
+
+    * ``LOAD``     — pure reads.
+    * ``STORE``    — ordinary stores: read-modify-write, i.e. one read + one
+      write per retired store (paper: "involve an equal number of reads and
+      writes").
+    * ``NT_STORE`` — non-temporal stores: write-only streams.
+    """
+
+    LOAD = "load"
+    STORE = "store"
+    NT_STORE = "nt_store"
+
+
+#: Device-level accesses generated per retired request of each class
+#: (reads, writes) — used both by the device models and by the threshold
+#: calibration (paper footnote 2: write threshold ~ 2x read threshold).
+ACCESS_MIX: Dict[OpClass, tuple] = {
+    OpClass.LOAD: (1, 0),
+    OpClass.STORE: (1, 1),
+    OpClass.NT_STORE: (0, 1),
+}
+
+
+@dataclasses.dataclass
+class TierCounters:
+    """Cumulative counters for one memory tier, mirroring the uncore events.
+
+    ``occupancy_time`` integrates (entries-in-flight x dt) — the continuous
+    analogue of per-cycle ToR occupancy accumulation.  ``inserts`` counts
+    completed insertions.  Per-class counts drive the alpha decomposition and
+    the read/write-weighted threshold.
+    """
+
+    inserts: int = 0
+    occupancy_time: float = 0.0  # entry-seconds (or entry-cycles)
+    class_counts: Dict[OpClass, int] = dataclasses.field(
+        default_factory=lambda: {c: 0 for c in OpClass}
+    )
+
+    def record(self, op: OpClass, residency: float) -> None:
+        """Record one request that held a shared-queue entry for ``residency``."""
+        self.inserts += 1
+        self.occupancy_time += residency
+        self.class_counts[op] += 1
+
+    def merge(self, other: "TierCounters") -> None:
+        self.inserts += other.inserts
+        self.occupancy_time += other.occupancy_time
+        for c in OpClass:
+            self.class_counts[c] += other.class_counts[c]
+
+    def snapshot(self) -> "TierCounters":
+        return TierCounters(
+            inserts=self.inserts,
+            occupancy_time=self.occupancy_time,
+            class_counts=dict(self.class_counts),
+        )
+
+    def delta(self, since: "TierCounters") -> "TierCounters":
+        """Counters accumulated since an earlier snapshot (window counters)."""
+        return TierCounters(
+            inserts=self.inserts - since.inserts,
+            occupancy_time=self.occupancy_time - since.occupancy_time,
+            class_counts={
+                c: self.class_counts[c] - since.class_counts[c] for c in OpClass
+            },
+        )
+
+    @property
+    def mean_service_time(self) -> float:
+        if self.inserts == 0:
+            return 0.0
+        return self.occupancy_time / self.inserts
+
+    def read_write_fractions(self) -> tuple:
+        """(read_fraction, write_fraction) of device-level accesses."""
+        reads = writes = 0
+        for c, n in self.class_counts.items():
+            r, w = ACCESS_MIX[c]
+            reads += r * n
+            writes += w * n
+        total = reads + writes
+        if total == 0:
+            return (1.0, 0.0)
+        return (reads / total, writes / total)
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimatorConfig:
+    """Calibration for the estimator (paper §5.2, measured offline).
+
+    ``t_fast`` is the fast-tier (DDR) service time for pure loads *under
+    load* — the paper measures it offline with a saturating bw-test and
+    treats it as constant ("DDR never caused a backlog in the ToR").
+    ``t_fast_class_scale`` adjusts it for the instruction mix (stores are
+    read-modify-write and occupy the queue longer).  The slow-tier backlog
+    threshold is expressed for pure reads; writes use
+    ``write_threshold_scale`` x that (paper footnote 2: ~2x), and mixed
+    windows interpolate by the read/write access fractions.
+
+    Eq. 1 becomes ill-conditioned as alpha -> 1 (almost no slow-tier
+    traffic): the (1 - alpha) denominator amplifies any t_fast calibration
+    residue into nonsense.  Above ``alpha_calm`` the estimator therefore
+    falls back to the slow tier's *direct* windowed residency (on Intel
+    derivable from IMC RPQ/WPQ occupancy counters; in our substrates the
+    engine keeps exact per-tier counters) — physically, a slow tier
+    receiving a negligible share of inserts cannot be monopolizing the
+    shared queue.
+    """
+
+    t_fast: float  # offline-measured loaded fast-tier service time
+    slow_read_threshold: float  # backlog threshold for slow-tier reads
+    write_threshold_scale: float = 2.0
+    ewma: float = 0.5  # smoothing for windowed estimates
+    min_window_inserts: int = 16  # below this, a window is not trustworthy
+    min_slow_inserts: int = 4  # need at least this many slow retires
+    alpha_calm: float = 0.97  # above this fast share, use direct slow counters
+    #: Per-class multipliers on t_fast (from the device model's read/write
+    #: service asymmetry); None = loads only.
+    t_fast_class_scale: Optional[Dict["OpClass", float]] = None
+
+
+@dataclasses.dataclass
+class TierEstimate:
+    """One estimation window's output."""
+
+    t_avg: float  # Eq.1 LHS: occupancy/inserts over both tiers
+    alpha: float  # fast-tier share of inserts
+    t_slow: float  # solved slow-tier service time (EWMA-smoothed)
+    t_slow_raw: float  # unsmoothed per-window estimate
+    threshold: float  # mix-adjusted backlog threshold for this window
+    backlogged: bool  # t_slow > threshold
+    valid: bool  # window had enough samples to trust
+
+
+class LittlesLawEstimator:
+    """Decompose shared-queue occupancy into per-tier service times (Eq. 1).
+
+    Usage: the embedding system keeps one :class:`TierCounters` per tier and
+    periodically calls :meth:`update` with window deltas.  The estimator
+    solves ``T_slow`` and flags backlog.  It never throttles anything itself —
+    that is :class:`repro.core.controller.MikuController`'s job.
+    """
+
+    def __init__(self, config: EstimatorConfig):
+        self.config = config
+        self._t_slow_ewma: Optional[float] = None
+        self.history: list = []  # list[TierEstimate], for diagnostics
+
+    def reset(self) -> None:
+        self._t_slow_ewma = None
+        self.history.clear()
+
+    def threshold_for_mix(self, slow_window: TierCounters) -> float:
+        """Interpolate the backlog threshold by the window's read/write mix.
+
+        Paper: CXL write latency ~= 2x read latency at equal concurrency, and
+        the write threshold is ~2x the read threshold; ordinary stores behave
+        like the average of a read and a write.  Weighting the read threshold
+        by the device-level access mix reproduces exactly that calibration:
+        pure loads -> thr, nt-stores -> 2*thr, stores -> 1.5*thr.
+        """
+        rf, wf = slow_window.read_write_fractions()
+        scale = rf * 1.0 + wf * self.config.write_threshold_scale
+        return self.config.slow_read_threshold * scale
+
+    def t_fast_for_mix(self, fast_window: TierCounters) -> float:
+        """t_fast adjusted for the fast window's instruction-class mix."""
+        scales = self.config.t_fast_class_scale
+        if not scales or fast_window.inserts == 0:
+            return self.config.t_fast
+        total = num = 0
+        for c, n in fast_window.class_counts.items():
+            num += n * scales.get(c, 1.0)
+            total += n
+        return self.config.t_fast * (num / max(total, 1))
+
+    def update(
+        self, fast_window: TierCounters, slow_window: TierCounters
+    ) -> TierEstimate:
+        cfg = self.config
+        total_inserts = fast_window.inserts + slow_window.inserts
+        total_occ = fast_window.occupancy_time + slow_window.occupancy_time
+        threshold = self.threshold_for_mix(slow_window)
+
+        if (
+            total_inserts < cfg.min_window_inserts
+            or slow_window.inserts < cfg.min_slow_inserts
+        ):
+            # Not enough slow-tier traffic to estimate: decay towards "no
+            # backlog" so a quiet tier is eventually unthrottled.
+            est = TierEstimate(
+                t_avg=total_occ / total_inserts if total_inserts else 0.0,
+                alpha=1.0 if slow_window.inserts == 0 else 0.0,
+                t_slow=self._t_slow_ewma or 0.0,
+                t_slow_raw=0.0,
+                threshold=threshold,
+                backlogged=False,
+                valid=False,
+            )
+            self.history.append(est)
+            return est
+
+        t_avg = total_occ / total_inserts
+        alpha = fast_window.inserts / total_inserts
+        if alpha > cfg.alpha_calm:
+            # Ill-conditioned corner of Eq. 1: use the slow tier's directly
+            # measured window residency instead of the decomposition.
+            t_slow_raw = slow_window.mean_service_time
+        else:
+            # Eq. 1 solved for T_slow.
+            t_slow_raw = (t_avg - alpha * self.t_fast_for_mix(fast_window)) / (
+                1.0 - alpha
+            )
+        # Mixed queues can transiently yield estimates below the physical
+        # floor; clamp at zero (a *negative* service time is measurement
+        # noise, not information).
+        t_slow_raw = max(t_slow_raw, 0.0)
+
+        if self._t_slow_ewma is None:
+            self._t_slow_ewma = t_slow_raw
+        else:
+            a = cfg.ewma
+            self._t_slow_ewma = a * t_slow_raw + (1.0 - a) * self._t_slow_ewma
+
+        est = TierEstimate(
+            t_avg=t_avg,
+            alpha=alpha,
+            t_slow=self._t_slow_ewma,
+            t_slow_raw=t_slow_raw,
+            threshold=threshold,
+            backlogged=self._t_slow_ewma > threshold,
+            valid=True,
+        )
+        self.history.append(est)
+        return est
+
+    def growth_rate(self, n: int = 3) -> float:
+        """Geometric growth of recent raw estimates — the paper triggers on a
+        threshold crossing *that keeps growing exponentially* (device-side
+        queueing).  Returns ~1.0 when flat; >1 when growing."""
+        valid = [h.t_slow_raw for h in self.history if h.valid and h.t_slow_raw > 0]
+        if len(valid) < n + 1:
+            return 1.0
+        window = valid[-(n + 1):]
+        ratios = [b / a for a, b in zip(window, window[1:]) if a > 0]
+        if not ratios:
+            return 1.0
+        return math.exp(sum(math.log(max(r, 1e-9)) for r in ratios) / len(ratios))

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTokenDataset, HostDataLoader, pack_documents
+
+__all__ = ["SyntheticTokenDataset", "HostDataLoader", "pack_documents"]

@@ -1,0 +1,19 @@
+from repro.distributed.sharding import (
+    ShardingRules,
+    TRAIN_RULES,
+    DECODE_RULES,
+    LONG_CONTEXT_RULES,
+    partition_spec_for,
+    tree_shardings,
+    rules_for_shape,
+)
+
+__all__ = [
+    "ShardingRules",
+    "TRAIN_RULES",
+    "DECODE_RULES",
+    "LONG_CONTEXT_RULES",
+    "partition_spec_for",
+    "tree_shardings",
+    "rules_for_shape",
+]

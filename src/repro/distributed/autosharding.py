@@ -1,0 +1,49 @@
+"""Activation sharding constraints via a logical-axis context.
+
+GSPMD propagation alone lets FSDP-sharded parameters leak their sharding
+into activations (e.g. the embedding gather emits [B, S, D@data] with a
+replicated batch — the involuntary-full-remat warnings).  Model code calls
+``constrain(x, ("batch", "seq", "embed_act"))`` at block boundaries; when a
+:func:`logical_sharding_context` is active this becomes a
+``with_sharding_constraint`` resolved through the same divisibility-aware
+rules as everything else, and is a no-op otherwise (tests, single device).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import ShardingRules, partition_spec_for
+
+_state = threading.local()
+
+
+def _top() -> Optional[Tuple[Mesh, ShardingRules]]:
+    stack = getattr(_state, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def logical_sharding_context(mesh: Mesh, rules: ShardingRules):
+    stack = getattr(_state, "stack", None)
+    if stack is None:
+        stack = _state.stack = []
+    stack.append((mesh, rules))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[str]) -> jax.Array:
+    ctx = _top()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = partition_spec_for(tuple(logical_axes), tuple(x.shape), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,213 @@
+"""Logical-axis sharding rules (DP/FSDP/TP/EP/SP + the multi-pod axis).
+
+Every parameter / activation tensor carries a tuple of *logical* axis names
+(:mod:`repro.models.layers` init functions).  A :class:`ShardingRules` maps
+each logical axis to an ordered list of *candidate* mesh-axis assignments;
+``partition_spec_for`` resolves a tensor's tuple greedily:
+
+  * a candidate is taken only if the dimension is divisible by the mesh-axis
+    (product) size and none of its mesh axes is already used by this tensor;
+  * otherwise the next candidate is tried; exhaustion => replicated dim.
+
+The fallback chains encode real alternatives, not guesses — e.g. KV heads
+shard over ``model`` when the head count divides (gemma2: 16), and fall back
+to sharding ``head_dim`` (whisper: 20 heads on a 16-way axis; qwen2.5: 2 KV
+heads) so tensor parallelism survives awkward head counts.  hymba's 25 query
+heads resolve to head_dim sharding the same way.
+
+Shape-kind differences:
+  * train/prefill: batch over (pod, data); params FSDP over data x TP model.
+  * decode:        batch over (pod, data); KV cache batch-sharded.
+  * long-context decode (batch=1): KV *sequence* shards over data
+    (context parallelism); batch replicated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Candidate = Union[str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    name: str
+    rules: Dict[str, List[Candidate]]
+
+    def candidates(self, logical: str) -> List[Candidate]:
+        return self.rules.get(logical, [])
+
+
+def _base_rules(extra: Dict[str, List[Candidate]]) -> Dict[str, List[Candidate]]:
+    rules: Dict[str, List[Candidate]] = {
+        # parameters
+        "layers": [],
+        "embed": ["data"],  # FSDP shard
+        "ffn": ["model"],
+        "vocab": ["model"],
+        "q_heads": ["model"],
+        "kv_heads": ["model"],
+        "head_dim": ["model"],  # fallback TP when heads don't divide
+        "experts": ["model"],  # expert parallelism
+        "experts_r": [],
+        "ssm_proj": ["model"],
+        "ssm_inner": ["model"],
+        "ssm_conv_dim": ["model"],
+        "ssm_heads": ["model"],
+        "ssm_head_dim": ["model"],
+        "ssm_state": [],
+        "conv": [],
+        # activations
+        "batch": [("pod", "data"), "data"],
+        "seq": [],
+        "kv_seq": [],
+        #: KV-cache-specific axes (decoupled from the weight head axes so
+        #: decode can choose a cache layout independently of weight TP)
+        "cache_heads": ["model"],
+        "cache_dim": ["model"],
+        "embed_act": [],  # residual-stream feature dim: replicated (TP acts on heads/ffn)
+        #: MoE dispatch buffer capacity dim: sharded over the batch axes so
+        #: the expert einsums are local (E over model x C over data) — the
+        #: alternative (replicated C) makes GSPMD partial-sum the FSDP
+        #: embed dim into a [E,C,F] all-reduce (tens of TB/step on dbrx).
+        "moe_cap": [("pod", "data"), "data"],
+        "gathered": [],  # explicit "replicate now" (forces a weight AG)
+        "data_shards": [("pod", "data"), "data"],  # shard-major MoE dispatch
+        "moe_tok": [],
+        "moe_cap_l": [],
+    }
+    rules.update(extra)
+    return rules
+
+
+TRAIN_RULES = ShardingRules("train", _base_rules({}))
+#: Decode: shard the KV cache along *sequence* over the model axis
+#: (flash-decode partial-softmax combine: per-layer collectives shrink to
+#: [B,H,1] stats + [B,1,H,Dh] partial outputs instead of cache-sized
+#: all-gathers).  Cache head/dim axes replicate.
+DECODE_RULES = ShardingRules(
+    "decode",
+    _base_rules({
+        "kv_seq": ["model"],
+        "cache_heads": [],
+        "cache_dim": [],
+        #: no FSDP dim on weights at decode time: an embed-sharded weight
+        #: would be all-gathered every token (pure TP instead; params/16
+        #: fit HBM comfortably next to the KV shard).
+        "embed": [],
+    }),
+)
+#: batch=1 long-context decode: context-parallel KV over (pod, data) AND
+#: model — 500k tokens spread over every chip; batch replicated.
+LONG_CONTEXT_RULES = ShardingRules(
+    "long_context",
+    _base_rules({
+        "batch": [],
+        "kv_seq": [("pod", "data", "model"), ("data", "model"), "data"],
+        "cache_heads": [],
+        "cache_dim": [],
+        "embed": ["data"],  # batch=1: data axis is otherwise idle; FSDP free
+    }),
+)
+
+
+def rules_for_shape(kind: str, global_batch: int) -> ShardingRules:
+    if kind == "decode" and global_batch == 1:
+        return LONG_CONTEXT_RULES
+    if kind in ("decode",):
+        return DECODE_RULES
+    return TRAIN_RULES
+
+
+def _axis_size(mesh: Mesh, cand: Candidate) -> Optional[int]:
+    names = (cand,) if isinstance(cand, str) else cand
+    size = 1
+    for n in names:
+        if n not in mesh.shape:
+            return None
+        size *= mesh.shape[n]
+    return size
+
+
+def partition_spec_for(
+    logical_axes: Sequence[str],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: ShardingRules,
+) -> PartitionSpec:
+    used: set = set()
+    out: List[Any] = []
+    for dim, logical in zip(shape, logical_axes):
+        assigned = None
+        for cand in rules.candidates(logical):
+            names = (cand,) if isinstance(cand, str) else tuple(cand)
+            size = _axis_size(mesh, cand)
+            if size is None or size <= 1:
+                continue
+            if any(n in used for n in names):
+                continue
+            if dim % size != 0:
+                continue
+            assigned = names if len(names) > 1 else names[0]
+            used.update(names)
+            break
+        out.append(assigned)
+    # Trim trailing Nones (canonical PartitionSpec form).
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def tree_shardings(
+    mesh: Mesh,
+    specs_tree: Any,  # tree of ShapeDtypeStruct (or arrays)
+    axes_tree: Any,  # matching tree of logical-axis tuples
+    rules: ShardingRules,
+) -> Any:
+    """NamedShardings for a pytree given its logical axes."""
+
+    def one(spec, axes):
+        if axes is None:
+            return NamedSharding(mesh, PartitionSpec())
+        pspec = partition_spec_for(tuple(axes), tuple(spec.shape), mesh, rules)
+        return NamedSharding(mesh, pspec)
+
+    return jax.tree.map(
+        one, specs_tree, axes_tree,
+        is_leaf=lambda x: x is None or (
+            isinstance(x, tuple) and all(isinstance(a, str) for a in x)
+        ),
+    )
+
+
+def input_sharding_axes(kind: str) -> Dict[str, Any]:
+    """Logical axes for step-function inputs by shape kind."""
+    if kind == "train":
+        return {
+            "tokens": ("batch", "seq"),
+            "labels": ("batch", "seq"),
+            "frontend_embeds": ("batch", "seq", "embed_act"),
+        }
+    if kind == "prefill":
+        return {
+            "tokens": ("batch", "seq"),
+            "frontend_embeds": ("batch", "seq", "embed_act"),
+        }
+    if kind == "decode":
+        return {"token": ("batch",)}
+    raise ValueError(kind)
+
+
+def bytes_per_device(tree: Any, shardings: Any) -> int:
+    """Static parameter-byte footprint per device for a specs tree."""
+    total = 0
+    for spec, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding))):
+        n = int(np.prod(spec.shape)) * spec.dtype.itemsize
+        total += n // sh.num_devices if sh.is_fully_addressable else n
+    return total

@@ -1,0 +1,149 @@
+"""Flash-decode GQA Pallas kernel (one new token vs a long KV cache).
+
+Layout (kernel-native, what the serving engine stores):
+  q:       [B, Hkv, G, Dh]   (G = Hq // Hkv query heads per KV head)
+  k, v:    [B, Hkv, S, Dh]
+  lengths: [B] int32         (#valid cache tokens; token at index
+                              ``lengths-1`` is the newest)
+  out:     [B, Hkv, G, Dh]
+
+Grid: (B, Hkv, S // block_s) — the KV-block dimension is last (sequential on
+TPU), so the online-softmax scratch (m, l, acc) carries across KV blocks of
+one (batch, kv-head) before the grid moves on.  Each step streams one
+[block_s, Dh] K tile and V tile HBM->VMEM and issues two MXU contractions:
+[G, Dh] x [Dh, block_s] and [G, block_s] x [block_s, Dh].
+
+VMEM working set per step: 2 x block_s x Dh (KV tiles) + G x (block_s + 2Dh)
+scratch — e.g. block_s=512, Dh=128, G=8: ~300 KB, comfortably inside the
+~16 MB VMEM with room for double-buffered prefetch of the next tile.
+block_s and Dh are kept at multiples of 128 where the config allows (MXU
+lane alignment); G is zero-padded to the sublane multiple by ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _decode_attn_kernel(
+    lengths_ref,  # scalar prefetch: [B] int32
+    q_ref,  # [1, 1, G, Dh]
+    k_ref,  # [1, 1, block_s, Dh]
+    v_ref,  # [1, 1, block_s, Dh]
+    o_ref,  # [1, 1, G, Dh]
+    m_scr,  # [G, 1] f32
+    l_scr,  # [G, 1] f32
+    acc_scr,  # [G, Dh] f32
+    *,
+    block_s: int,
+    scale: float,
+    window: int,
+    softcap: Optional[float],
+):
+    b = pl.program_id(0)
+    sb = pl.program_id(2)
+    n_sb = pl.num_programs(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [G, Dh]
+    k = k_ref[0, 0].astype(jnp.float32)  # [S_blk, Dh]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q * scale, k,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [G, S_blk]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    length = lengths_ref[b]
+    pos = sb * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+    valid = (pos < length) & (length - 1 - pos < window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]  # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)  # [G, S_blk]
+    alpha = jnp.exp(m_prev - m_new)  # [G, 1]
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(sb == n_sb - 1)
+    def _emit():
+        denom = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_s", "window", "softcap", "scale", "interpret"),
+)
+def decode_attention_kernel(
+    q: jax.Array,  # [B, Hkv, G, Dh]
+    k: jax.Array,  # [B, Hkv, S, Dh]
+    v: jax.Array,  # [B, Hkv, S, Dh]
+    lengths: jax.Array,  # [B] int32
+    *,
+    block_s: int = 512,
+    window: int = 1 << 30,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hkv, g, dh = q.shape
+    s = k.shape[2]
+    assert s % block_s == 0, (s, block_s)
+    if scale is None:
+        scale = dh**-0.5
+
+    kernel = functools.partial(
+        _decode_attn_kernel,
+        block_s=block_s,
+        scale=scale,
+        window=window,
+        softcap=softcap,
+    )
+    grid = (b, hkv, s // block_s)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, dh), lambda b_, h_, s_, *_refs: (b_, h_, 0, 0)),
+                pl.BlockSpec(
+                    (1, 1, block_s, dh), lambda b_, h_, s_, *_refs: (b_, h_, s_, 0)
+                ),
+                pl.BlockSpec(
+                    (1, 1, block_s, dh), lambda b_, h_, s_, *_refs: (b_, h_, s_, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, g, dh), lambda b_, h_, s_, *_refs: (b_, h_, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k, v)

@@ -1,0 +1,87 @@
+"""Jit-ready wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode — the
+kernel body executes in Python, validating the exact TPU code path; on TPU
+they compile to Mosaic.  ``auto`` picks per-backend.
+
+The wrappers also adapt model-layout tensors ([B, S, H, Dh] caches,
+[B, S, H, P] SSD inputs) to the kernel-native layouts and pad GQA group
+sizes up to the sublane multiple.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.ssd_scan import ssd_scan_kernel
+
+
+def _use_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def decode_attention(
+    q: jax.Array,  # [B, Hq, Dh] (one new token per sequence)
+    k: jax.Array,  # [B, S, Hkv, Dh] (model layout) — newest at lengths-1
+    v: jax.Array,  # [B, S, Hkv, Dh]
+    lengths: jax.Array,  # [B] int32 valid token counts
+    *,
+    window: int = 1 << 30,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_s: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash-decode GQA.  Returns [B, Hq, Dh]."""
+    b, hq, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    assert g * hkv == hq
+    qg = q.reshape(b, hkv, g, dh)
+    kk = jnp.swapaxes(k, 1, 2)  # [B, Hkv, S, Dh]
+    vv = jnp.swapaxes(v, 1, 2)
+    # Pad G to the f32 sublane multiple (8) for MXU-aligned tiles.
+    g_pad = -(-g // 8) * 8
+    if g_pad != g:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
+    bs = min(block_s, s)
+    while s % bs != 0:
+        bs //= 2
+    out = decode_attention_kernel(
+        qg, kk, vv, lengths.astype(jnp.int32),
+        block_s=max(bs, 1), window=window, softcap=softcap, scale=scale,
+        interpret=_use_interpret(interpret),
+    )
+    return out[:, :, :g, :].reshape(b, hq, dh)
+
+
+def ssd_scan(
+    x: jax.Array,  # [B, S, H, P] (model layout)
+    dt: jax.Array,  # [B, S, H] f32 (post-softplus)
+    bmat: jax.Array,  # [B, S, N] (G=1)
+    cmat: jax.Array,  # [B, S, N]
+    a: jax.Array,  # [H] f32 negative
+    *,
+    chunk: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Chunked SSD scan.  Returns y [B, S, H, P]."""
+    b, s, h, p = x.shape
+    xk = jnp.moveaxis(x, 2, 1)  # [B, H, S, P]
+    dtk = jnp.moveaxis(dt, 2, 1)  # [B, H, S]
+    bc = jnp.stack([bmat, cmat], axis=2)  # [B, S, 2, N]
+    ck = min(chunk, s)
+    while s % ck != 0:
+        ck //= 2
+    y = ssd_scan_kernel(
+        xk, dtk.astype(jnp.float32), bc, a.astype(jnp.float32),
+        chunk=max(ck, 1), interpret=_use_interpret(interpret),
+    )
+    return jnp.moveaxis(y, 1, 2)  # [B, S, H, P]

@@ -1,0 +1,118 @@
+"""Mamba2 SSD chunked-scan Pallas kernel.
+
+Layout (kernel-native):
+  x:   [B, H, S, P]    (P = SSM head dim)
+  dt:  [B, H, S]       (post-softplus, f32)
+  bc:  [B, S, 2, N]    (B-matrix at [:, :, 0], C-matrix at [:, :, 1]; G=1)
+  a:   [1, H]          (negative decay rates, f32)
+  out: [B, H, S, P]
+
+Grid: (B, H, S // chunk) with the chunk dimension last (sequential): the
+[P, N] recurrent state lives in VMEM scratch and carries across chunks of
+one (batch, head) pair.  Per chunk the kernel runs the quadratic intra-chunk
+contraction on the MXU ([Q, N] x [N, Q], [Q, Q] x [Q, P]) plus the state
+in/out projections — identical math to the jnp reference
+(:func:`repro.models.ssm.ssd_chunked`), which serves as its oracle.
+
+VMEM working set per step (Q=128, P=64, N=128): x 32 KB + bc 128 KB +
+decay [Q, Q] 64 KB + state 32 KB — well under VMEM with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # [1, 1, Q, P]
+    dt_ref,  # [1, 1, Q]
+    bc_ref,  # [1, Q, 2, N]
+    a_ref,  # [1, 1]
+    o_ref,  # [1, 1, Q, P]
+    h_scr,  # [P, N] f32
+    *,
+    chunk: int,
+):
+    cb = pl.program_id(2)
+
+    @pl.when(cb == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # [Q, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)  # [Q]
+    bmat = bc_ref[0, :, 0, :].astype(jnp.float32)  # [Q, N]
+    cmat = bc_ref[0, :, 1, :].astype(jnp.float32)  # [Q, N]
+    a = a_ref[0, 0]  # scalar (negative)
+
+    da = dt * a  # [Q]
+    cum = jnp.cumsum(da)  # [Q]
+
+    # Intra-chunk quadratic term.
+    rel = cum[:, None] - cum[None, :]  # [Q, Q]
+    q_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    k_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(k_idx <= q_idx, jnp.exp(rel), 0.0)  # causal [Q, Q]
+    scores = jax.lax.dot_general(
+        cmat, bmat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [Q, Q]
+    w = scores * decay
+    dx = dt[:, None] * x  # [Q, P]
+    y = jax.lax.dot_general(
+        w, dx, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, P]
+
+    # Inter-chunk contribution from the carried state: exp(cum) * C @ h^T.
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cmat, h_scr[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [Q, N] x [P, N]^T -> [Q, P]
+
+    # State update: h = exp(sum(da)) * h + sum_q tail_q dt_q x_q B_q^T.
+    tail = jnp.exp(cum[-1] - cum)  # [Q]
+    wx = (tail * dt)[:, None] * x  # [Q, P]
+    s_chunk = jax.lax.dot_general(
+        wx, bmat, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [P, N]
+    h_scr[...] = jnp.exp(jnp.sum(da)) * h_scr[...] + s_chunk
+
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_kernel(
+    x: jax.Array,  # [B, H, S, P]
+    dt: jax.Array,  # [B, H, S] f32
+    bc: jax.Array,  # [B, S, 2, N]
+    a: jax.Array,  # [H] f32 (negative)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, s, p = x.shape
+    n = bc.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    grid = (b, h, s // chunk)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b_, h_, c_: (b_, h_, c_)),
+            pl.BlockSpec((1, chunk, 2, n), lambda b_, h_, c_: (b_, c_, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, c_: (0, h_)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0)
+        ),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+        interpret=interpret,
+    )(x, dt, bc, a.reshape(1, h))

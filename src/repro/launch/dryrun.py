@@ -1,0 +1,369 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# NOTE: the two lines above MUST precede every other import (jax locks the
+# device count on first backend init), which is why the module docstring
+# lives in this comment block and `from __future__` is not used here.
+#
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+#
+# For each cell this produces, with ZERO device allocation (ShapeDtypeStruct
+# inputs only):
+#   * proof the sharding config is coherent (compile succeeds on the
+#     single-pod 16x16 and multi-pod 2x16x16 meshes),
+#   * compiled.memory_analysis()  -- per-device bytes (fits / doesn't),
+#   * compiled.cost_analysis()    -- per-device HLO FLOPs & bytes,
+#   * per-collective wire bytes parsed from the partitioned HLO text,
+# which repro.roofline turns into the three roofline terms.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --mesh both --out dryrun.json
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import ARCH_IDS, SHAPES, ArchSpec, Shape, get_arch, input_specs
+from repro.distributed.autosharding import logical_sharding_context
+from repro.distributed.sharding import (
+    partition_spec_for,
+    rules_for_shape,
+    tree_shardings,
+    TRAIN_RULES,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import TransformerLM
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import warmup_cosine
+from repro.train.step import (
+    make_train_step,
+    train_state_axes,
+    train_state_shapes,
+)
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\("
+)
+_OP_LINE_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b"
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+#: Ring-algorithm wire multipliers (bytes crossing links per chip, relative
+#: to the per-chip buffer size in the partitioned HLO).
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,  # reduce-scatter + all-gather phases
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum per-chip result-buffer bytes of every collective in partitioned
+    HLO, weighted by ring wire factors.  Shapes in post-SPMD HLO are already
+    per-device."""
+    out: Dict[str, float] = {k: 0.0 for k in _WIRE_FACTOR}
+    for m in _OP_LINE_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        size = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    size *= int(d)
+        out[op] += size * nbytes * _WIRE_FACTOR[op]
+    return out
+
+
+def _replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def _sh(mesh, axes, shape, rules) -> NamedSharding:
+    return NamedSharding(mesh, partition_spec_for(axes, shape, mesh, rules))
+
+
+def _decode_state_shardings(model: TransformerLM, state_specs, mesh, rules):
+    ax = model.decode_state_axes()
+    return jax.tree.map(
+        lambda spec, a: _sh(mesh, tuple(a), tuple(spec.shape), rules),
+        state_specs,
+        ax,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(i, str) for i in x
+        ),
+    )
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    seconds_lower: float = 0.0
+    seconds_compile: float = 0.0
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    bytes_min_per_device: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    memory: Dict[str, float] = dataclasses.field(default_factory=dict)
+    error: str = ""
+    notes: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _maybe_fe_spec(cfg, shape: Shape, b: int):
+    if cfg.frontend == "vision":
+        return jax.ShapeDtypeStruct((b, cfg.frontend_seq, cfg.d_model),
+                                    jnp.float32)
+    if cfg.frontend == "audio":
+        return jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                    jnp.float32)
+    return None
+
+
+def build_cell(
+    spec: ArchSpec, shape: Shape, mesh, *, microbatches: int = 8,
+    remat: str = "full",
+):
+    """Returns (jitted_fn, args_specs) ready to .lower(*args_specs)."""
+    cfg = spec.config
+    b, s = shape.global_batch, shape.seq_len
+    rules = rules_for_shape(shape.kind, b)
+
+    if shape.kind == "train":
+        model = TransformerLM(cfg, remat=remat)
+        # fp32 master weights unless the model is too large for the pod's
+        # HBM at 12 bytes/param of optimizer+master state.
+        n_dev = mesh.devices.size
+        master = cfg.param_count() * 12 / n_dev < 6e9
+        opt = AdamW(master=master)
+        sched = lambda step: warmup_cosine(  # noqa: E731
+            step, peak_lr=3e-4, warmup_steps=100, total_steps=10_000
+        )
+        mb = microbatches if b % microbatches == 0 else 1
+        step_fn = make_train_step(model, opt, sched, microbatches=mb)
+        ts_specs = train_state_shapes(model, opt)
+        ts_axes = train_state_axes(model, opt)
+        ts_sh = tree_shardings(mesh, ts_specs, ts_axes, rules)
+        tok_spec = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        lab_spec = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        tok_sh = _sh(mesh, ("batch", "seq"), (b, s), rules)
+        fe_spec = _maybe_fe_spec(cfg, shape, b)
+        metrics_sh = {k: _replicated(mesh)
+                      for k in ("loss", "aux_loss", "grad_norm", "lr")}
+        in_sh = (ts_sh, tok_sh, tok_sh) + (
+            (_sh(mesh, ("batch", "seq", "embed_act"), fe_spec.shape, rules),)
+            if fe_spec is not None else ()
+        )
+        args = (ts_specs, tok_spec, lab_spec) + (
+            (fe_spec,) if fe_spec is not None else ()
+        )
+        fn = jax.jit(
+            step_fn,
+            in_shardings=in_sh,
+            out_shardings=(ts_sh, metrics_sh),
+            donate_argnums=(0,),
+        )
+        return fn, args, f"master={master} microbatches={mb} remat={remat}"
+
+    if shape.kind == "prefill":
+        model = TransformerLM(cfg)
+        p_specs = model.param_specs()
+        p_axes = model.param_axes()
+        p_sh = tree_shardings(mesh, p_specs, p_axes, rules)
+        tok_spec = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        tok_sh = _sh(mesh, ("batch", "seq"), (b, s), rules)
+        fe_spec = _maybe_fe_spec(cfg, shape, b)
+
+        state_specs = jax.eval_shape(lambda: model.init_decode_state(b, s))
+        state_out_sh = _decode_state_shardings(model, state_specs, mesh, rules)
+        logits_sh = _sh(mesh, ("batch", "vocab"), (b, cfg.vocab), rules)
+
+        def step_fn(params, tokens, frontend_embeds=None):
+            state0 = model.init_decode_state(b, s)
+            return model.prefill(params, tokens, state0,
+                                 frontend_embeds=frontend_embeds)
+
+        in_sh = (p_sh, tok_sh) + (
+            (_sh(mesh, ("batch", "seq", "embed_act"), fe_spec.shape, rules),)
+            if fe_spec is not None else ()
+        )
+        args = (p_specs, tok_spec) + ((fe_spec,) if fe_spec is not None else ())
+        fn = jax.jit(
+            step_fn,
+            in_shardings=in_sh,
+            out_shardings=(logits_sh, state_out_sh),
+        )
+        return fn, args, ""
+
+    if shape.kind == "decode":
+        model = TransformerLM(cfg)
+        p_specs = model.param_specs()
+        p_axes = model.param_axes()
+        p_sh = tree_shardings(mesh, p_specs, p_axes, rules)
+        state_specs = jax.eval_shape(lambda: model.init_decode_state(b, s))
+        state_sh = _decode_state_shardings(model, state_specs, mesh, rules)
+        tok_spec = jax.ShapeDtypeStruct((b,), jnp.int32)
+        tok_sh = _sh(mesh, ("batch",), (b,), rules)
+        logits_sh = _sh(mesh, ("batch", "vocab"), (b, cfg.vocab), rules)
+
+        fn = jax.jit(
+            model.decode_step,
+            in_shardings=(p_sh, state_sh, tok_sh),
+            out_shardings=(logits_sh, state_sh),
+            donate_argnums=(1,),
+        )
+        return fn, (p_specs, state_specs, tok_spec), ""
+
+    raise ValueError(shape.kind)
+
+
+def run_cell(
+    arch_id: str,
+    shape_name: str,
+    mesh,
+    mesh_name: str,
+    *,
+    verbose: bool = True,
+    microbatches: int = 8,
+    remat: str = "full",
+    builder=build_cell,
+) -> CellResult:
+    spec = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    res = CellResult(arch=arch_id, shape=shape_name, mesh=mesh_name, ok=False)
+    if not spec.shape_applicable(shape_name):
+        res.error = "shape not applicable (see DESIGN.md §4)"
+        res.notes = "skipped"
+        return res
+    try:
+        rules = rules_for_shape(shape.kind, shape.global_batch)
+        with mesh, logical_sharding_context(mesh, rules):
+            fn, args, notes = builder(spec, shape, mesh,
+                                      microbatches=microbatches, remat=remat)
+            res.notes = notes
+            t0 = time.time()
+            lowered = fn.lower(*args)
+            res.seconds_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            res.seconds_compile = time.time() - t0
+            try:
+                mem = compiled.memory_analysis()
+                if mem is not None:
+                    for attr in (
+                        "temp_size_in_bytes",
+                        "argument_size_in_bytes",
+                        "output_size_in_bytes",
+                        "alias_size_in_bytes",
+                        "generated_code_size_in_bytes",
+                    ):
+                        v = getattr(mem, attr, None)
+                        if v is not None:
+                            res.memory[attr] = float(v)
+            except Exception as ex:  # backend may not implement it
+                res.memory["error"] = 0.0
+                res.notes += f" mem_analysis_unavailable({type(ex).__name__})"
+            try:
+                cost = compiled.cost_analysis()
+                if isinstance(cost, list):
+                    cost = cost[0]
+                if cost:
+                    # Raw XLA numbers (while bodies counted once) — kept for
+                    # reference; the roofline uses the trip-scaled parse.
+                    res.memory["xla_cost_flops"] = float(cost.get("flops", 0.0))
+                    res.memory["xla_cost_bytes"] = float(
+                        cost.get("bytes accessed", 0.0)
+                    )
+            except Exception as ex:
+                res.notes += f" cost_analysis_unavailable({type(ex).__name__})"
+            from repro.roofline.hlo_costs import parse_hlo_costs
+
+            hlo = parse_hlo_costs(compiled.as_text())
+            res.flops_per_device = hlo.flops
+            res.bytes_per_device = hlo.bytes
+            res.bytes_min_per_device = hlo.bytes_min
+            res.collective_bytes = hlo.collective_bytes
+            if hlo.notes:
+                res.notes += " " + "; ".join(hlo.notes[:3])
+            res.ok = True
+    except Exception as ex:
+        res.error = f"{type(ex).__name__}: {str(ex)[:500]}"
+        if verbose:
+            traceback.print_exc()
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--remat", default="full")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh
+    ]
+
+    results = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        for arch in archs:
+            for shape_name in shapes:
+                r = run_cell(arch, shape_name, mesh, mesh_name,
+                             microbatches=args.microbatches, remat=args.remat)
+                results.append(r)
+                status = "OK " if r.ok else ("SKIP" if r.notes == "skipped"
+                                             else "FAIL")
+                coll = sum(r.collective_bytes.values())
+                print(
+                    f"{status} {mesh_name} {arch:28s} {shape_name:12s} "
+                    f"lower={r.seconds_lower:6.1f}s compile="
+                    f"{r.seconds_compile:6.1f}s flops/dev={r.flops_per_device:.3e} "
+                    f"bytes/dev={r.bytes_per_device:.3e} coll/dev={coll:.3e} "
+                    f"{r.error[:120]}"
+                )
+                if r.ok and r.memory:
+                    print(f"     memory_analysis: {r.memory}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump([r.to_json() for r in results], f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

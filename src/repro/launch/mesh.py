@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state — required for the
+force-host-device-count trick in dryrun.py to work (device count locks on
+first backend init).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """The assignment's production mesh: one v5e pod = (data=16, model=16);
+    two pods add a leading 'pod' axis = (2, 16, 16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh(
+    *, data: Optional[int] = None, model: int = 1
+) -> jax.sharding.Mesh:
+    """A small mesh over whatever devices exist (tests / smoke runs)."""
+    n = jax.device_count()
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

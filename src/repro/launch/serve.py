@@ -1,0 +1,92 @@
+"""Serving driver: tiered co-located instances with MIKU request control.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama31-8b --smoke \\
+      --requests 24 --mode miku
+
+Modes: ``opt`` (each instance alone), ``racing`` (no control), ``miku``
+(dynamic control).  Mirrors the paper's §6 LLM case study on the TPU tier
+model (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_arch
+from repro.core.controller import MikuConfig, MikuController
+from repro.core.littles_law import EstimatorConfig
+from repro.models.transformer import TransformerLM
+from repro.serving.engine import (
+    EngineConfig,
+    Request,
+    ServingEngine,
+    TieredServingCluster,
+)
+
+
+def build_cluster(arch_id: str, *, smoke: bool, n_requests: int, mode: str,
+                  max_new: int = 24, stream_chunks: int = 64):
+    spec = get_arch(arch_id)
+    cfg = spec.smoke if smoke else spec.config
+    model = TransformerLM(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    def mk(name, placement, n):
+        e = ServingEngine(
+            EngineConfig(name=name, model=cfg, max_slots=4, max_len=96,
+                         placement=placement, stream_chunks=stream_chunks),
+            params,
+        )
+        for i in range(n):
+            e.submit(Request(rid=i, prompt=list(range(1, 9)),
+                             max_new_tokens=max_new))
+        return e
+
+    controller = None
+    if mode == "miku":
+        probe = mk("probe", "host", 0)
+        chunk_service = probe.param_bytes / stream_chunks / 16.0
+        controller = MikuController(
+            MikuConfig(levels=(1, 2, 4, 8)),
+            EstimatorConfig(t_fast=1.2e3,
+                            slow_read_threshold=8 * chunk_service,
+                            min_window_inserts=4, min_slow_inserts=1),
+        )
+    engines = [mk("hbm", "device", n_requests),
+               mk("host", "host", max(n_requests // 3, 1))]
+    return TieredServingCluster(engines, controller=controller,
+                                window_ns=3e4)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama31-8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--mode", choices=("opt", "racing", "miku"),
+                    default="miku")
+    args = ap.parse_args()
+    if args.mode == "opt":
+        for placement in ("device", "host"):
+            cl = build_cluster(args.arch, smoke=args.smoke,
+                               n_requests=args.requests, mode="racing")
+            cl.engines = [e for e in cl.engines
+                          if e.cfg.placement == placement]
+            res = cl.run()
+            for k, v in res.items():
+                print(f"[serve/opt] {k}: {v['tokens_per_s']:.0f} tok/s "
+                      f"({v['requests']:.0f} requests)")
+        return
+    cl = build_cluster(args.arch, smoke=args.smoke,
+                       n_requests=args.requests, mode=args.mode)
+    res = cl.run()
+    for k, v in res.items():
+        print(f"[serve/{args.mode}] {k}: {v['tokens_per_s']:.0f} tok/s "
+              f"({v['requests']:.0f} requests)")
+
+
+if __name__ == "__main__":
+    main()

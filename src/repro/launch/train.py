@@ -1,0 +1,189 @@
+"""Training driver: checkpoint/restart, preemption handling, straggler
+governor, elastic resume.
+
+Single-host usage (CPU smoke / examples):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \\
+      --steps 20 --ckpt-dir /tmp/ckpt --resume
+
+At scale the same driver runs under ``jax.distributed`` with the production
+mesh; the data loader shards by host, the checkpoint manager writes
+per-step manifests asynchronously, SIGTERM (preemption notice) triggers a
+final synchronous checkpoint, and ``--resume`` restores the latest manifest
+onto *whatever mesh is alive* (elastic: leaves are stored unsharded and
+re-device_put with current-mesh shardings).
+"""
+
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import get_arch
+from repro.core.controller import StragglerGovernor
+from repro.data.pipeline import HostDataLoader, SyntheticTokenDataset
+from repro.distributed.autosharding import logical_sharding_context
+from repro.distributed.sharding import TRAIN_RULES, tree_shardings
+from repro.launch.mesh import make_host_mesh
+from repro.models.transformer import TransformerLM
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import warmup_cosine
+from repro.train.step import (
+    TrainState,
+    init_train_state,
+    make_train_step,
+    train_state_axes,
+)
+
+
+class Trainer:
+    def __init__(
+        self,
+        arch_id: str,
+        *,
+        smoke: bool = False,
+        global_batch: int = 8,
+        seq_len: int = 128,
+        microbatches: int = 1,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 10,
+        grad_compression: bool = False,
+        mesh=None,
+        remat: str = "none",
+        peak_lr: float = 3e-4,
+        total_steps: int = 1000,
+        config_override=None,
+    ):
+        spec = get_arch(arch_id)
+        self.cfg = config_override or (spec.smoke if smoke else spec.config)
+        self.model = TransformerLM(self.cfg, remat=remat)
+        self.opt = AdamW()
+        self.mesh = mesh or make_host_mesh()
+        self.rules = TRAIN_RULES
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        sched = lambda s: warmup_cosine(  # noqa: E731
+            s, peak_lr=peak_lr, warmup_steps=min(100, total_steps // 10 + 1),
+            total_steps=total_steps,
+        )
+        self.step_fn = jax.jit(
+            make_train_step(self.model, self.opt, sched,
+                            microbatches=microbatches,
+                            grad_compression=grad_compression),
+            donate_argnums=(0,),
+        )
+        self.loader = HostDataLoader(
+            SyntheticTokenDataset(vocab=self.cfg.vocab),
+            global_batch=global_batch,
+            seq_len=seq_len,
+        )
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        self.governor = StragglerGovernor(n_hosts=1)
+        self.grad_compression = grad_compression
+        self._preempted = False
+
+    def _state_shardings(self, state: TrainState):
+        axes = train_state_axes(self.model, self.opt,
+                                grad_compression=self.grad_compression)
+        return tree_shardings(self.mesh, state, axes, self.rules)
+
+    def init_or_resume(self, resume: bool) -> TrainState:
+        with self.mesh:
+            state = init_train_state(self.model, self.opt,
+                                     jax.random.PRNGKey(0),
+                                     grad_compression=self.grad_compression)
+        if resume and self.ckpt is not None:
+            step, restored, extra = self.ckpt.restore_latest(
+                state, shardings=self._state_shardings(state)
+            )
+            if step is not None:
+                print(f"[train] resumed from step {step} "
+                      f"(elastic onto {self.mesh.devices.shape})")
+                if extra and "loader" in extra:
+                    self.loader.load_state_dict(extra["loader"])
+                return restored
+        return state
+
+    def install_preemption_handler(self) -> None:
+        def handler(signum, frame):
+            del signum, frame
+            print("[train] SIGTERM: checkpoint-and-exit requested")
+            self._preempted = True
+
+        signal.signal(signal.SIGTERM, handler)
+
+    def train(self, steps: int, *, resume: bool = False,
+              log_every: int = 1) -> TrainState:
+        self.install_preemption_handler()
+        state = self.init_or_resume(resume)
+        start_step = int(jax.device_get(state.opt.step))
+        with self.mesh, logical_sharding_context(self.mesh, self.rules):
+            for step in range(start_step, steps):
+                t0 = time.time()
+                tokens, labels = next(self.loader)
+                state, metrics = self.step_fn(
+                    state, jnp.asarray(tokens), jnp.asarray(labels)
+                )
+                loss = float(jax.device_get(metrics["loss"]))
+                dt = time.time() - t0
+                # Straggler governor: per-host step service times (single
+                # host here; the same estimator runs fleet-wide at scale).
+                self.governor.window([dt])
+                if step % log_every == 0:
+                    print(f"[train] step={step} loss={loss:.4f} "
+                          f"({dt*1e3:.0f} ms)")
+                if np.isnan(loss):
+                    raise FloatingPointError(f"NaN loss at step {step}")
+                if self.ckpt and (
+                    (step + 1) % self.ckpt_every == 0 or self._preempted
+                ):
+                    self.ckpt.save(
+                        step + 1, state,
+                        extra={"loader": self.loader.state_dict()},
+                    )
+                if self._preempted:
+                    print("[train] preemption checkpoint written; exiting")
+                    self.ckpt and self.ckpt.wait()
+                    sys.exit(0)
+        if self.ckpt:
+            self.ckpt.save(steps, state,
+                           extra={"loader": self.loader.state_dict()})
+            self.ckpt.wait()
+        return state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--remat", default="none")
+    args = ap.parse_args()
+    trainer = Trainer(
+        args.arch, smoke=args.smoke, global_batch=args.global_batch,
+        seq_len=args.seq_len, microbatches=args.microbatches,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        grad_compression=args.grad_compression, remat=args.remat,
+        total_steps=args.steps,
+    )
+    trainer.train(args.steps, resume=args.resume)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""memsim — the paper's micro-benchmark suite (bw-test / lat-test / lat-share)
+run against the simulated tiered-memory testbed (:mod:`repro.core.des`).
+
+This package is the characterization half of the reproduction: every figure
+in the paper's §2-§6 has a corresponding runner here, producing the numbers
+recorded in EXPERIMENTS.md.
+"""
+
+from repro.memsim.calibration import calibrate_estimator, default_miku
+from repro.memsim.runner import (
+    bandwidth_matrix,
+    corun_matrix,
+    latency_matrix,
+    llc_partition_sweep,
+    miku_comparison,
+    sync_interference,
+)
+
+__all__ = [
+    "calibrate_estimator",
+    "default_miku",
+    "bandwidth_matrix",
+    "corun_matrix",
+    "latency_matrix",
+    "llc_partition_sweep",
+    "miku_comparison",
+    "sync_interference",
+]

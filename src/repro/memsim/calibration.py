@@ -1,0 +1,86 @@
+"""Offline calibration of MIKU's estimator from device models (paper §5.2).
+
+The paper measures two constants offline with micro-benchmarks:
+
+  * ``T_ddr`` — the fast tier's ToR residency, treated as constant ("in all
+    experiments, DDR memory never caused a backlog in the ToR").
+  * the slow-tier *read* latency threshold beyond which device-side queueing
+    grows exponentially and throughput declines; the write threshold is ~2x
+    the read threshold (footnote 2).
+
+We derive both from the :class:`~repro.core.device_model.DeviceModel`
+parameters, in the same units the simulator measures residencies in (one
+macro-request = ``granularity`` cachelines serviced back-to-back):
+
+  * ``t_fast``  = fast pipeline + g * read_service * (1 + q_f) — the service
+    time plus a modest queueing markup (the fast tier runs loaded but never
+    backlogged).
+  * ``threshold`` = slow pipeline + g * read_service * (1 + q_s) — allowing
+    ``q_s`` service-times of device queueing before calling it a backlog.
+    ``q_s`` is the knob trading slow-tier utilization against fast-tier
+    protection; the paper's "maximum allowable concurrency without causing a
+    backlog" corresponds to the queue depth that just keeps the device's
+    slots covered through the pipeline latency.
+"""
+
+from __future__ import annotations
+
+from repro.core.controller import MikuConfig, MikuController
+from repro.core.device_model import PlatformModel
+from repro.core.littles_law import EstimatorConfig, OpClass
+
+
+def calibrate_estimator(
+    platform: PlatformModel,
+    granularity: int = 4,
+    *,
+    slow_queue_markup: float = 4.0,
+    ewma: float = 0.5,
+) -> EstimatorConfig:
+    g = granularity
+    ddr, cxl = platform.ddr, platform.cxl
+    # Loaded fast-tier residency: with the shared pool (ToR) full of fast
+    # requests, Little gives residency = pool_size / service_rate.  This is
+    # what the paper's offline saturating bw-test measures.  (Independent of
+    # macro-request granularity: pool and rate scale together.)
+    pool = platform.tor_entries / g  # macro entries
+    mu_fast = ddr.total_slots / (g * ddr.read_service_ns)  # macro/ns
+    t_fast = max(pool / mu_fast, ddr.pipeline_ns + g * ddr.read_service_ns)
+    # Per-class scaling of the fast residency (stores are RMW: they occupy
+    # the queue for read+write service).
+    rs, ws = ddr.read_service_ns, ddr.write_service_ns
+    per_instr = {
+        OpClass.LOAD: rs,
+        OpClass.STORE: rs + ws,
+        OpClass.NT_STORE: ws,
+    }
+    class_scale = {c: s / rs for c, s in per_instr.items()}
+    # Backlog-free queue depth: enough in-flight to cover the pipeline (the
+    # device stays saturated) but no runaway device-side queue.  The pipeline
+    # coverage ratio pipeline/(g*service) is the natural floor; add the
+    # configured markup on top.
+    pipeline_cover = cxl.pipeline_ns / max(g * cxl.read_service_ns, 1e-9)
+    depth = max(slow_queue_markup, pipeline_cover)
+    threshold = cxl.pipeline_ns + g * cxl.read_service_ns * (1.0 + depth)
+    return EstimatorConfig(
+        t_fast=t_fast,
+        slow_read_threshold=threshold,
+        write_threshold_scale=2.0,
+        ewma=ewma,
+        t_fast_class_scale=class_scale,
+    )
+
+
+def default_miku(
+    platform: PlatformModel,
+    granularity: int = 4,
+    **est_overrides,
+) -> MikuController:
+    """A MIKU controller calibrated for ``platform`` (paper defaults:
+    concurrency ladder 1/2/4/8/16, class caps 8/4/1 for load/store/nt-store)."""
+    est = calibrate_estimator(platform, granularity, **est_overrides)
+    cfg = MikuConfig(
+        levels=(1, 2, 4, 8, 16),
+        class_caps={OpClass.LOAD: 8, OpClass.STORE: 4, OpClass.NT_STORE: 1},
+    )
+    return MikuController(cfg, est)

@@ -1,0 +1,379 @@
+"""Figure-level experiment runners (one per paper table/figure).
+
+Every function returns plain dict/list results; :mod:`benchmarks` formats
+them as CSV.  All bandwidths are GB/s, latencies ns, times simulator-ns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.controller import MikuController
+from repro.core.des import SimResult, TieredMemorySim, WorkloadSpec
+from repro.core.device_model import PlatformModel, platform_a
+from repro.core.littles_law import OpClass
+from repro.memsim.calibration import default_miku
+from repro.memsim.workloads import alternating_bw_pair, bw_test, lat_share, lat_test
+
+_BW_SIM_NS = 120_000.0
+_CORUN_SIM_NS = 300_000.0
+
+
+def _run(
+    platform: PlatformModel,
+    workloads: List[WorkloadSpec],
+    sim_ns: float,
+    *,
+    controller: Optional[MikuController] = None,
+    seed: int = 0,
+    granularity: int = 4,
+    window_ns: float = 10_000.0,
+) -> SimResult:
+    sim = TieredMemorySim(
+        platform,
+        workloads,
+        seed=seed,
+        granularity=granularity,
+        controller=controller,
+        window_ns=window_ns,
+    )
+    return sim.run(sim_ns)
+
+
+# -- Fig. 3: single-threaded and peak bandwidth, DDR vs CXL -----------------
+
+
+def bandwidth_matrix(
+    platform: PlatformModel, threads: Tuple[int, ...] = (1, 16)
+) -> List[dict]:
+    rows = []
+    for op in OpClass:
+        for n in threads:
+            for tier in ("ddr", "cxl"):
+                wl = bw_test(tier, op, n)
+                res = _run(platform, [wl], _BW_SIM_NS)
+                rows.append(
+                    {
+                        "op": op.value,
+                        "tier": tier,
+                        "threads": n,
+                        "bandwidth_gbps": res.bandwidth(wl.name),
+                        "peak_model_gbps": platform.device_for(
+                            tier
+                        ).peak_bandwidth_gbps(op),
+                    }
+                )
+    return rows
+
+
+# -- Fig. 4: average and tail latency ----------------------------------------
+
+
+def latency_matrix(
+    platform: PlatformModel, threads: Tuple[int, ...] = (1, 2, 4, 8, 16)
+) -> List[dict]:
+    rows = []
+    for tier in ("ddr", "cxl"):
+        for n in threads:
+            wl = lat_test(tier, OpClass.LOAD, n)
+            res = _run(platform, [wl], 400_000.0, granularity=1)
+            st = res.stats[wl.name]
+            rows.append(
+                {
+                    "tier": tier,
+                    "threads": n,
+                    "avg_ns": st.mean_latency_ns(),
+                    "p50_ns": st.percentile_ns(0.50),
+                    "p99_ns": st.percentile_ns(0.99),
+                }
+            )
+    return rows
+
+
+# -- Fig. 2: tiered memory management schemes --------------------------------
+
+
+def tiering_schemes(platform: PlatformModel, op: OpClass) -> Dict[str, float]:
+    """Aggregate bandwidth of two 16-thread copies under each scheme.
+
+    * upper   — one copy, WSS fully in DDR (max achievable).
+    * lower   — one copy, WSS fully in CXL (baseline).
+    * native  — copy A on DDR, copy B on CXL (application-directed).
+    * interleave — both copies page-interleaved at the tier bandwidth ratio.
+    * os_managed — interleaved placement plus migration tax: a background
+      kernel thread moving pages (load+store on both tiers), the paper's
+      "page migrations significantly degrade tiered memory performance".
+    """
+    out = {}
+    up = _run(platform, [bw_test("ddr", op, 16, name="a")], _BW_SIM_NS)
+    out["upper_ddr_only"] = up.bandwidth("a")
+    low = _run(platform, [bw_test("cxl", op, 16, name="a")], _BW_SIM_NS)
+    out["lower_cxl_only"] = low.bandwidth("a")
+
+    nat = _run(
+        platform,
+        [
+            bw_test("ddr", op, 16, name="a", miku_managed=False),
+            bw_test("cxl", op, 16, name="b"),
+        ],
+        _CORUN_SIM_NS,
+    )
+    out["native"] = nat.bandwidth("a") + nat.bandwidth("b")
+
+    frac = out["upper_ddr_only"] / max(
+        out["upper_ddr_only"] + out["lower_cxl_only"], 1e-9
+    )
+    inter = _run(
+        platform,
+        [
+            bw_test("ddr", op, 16, name="a", ddr_fraction=frac, miku_managed=False),
+            bw_test("cxl", op, 16, name="b", ddr_fraction=frac, miku_managed=False),
+        ],
+        _CORUN_SIM_NS,
+    )
+    out["interleave"] = inter.bandwidth("a") + inter.bandwidth("b")
+
+    migration = WorkloadSpec(
+        name="kmigrated",
+        op=OpClass.STORE,
+        tier="cxl",
+        n_cores=2,
+        mlp=64,
+        ddr_fraction=0.5,
+        miku_managed=False,
+    )
+    osm = _run(
+        platform,
+        [
+            bw_test("ddr", op, 16, name="a", ddr_fraction=frac, miku_managed=False),
+            bw_test("cxl", op, 16, name="b", ddr_fraction=frac, miku_managed=False),
+            migration,
+        ],
+        _CORUN_SIM_NS,
+    )
+    out["os_managed"] = osm.bandwidth("a") + osm.bandwidth("b")
+    out["ideal_combined"] = out["upper_ddr_only"] + out["lower_cxl_only"]
+    return out
+
+
+# -- Fig. 5 + 6: co-run collapse and ToR accounting ---------------------------
+
+
+def corun_matrix(
+    platform: PlatformModel, n_threads: int = 16
+) -> List[dict]:
+    rows = []
+    for op in OpClass:
+        a = bw_test("ddr", op, n_threads, name="ddr", miku_managed=False)
+        alone = _run(platform, [a], _BW_SIM_NS)
+        c = bw_test("cxl", op, n_threads, name="cxl")
+        cxl_alone = _run(platform, [c], _BW_SIM_NS)
+        both = _run(platform, [a, c], _CORUN_SIM_NS)
+        ddr_alone_bw = alone.bandwidth("ddr")
+        cxl_alone_bw = cxl_alone.bandwidth("cxl")
+        rows.append(
+            {
+                "op": op.value,
+                "ddr_alone_gbps": ddr_alone_bw,
+                "cxl_alone_gbps": cxl_alone_bw,
+                "ddr_corun_gbps": both.bandwidth("ddr"),
+                "cxl_corun_gbps": both.bandwidth("cxl"),
+                "ddr_loss_pct": 100.0 * (1 - both.bandwidth("ddr") / ddr_alone_bw),
+                # Fig. 6 quantities:
+                "tor_insert_rate_alone_per_ns": alone.tor_inserts / alone.sim_ns,
+                "tor_insert_rate_corun_per_ns": both.tor_inserts / both.sim_ns,
+                "tor_avg_latency_alone_ns": alone.tor_avg_latency_ns,
+                "tor_avg_latency_corun_ns": both.tor_avg_latency_ns,
+                "t_ddr_corun_ns": both.tier_counters["ddr"].mean_service_time,
+                "t_cxl_corun_ns": both.tier_counters["cxl"].mean_service_time,
+            }
+        )
+    return rows
+
+
+def tor_insert_bandwidth_correlation(platform: PlatformModel) -> float:
+    """Pearson correlation between ToR insertion rate and delivered bandwidth
+    across scenarios (paper: r = 0.998)."""
+    xs, ys = [], []
+    for op in OpClass:
+        for scenario in ("ddr", "cxl", "both"):
+            wls: List[WorkloadSpec] = []
+            if scenario in ("ddr", "both"):
+                wls.append(bw_test("ddr", op, 16, name="ddr", miku_managed=False))
+            if scenario in ("cxl", "both"):
+                wls.append(bw_test("cxl", op, 16, name="cxl"))
+            res = _run(platform, wls, _BW_SIM_NS)
+            xs.append(res.tor_inserts / res.sim_ns)
+            ys.append(sum(res.bandwidth(w.name) for w in wls))
+    n = len(xs)
+    mx, my = sum(xs) / n, sum(ys) / n
+    cov = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
+    vx = sum((x - mx) ** 2 for x in xs) ** 0.5
+    vy = sum((y - my) ** 2 for y in ys) ** 0.5
+    return cov / max(vx * vy, 1e-12)
+
+
+# -- Fig. 7: LLC partitioning (Intel CAT analogue) ----------------------------
+
+
+def llc_partition_sweep(
+    platform: PlatformModel,
+    wss_mb: float,
+    allocs: Tuple[float, ...] = (0.95, 0.75, 0.5, 0.25, 0.05),
+) -> List[dict]:
+    """Two store bw-tests with strong locality, DDR- vs CXL-backed; sweep the
+    DDR workload's LLC share (CAT).  ``free competition`` approximated by the
+    proportional 0.5 point for equal-WSS workloads."""
+    rows = []
+    cap = platform.llc_capacity_mb
+    for alloc in allocs:
+        ddr_alloc = alloc * cap
+        cxl_alloc = (1.0 - alloc) * cap
+        a = bw_test(
+            "ddr", OpClass.STORE, 16, name="ddr",
+            wss_mb=wss_mb, llc_alloc_mb=ddr_alloc, miku_managed=False,
+        )
+        b = bw_test(
+            "cxl", OpClass.STORE, 16, name="cxl",
+            wss_mb=wss_mb, llc_alloc_mb=cxl_alloc, miku_managed=False,
+        )
+        res = _run(platform, [a, b], _CORUN_SIM_NS)
+        rows.append(
+            {
+                "wss_mb": wss_mb,
+                "ddr_llc_share": alloc,
+                "ddr_gbps": res.bandwidth("ddr"),
+                "cxl_gbps": res.bandwidth("cxl"),
+                "total_gbps": res.bandwidth("ddr") + res.bandwidth("cxl"),
+            }
+        )
+    return rows
+
+
+# -- Fig. 8: inter-core synchronization ---------------------------------------
+
+
+def sync_interference(
+    platform: PlatformModel, bg_threads: Tuple[int, ...] = (0, 4, 8, 16)
+) -> List[dict]:
+    rows = []
+    for tier in ("ddr", "cxl"):
+        for n in bg_threads:
+            wls = [lat_share()]
+            if n > 0:
+                wls.append(
+                    bw_test(tier, OpClass.LOAD, n, name="bg", miku_managed=False)
+                )
+            res = _run(platform, wls, 200_000.0, granularity=1)
+            rows.append(
+                {
+                    "bg_tier": tier,
+                    "bg_threads": n,
+                    "cas_latency_ns": res.stats["lat-share"].mean_latency_ns(),
+                }
+            )
+    return rows
+
+
+# -- Fig. 9: service time vs concurrency --------------------------------------
+
+
+def service_time_curve(
+    platform: PlatformModel,
+    op: OpClass = OpClass.LOAD,
+    threads: Tuple[int, ...] = (1, 2, 4, 8, 16, 32),
+) -> List[dict]:
+    rows = []
+    for tier in ("ddr", "cxl"):
+        for n in threads:
+            wl = bw_test(tier, op, n)
+            res = _run(platform, [wl], _BW_SIM_NS)
+            rows.append(
+                {
+                    "tier": tier,
+                    "threads": n,
+                    "service_time_ns": res.tier_counters[tier].mean_service_time,
+                    "bandwidth_gbps": res.bandwidth(wl.name),
+                }
+            )
+    return rows
+
+
+# -- Fig. 10: MIKU vs DataRacing vs Opt ---------------------------------------
+
+
+@dataclasses.dataclass
+class MikuComparison:
+    op: str
+    opt_ddr: float
+    opt_cxl: float
+    racing_ddr: float
+    racing_cxl: float
+    miku_ddr: float
+    miku_cxl: float
+    miku_mba_ddr: float
+    miku_mba_cxl: float
+
+    @property
+    def miku_ddr_frac_of_opt(self) -> float:
+        return self.miku_ddr / max(self.opt_ddr, 1e-9)
+
+
+def miku_comparison(
+    platform: PlatformModel,
+    op: OpClass,
+    *,
+    n_threads: int = 16,
+    period_ns: float = 100_000.0,
+    cycles: int = 3,
+) -> MikuComparison:
+    """The paper's §6 micro-benchmark case study: two 16-thread groups
+    alternating DDR/CXL every period.  Opt = each side alone (no
+    interference); DataRacing = no control; MIKU = CPU-quota-style dynamic
+    control; MIKU-MBA = same controller driving the MBA-style token bucket
+    (identical mechanics in simulation — both regulate issue rate; noted in
+    DESIGN.md)."""
+    sim_ns = 2 * cycles * period_ns
+
+    opt_ddr = _run(
+        platform, [bw_test("ddr", op, n_threads, name="a")], _BW_SIM_NS
+    ).bandwidth("a")
+    opt_cxl = _run(
+        platform, [bw_test("cxl", op, n_threads, name="a")], _BW_SIM_NS
+    ).bandwidth("a")
+
+    def alternating_run(controller: Optional[MikuController]) -> Tuple[float, float]:
+        wls = alternating_bw_pair(op, n_threads, period_ns)
+        res = _run(platform, wls, sim_ns, controller=controller, window_ns=5_000.0)
+        # Each group spends half its time on each tier; attribute bandwidth
+        # by the tier actually served per phase using the per-tier counters.
+        total = res.sim_ns
+        g = 4  # granularity
+        ddr_bytes = (
+            res.tier_counters["ddr"].inserts
+            * platform.ddr.access_bytes
+            * g
+        )
+        cxl_bytes = (
+            res.tier_counters["cxl"].inserts
+            * platform.cxl.access_bytes
+            * g
+        )
+        return ddr_bytes / total, cxl_bytes / total
+
+    racing_ddr, racing_cxl = alternating_run(None)
+    miku_ddr, miku_cxl = alternating_run(default_miku(platform))
+    mba_ddr, mba_cxl = alternating_run(default_miku(platform))
+
+    return MikuComparison(
+        op=op.value,
+        opt_ddr=opt_ddr,
+        opt_cxl=opt_cxl,
+        racing_ddr=racing_ddr,
+        racing_cxl=racing_cxl,
+        miku_ddr=miku_ddr,
+        miku_cxl=miku_cxl,
+        miku_mba_ddr=mba_ddr,
+        miku_mba_cxl=mba_cxl,
+    )

@@ -1,0 +1,18 @@
+"""Model zoo: every assigned architecture family in pure JAX.
+
+Layer families:
+  * dense GQA transformers (stablelm, qwen2.5, h2o-danube, gemma2, internvl2 LM)
+  * MoE transformers (dbrx 16e top-4, llama4-maverick 128e top-1 + shared)
+  * SSM (mamba2, SSD chunked scan)
+  * hybrid attention+SSM (hymba, parallel heads)
+  * encoder-decoder (whisper, conv frontend stubbed)
+
+All models are scan-over-layers (stacked params) for small HLO / fast
+multi-pod compiles, expose ``forward`` (train), ``prefill`` and
+``decode_step`` (serving, explicit KV/SSM state), and carry logical-axis
+annotations for the distributed sharding rules.
+"""
+
+from repro.models.transformer import TransformerLM, DecodeState
+
+__all__ = ["TransformerLM", "DecodeState"]

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, OptState, clip_by_global_norm
+from repro.optim.schedule import warmup_cosine, constant
+
+__all__ = ["AdamW", "OptState", "clip_by_global_norm", "warmup_cosine", "constant"]

@@ -1,0 +1,123 @@
+"""Sharded AdamW with optional fp32 master weights.
+
+Optimizer state mirrors the parameter tree leaf-for-leaf, so the same
+logical-axis tuples (and therefore the same NamedShardings) apply — fully
+sharded optimizer state (ZeRO-style) falls out of the FSDP param rules for
+free.  ``master=False`` drops the fp32 master copy (params updated in their
+own dtype) for memory-tight configs; m/v stay fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    step: jax.Array  # [] int32
+    m: Any  # fp32 tree
+    v: Any  # fp32 tree
+    master: Optional[Any]  # fp32 master params (or None)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    master: bool = True
+
+    def init(self, params: Any) -> OptState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zeros2 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        master = (
+            jax.tree.map(lambda p: p.astype(jnp.float32), params)
+            if self.master
+            else None
+        )
+        return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros2,
+                        master=master)
+
+    def init_shapes(self, param_specs: Any) -> OptState:
+        """ShapeDtypeStruct version (dry-run)."""
+        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)  # noqa: E731
+        return OptState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=jax.tree.map(f32, param_specs),
+            v=jax.tree.map(f32, param_specs),
+            master=jax.tree.map(f32, param_specs) if self.master else None,
+        )
+
+    def state_axes(self, param_axes: Any) -> OptState:
+        """Logical axes matching init's tree (same as params)."""
+        return OptState(
+            step=(),
+            m=param_axes,
+            v=param_axes,
+            master=param_axes if self.master else None,
+        )
+
+    def update(
+        self, grads: Any, state: OptState, params: Any, lr: jax.Array
+    ) -> Tuple[Any, OptState]:
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p, ref):
+            g32 = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g32
+            v2 = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            base = ref if ref is not None else p.astype(jnp.float32)
+            new = base - lr * (
+                mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * base
+            )
+            return new, m2, v2
+
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.m)
+        flat_v = jax.tree.leaves(state.v)
+        flat_p = jax.tree.leaves(params)
+        flat_ref = (
+            jax.tree.leaves(state.master) if state.master is not None
+            else [None] * len(flat_p)
+        )
+        treedef = jax.tree.structure(params)
+        news, m2s, v2s = [], [], []
+        for g, m, v, p, ref in zip(flat_g, flat_m, flat_v, flat_p, flat_ref):
+            new, m2, v2 = upd(g, m, v, p, ref)
+            news.append(new)
+            m2s.append(m2)
+            v2s.append(v2)
+        new_master = (
+            jax.tree.unflatten(treedef, news) if self.master else None
+        )
+        new_params = jax.tree.unflatten(
+            treedef,
+            [n.astype(p.dtype) for n, p in zip(news, flat_p)],
+        )
+        return new_params, OptState(
+            step=step,
+            m=jax.tree.unflatten(treedef, m2s),
+            v=jax.tree.unflatten(treedef, v2s),
+            master=new_master,
+        )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm

@@ -1,0 +1,18 @@
+from repro.roofline.hlo_costs import HloCost, parse_hlo_costs
+from repro.roofline.analysis import (
+    RooflineTerms,
+    V5E,
+    HardwareModel,
+    roofline_from_cell,
+    model_flops,
+)
+
+__all__ = [
+    "HloCost",
+    "parse_hlo_costs",
+    "RooflineTerms",
+    "V5E",
+    "HardwareModel",
+    "roofline_from_cell",
+    "model_flops",
+]

@@ -1,0 +1,113 @@
+"""Three-term roofline analysis from dry-run artifacts (assignment §Roofline).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+HLO_* come from the trip-count-scaled parser (:mod:`repro.roofline.hlo_costs`)
+over the partitioned module — per-device numbers, so the "/chips" cancels and
+the terms are simply per-device cost / per-device capability.
+
+MODEL_FLOPS bookkeeping follows the assignment: 6·N·D for training (N =
+params, D = tokens; N_active for MoE) and 2·N_active·D for prefill/decode
+(D = tokens processed: B·S for prefill, B for one decode step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs import ArchSpec, Shape
+from repro.roofline.hlo_costs import HloCost
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    name: str
+    peak_flops: float  # per chip, bf16
+    hbm_bw: float  # B/s per chip
+    link_bw: float  # B/s per ICI link
+    hbm_gib: float
+
+
+V5E = HardwareModel(
+    name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9, hbm_gib=16.0
+)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_per_dev: float
+    n_devices: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips) — remat/redundancy waste."""
+        total_hlo = self.hlo_flops_per_dev * self.n_devices
+        return self.model_flops / total_hlo if total_hlo > 0 else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time over the bound: MODEL_FLOPS/(chips·peak) ÷
+        max(term) — the score-carrying 'fraction of roofline' number."""
+        ideal = self.model_flops / (self.n_devices * V5E.peak_flops)
+        return ideal / self.bound_s if self.bound_s > 0 else 0.0
+
+
+def model_flops(spec: ArchSpec, shape: Shape) -> float:
+    """Assignment bookkeeping (6·N·D / 2·N_active·D)."""
+    cfg = spec.config
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    if shape.kind == "decode":
+        return 2.0 * n_active * shape.global_batch
+    del n_total
+    raise ValueError(shape.kind)
+
+
+def roofline_from_cell(
+    spec: ArchSpec,
+    shape: Shape,
+    mesh_name: str,
+    n_devices: int,
+    cost: HloCost,
+    hw: HardwareModel = V5E,
+) -> RooflineTerms:
+    return RooflineTerms(
+        arch=spec.arch_id,
+        shape=shape.name,
+        mesh=mesh_name,
+        compute_s=cost.flops / hw.peak_flops,
+        memory_s=cost.bytes / hw.hbm_bw,
+        collective_s=cost.total_collective / hw.link_bw,
+        model_flops=model_flops(spec, shape),
+        hlo_flops_per_dev=cost.flops,
+        n_devices=n_devices,
+    )

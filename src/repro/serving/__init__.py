@@ -1,0 +1,8 @@
+from repro.serving.engine import (
+    EngineConfig,
+    Request,
+    ServingEngine,
+    TieredServingCluster,
+)
+
+__all__ = ["EngineConfig", "Request", "ServingEngine", "TieredServingCluster"]

@@ -1,0 +1,20 @@
+"""Token samplers (greedy / temperature / top-k)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array, key=None) -> jax.Array:
+    del key
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(logits: jax.Array, key, temp: float = 0.8,
+                top_k: int = 0) -> jax.Array:
+    logits = logits.astype(jnp.float32) / max(temp, 1e-6)
+    if top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

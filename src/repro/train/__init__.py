@@ -1,0 +1,9 @@
+from repro.train.step import (
+    TrainState,
+    chunked_cross_entropy,
+    make_train_step,
+    make_eval_step,
+)
+
+__all__ = ["TrainState", "chunked_cross_entropy", "make_train_step",
+           "make_eval_step"]

@@ -1,0 +1,234 @@
+"""Training step factory: chunked loss, microbatch accumulation, remat,
+optional int8 error-feedback gradient compression for the cross-pod
+all-reduce (DESIGN.md §5).
+
+Everything here is ordinary pjit-able JAX: gradient reductions come from
+GSPMD sharding propagation (batch sharded over (pod, data) ⇒ psum over those
+axes inserted by XLA), so compute/comm overlap is handled by the latency-
+hiding scheduler; microbatch accumulation keeps per-step activation memory
+bounded and gives the scheduler independent chunks to overlap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.autosharding import constrain
+from repro.models.transformer import ModelConfig, TransformerLM
+from repro.optim.adamw import AdamW, OptState, clip_by_global_norm
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: OptState
+    #: int8 error-feedback residual (grad compression), or None
+    ef_residual: Optional[Any]
+
+
+def chunked_cross_entropy(
+    model: TransformerLM,
+    params: Any,
+    hidden: jax.Array,  # [B, S, D]
+    labels: jax.Array,  # [B, S]
+    *,
+    chunk: int = 512,
+) -> jax.Array:
+    """Token-mean cross entropy without materializing [B, S, V].
+
+    The unembedding matmul + log-softmax run per sequence-chunk inside a
+    lax.map, bounding live logits to [B, chunk, V_shard].
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n = s // chunk
+    hidden_c = hidden.reshape(b, n, chunk, d).swapaxes(0, 1)  # [n, B, c, D]
+    labels_c = labels.reshape(b, n, chunk).swapaxes(0, 1)  # [n, B, c]
+
+    def one(args):
+        h, y = args
+        logits = model.logits(params, h).astype(jnp.float32)  # [B, c, V]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    totals = jax.lax.map(one, (hidden_c, labels_c))
+    return jnp.sum(totals) / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback gradient compression (optional, cross-pod)
+# ---------------------------------------------------------------------------
+
+
+def _ef_compress(g: jax.Array, residual: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Quantize (g + residual) to int8 with a per-tensor scale; return the
+    dequantized gradient and the new residual.  The all-reduce over the
+    dequantized value is what XLA sees; on real hardware the int8 payload is
+    what crosses the DCN (pod) links."""
+    acc = g.astype(jnp.float32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(acc)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(acc / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq.astype(g.dtype), acc - deq
+
+
+def make_loss_fn(
+    model: TransformerLM,
+    *,
+    aux_weight: float = 0.01,
+    loss_chunk: int = 512,
+) -> Callable:
+    def loss_fn(params, tokens, labels, frontend_embeds=None):
+        hidden, aux = model.forward(params, tokens,
+                                    frontend_embeds=frontend_embeds)
+        loss = chunked_cross_entropy(model, params, hidden, labels,
+                                     chunk=loss_chunk)
+        return loss + aux_weight * aux, (loss, aux)
+
+    return loss_fn
+
+
+def make_train_step(
+    model: TransformerLM,
+    optimizer: AdamW,
+    lr_schedule: Callable,
+    *,
+    microbatches: int = 1,
+    grad_clip: float = 1.0,
+    aux_weight: float = 0.01,
+    loss_chunk: int = 512,
+    grad_compression: bool = False,
+) -> Callable:
+    """Returns train_step(state, tokens, labels[, frontend_embeds]) ->
+    (state, metrics)."""
+    loss_fn = make_loss_fn(model, aux_weight=aux_weight, loss_chunk=loss_chunk)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    param_axes = model.param_axes()
+
+    def _constrain_grads(grads):
+        """Pin gradients to the parameter sharding: the batch-axis psum
+        becomes a reduce-scatter (ZeRO-2) instead of a full all-reduce."""
+        return jax.tree.map(
+            lambda g, ax: constrain(g, tuple(ax)),
+            grads, param_axes,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(a, str) for a in x),
+        )
+
+    def compute_grads(params, tokens, labels, frontend_embeds):
+        if microbatches <= 1:
+            (tot, (loss, aux)), grads = grad_fn(params, tokens, labels,
+                                                frontend_embeds)
+            return _constrain_grads(grads), loss, aux
+        b = tokens.shape[0]
+        assert b % microbatches == 0
+        mb = b // microbatches
+
+        def resh(x):
+            return x.reshape((microbatches, mb) + x.shape[1:])
+
+        tk = resh(tokens)
+        lb = resh(labels)
+        fe = resh(frontend_embeds) if frontend_embeds is not None else None
+
+        def body(carry, inp):
+            g_acc, l_acc, a_acc = carry
+            if fe is not None:
+                t1, l1, f1 = inp
+            else:
+                t1, l1 = inp
+                f1 = None
+            (_, (loss, aux)), grads = grad_fn(params, t1, l1, f1)
+            grads = _constrain_grads(grads)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                g_acc, grads,
+            )
+            return (g_acc, l_acc + loss / microbatches,
+                    a_acc + aux / microbatches), None
+
+        g0 = _constrain_grads(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        )
+        xs = (tk, lb, fe) if fe is not None else (tk, lb)
+        (grads, loss, aux), _ = jax.lax.scan(
+            body, (g0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            xs,
+        )
+        return grads, loss, aux
+
+    def train_step(state: TrainState, tokens, labels, frontend_embeds=None):
+        grads, loss, aux = compute_grads(state.params, tokens, labels,
+                                         frontend_embeds)
+        new_resid = state.ef_residual
+        if grad_compression and state.ef_residual is not None:
+            pairs = jax.tree.map(_ef_compress, grads, state.ef_residual)
+            grads = jax.tree.map(lambda p: p[0], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+            new_resid = jax.tree.map(lambda p: p[1], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr = lr_schedule(state.opt.step)
+        new_params, new_opt = optimizer.update(grads, state.opt, state.params, lr)
+        metrics = {"loss": loss, "aux_loss": aux, "grad_norm": gnorm, "lr": lr}
+        return TrainState(params=new_params, opt=new_opt,
+                          ef_residual=new_resid), metrics
+
+    return train_step
+
+
+def make_eval_step(model: TransformerLM, *, loss_chunk: int = 512) -> Callable:
+    def eval_step(params, tokens, labels, frontend_embeds=None):
+        hidden, _ = model.forward(params, tokens,
+                                  frontend_embeds=frontend_embeds)
+        return chunked_cross_entropy(model, params, hidden, labels,
+                                     chunk=loss_chunk)
+
+    return eval_step
+
+
+def init_train_state(
+    model: TransformerLM,
+    optimizer: AdamW,
+    key,
+    *,
+    grad_compression: bool = False,
+) -> TrainState:
+    params, _ = model.init(key)
+    opt = optimizer.init(params)
+    resid = (
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if grad_compression
+        else None
+    )
+    return TrainState(params=params, opt=opt, ef_residual=resid)
+
+
+def train_state_shapes(
+    model: TransformerLM, optimizer: AdamW, *, grad_compression: bool = False
+) -> TrainState:
+    specs = model.param_specs()
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)  # noqa: E731
+    return TrainState(
+        params=specs,
+        opt=optimizer.init_shapes(specs),
+        ef_residual=jax.tree.map(f32, specs) if grad_compression else None,
+    )
+
+
+def train_state_axes(model: TransformerLM, optimizer: AdamW,
+                     *, grad_compression: bool = False) -> TrainState:
+    axes = model.param_axes()
+    return TrainState(
+        params=axes,
+        opt=optimizer.state_axes(axes),
+        ef_residual=axes if grad_compression else None,
+    )

@@ -1,0 +1,9 @@
+import os
+
+# Tests and benches must see the real (1-device) CPU backend — only the
+# dry-run forces 512 host devices, and only in its own process.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

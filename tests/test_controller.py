@@ -1,0 +1,83 @@
+"""MIKU controller state-machine tests (paper §5.2 throttling ladder)."""
+
+import pytest
+
+from repro.core.controller import (
+    MikuConfig,
+    MikuController,
+    Phase,
+    StragglerGovernor,
+)
+from repro.core.littles_law import EstimatorConfig, OpClass, TierCounters
+
+
+def mk_controller(**cfg_kw):
+    est = EstimatorConfig(t_fast=100.0, slow_read_threshold=500.0, ewma=1.0)
+    return MikuController(MikuConfig(**cfg_kw), est)
+
+
+def win(n_fast, t_fast, n_slow, t_slow, op=OpClass.LOAD):
+    f, s = TierCounters(), TierCounters()
+    for _ in range(n_fast):
+        f.record(op, t_fast)
+    for _ in range(n_slow):
+        s.record(op, t_slow)
+    return f, s
+
+
+def test_detection_demotes_to_most_restrictive():
+    ctl = mk_controller()
+    d = ctl.window(*win(50, 100.0, 50, 5000.0))
+    assert d.phase is Phase.RESTRICTED
+    assert d.max_concurrency == 1  # paper: jump to level-3
+
+
+def test_promotion_ladder_respects_class_cap():
+    ctl = mk_controller(promote_patience=1)
+    ctl.window(*win(50, 100.0, 50, 5000.0))  # detect
+    caps_seen = []
+    for _ in range(12):
+        d = ctl.window(*win(50, 100.0, 50, 120.0, op=OpClass.STORE))
+        caps_seen.append(d.max_concurrency)
+    # store class cap = 4: never promoted beyond it while fast tier active
+    assert max(c for c in caps_seen if c is not None) <= 4
+
+
+def test_ntstore_capped_at_one():
+    ctl = mk_controller(promote_patience=1)
+    ctl.window(*win(50, 100.0, 50, 9000.0, op=OpClass.NT_STORE))
+    for _ in range(10):
+        d = ctl.window(*win(50, 100.0, 50, 300.0, op=OpClass.NT_STORE))
+        assert d.max_concurrency == 1
+
+
+def test_work_conserving_release_on_fast_idle():
+    ctl = mk_controller()
+    ctl.window(*win(50, 100.0, 50, 5000.0))  # detect
+    d = ctl.window(*win(0, 0.0, 50, 5000.0))  # fast tier went idle
+    assert d.phase is Phase.UNRESTRICTED
+
+
+def test_rate_backoff_at_floor_level():
+    ctl = mk_controller(drain_factor=0.0)  # disable drain grace
+    ctl.window(*win(50, 100.0, 50, 5000.0))
+    d = ctl.window(*win(50, 100.0, 50, 6000.0))  # still growing
+    assert d.max_concurrency == 1 and d.rate_factor < 1.0
+
+
+def test_drain_grace_holds_position():
+    ctl = mk_controller()
+    ctl.window(*win(50, 100.0, 50, 5000.0))
+    d = ctl.window(*win(50, 100.0, 50, 2000.0))  # draining (2000 < .9*5000)
+    assert d.rate_factor == 1.0 and d.max_concurrency == 1
+
+
+def test_straggler_governor_demotes_and_recovers():
+    gov = StragglerGovernor(n_hosts=4, patience=1)
+    for _ in range(3):
+        out = gov.window([1.0, 1.0, 1.0, 5.0])
+    assert not out[3].healthy and out[3].rate_factor < 1.0
+    assert all(h.healthy for h in out[:3])
+    for _ in range(6):
+        out = gov.window([1.0, 1.0, 1.0, 1.0])
+    assert out[3].rate_factor == 1.0

@@ -1,0 +1,79 @@
+"""DES behaviour tests — the paper's characterization claims (§4)."""
+
+import pytest
+
+from repro.core.des import run_bw_test, run_corun, run_lat_test
+from repro.core.device_model import platform_a
+from repro.core.littles_law import OpClass
+from repro.memsim.calibration import default_miku
+
+P = platform_a()
+
+
+def test_standalone_bandwidth_hits_device_peak():
+    for op in OpClass:
+        r = run_bw_test(P, op=op, tier="ddr", n_threads=16, sim_ns=80_000)
+        peak = P.ddr.peak_bandwidth_gbps(op)
+        assert r.bandwidth(f"bw-ddr-{op.value}") > 0.95 * peak
+
+
+def test_cxl_peak_is_single_dimm_class():
+    """Paper §4.1: CXL peak ~ one DDR DIMM despite 4-8x capacity."""
+    r = run_bw_test(P, op=OpClass.LOAD, tier="cxl", n_threads=16,
+                    sim_ns=80_000)
+    bw = r.bandwidth("bw-cxl-load")
+    assert bw < 0.25 * P.ddr.peak_bandwidth_gbps(OpClass.LOAD)
+    assert bw > 0.9 * P.cxl.peak_bandwidth_gbps(OpClass.LOAD)
+
+
+def test_unloaded_latency_matches_model():
+    r = run_lat_test(P, op=OpClass.LOAD, tier="ddr")
+    lat = r.stats["lat-ddr-load"].mean_latency_ns()
+    assert lat == pytest.approx(P.ddr.unloaded_latency_ns(OpClass.LOAD),
+                                rel=0.05)
+    r = run_lat_test(P, op=OpClass.LOAD, tier="cxl")
+    lat = r.stats["lat-cxl-load"].mean_latency_ns()
+    assert lat == pytest.approx(P.cxl.unloaded_latency_ns(OpClass.LOAD),
+                                rel=0.05)
+
+
+def test_corun_collapse_in_paper_band():
+    """Paper Fig. 5: DDR loses 74-89% under co-run; CXL barely impacted."""
+    for op in (OpClass.LOAD, OpClass.NT_STORE):
+        alone = run_bw_test(P, op=op, tier="ddr", n_threads=16,
+                            sim_ns=80_000).bandwidth(f"bw-ddr-{op.value}")
+        both = run_corun(P, op=op, n_threads=16, sim_ns=200_000)
+        loss = 1 - both.bandwidth("ddr") / alone
+        assert 0.6 < loss < 0.95, f"{op}: loss {loss}"
+        cxl_alone = run_bw_test(P, op=op, tier="cxl", n_threads=16,
+                                sim_ns=80_000).bandwidth(f"bw-cxl-{op.value}")
+        assert both.bandwidth("cxl") > 0.9 * cxl_alone
+
+
+def test_cxl_tor_latency_blows_up_under_load():
+    """Paper §4.2: loaded CXL service time ~8-10x its unloaded latency."""
+    r = run_bw_test(P, op=OpClass.LOAD, tier="cxl", n_threads=16,
+                    sim_ns=120_000)
+    loaded = r.tier_counters["cxl"].mean_service_time
+    unloaded = P.cxl.unloaded_latency_ns(OpClass.LOAD)
+    assert loaded > 5 * unloaded
+
+
+def test_miku_recovers_fast_tier():
+    """Paper Fig. 10: MIKU brings DDR near optimal, keeps CXL high."""
+    op = OpClass.STORE
+    alone = run_bw_test(P, op=op, tier="ddr", n_threads=16,
+                        sim_ns=80_000).bandwidth(f"bw-ddr-{op.value}")
+    cxl_alone = run_bw_test(P, op=op, tier="cxl", n_threads=16,
+                            sim_ns=80_000).bandwidth(f"bw-cxl-{op.value}")
+    miku = run_corun(P, op=op, n_threads=16, sim_ns=400_000,
+                     controller=default_miku(P))
+    assert miku.bandwidth("ddr") > 0.9 * alone
+    assert miku.bandwidth("cxl") > 0.7 * cxl_alone
+
+
+def test_conservation_completed_bytes_consistent():
+    r = run_bw_test(P, op=OpClass.LOAD, tier="ddr", n_threads=4,
+                    sim_ns=50_000)
+    st = r.stats["bw-ddr-load"]
+    assert st.bytes == st.completed * 256  # granularity 4 x 64B

@@ -1,0 +1,123 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode executes the exact TPU kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import decode_attention, ssd_scan
+from repro.kernels.ref import decode_attention_ref, ssd_scan_ref
+
+
+def _attn_ref(q, k, v, lengths, **kw):
+    b, hq, dh = q.shape
+    hkv = k.shape[2]
+    return decode_attention_ref(
+        q.reshape(b, hkv, hq // hkv, dh),
+        jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2), lengths, **kw
+    ).reshape(b, hq, dh)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,dh,s,block",
+    [
+        (1, 4, 4, 64, 128, 64),   # MHA
+        (2, 8, 2, 64, 256, 64),   # GQA 4:1
+        (2, 16, 2, 128, 512, 128),  # qwen-like 8:1
+        (1, 25, 5, 64, 128, 32),  # hymba: 25 heads, G=5 (padding path)
+        (2, 20, 20, 64, 128, 64),  # whisper MHA-20
+    ],
+)
+def test_decode_attention_sweep(dtype, b, hq, hkv, dh, s, block):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (b, hq, dh), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, dh), dtype)
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1)
+    out = decode_attention(q, k, v, lengths, block_s=block)
+    ref = _attn_ref(q, k, v, lengths)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        out.astype(np.float32), ref.astype(np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("window,softcap", [(64, None), (1 << 30, 50.0),
+                                            (32, 30.0)])
+def test_decode_attention_window_softcap(window, softcap):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    b, hq, hkv, dh, s = 2, 8, 4, 64, 256
+    q = jax.random.normal(ks[0], (b, hq, dh))
+    k = jax.random.normal(ks[1], (b, s, hkv, dh))
+    v = jax.random.normal(ks[2], (b, s, hkv, dh))
+    lengths = jnp.array([s, s // 3], jnp.int32)
+    out = decode_attention(q, k, v, lengths, window=window, softcap=softcap,
+                           block_s=64)
+    ref = _attn_ref(q, k, v, lengths, window=window, softcap=softcap)
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+@given(
+    b=st.integers(1, 3),
+    hkv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 5]),
+    s_blocks=st.integers(1, 4),
+)
+@settings(max_examples=20, deadline=None)
+def test_decode_attention_property(b, hkv, group, s_blocks):
+    dh, block = 32, 32
+    s = block * s_blocks
+    hq = hkv * group
+    ks = jax.random.split(jax.random.PRNGKey(b * 131 + hq), 4)
+    q = jax.random.normal(ks[0], (b, hq, dh))
+    k = jax.random.normal(ks[1], (b, s, hkv, dh))
+    v = jax.random.normal(ks[2], (b, s, hkv, dh))
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1)
+    out = decode_attention(q, k, v, lengths, block_s=block)
+    ref = _attn_ref(q, k, v, lengths)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,p,n,chunk",
+    [
+        (1, 64, 2, 32, 16, 16),
+        (2, 128, 4, 32, 16, 32),
+        (1, 256, 2, 64, 128, 64),  # mamba2-class state
+    ],
+)
+def test_ssd_scan_sweep(b, s, h, p, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = (jax.random.normal(ks[0], (b, s, h, p)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    bm = jax.random.normal(ks[2], (b, s, n)) * 0.3
+    cm = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    a = -jnp.exp(jax.random.normal(ks[4], (h,)) * 0.3)
+    y = ssd_scan(x, dt, bm, cm, a, chunk=chunk)
+    yref = jnp.moveaxis(
+        ssd_scan_ref(jnp.moveaxis(x, 2, 1).astype(jnp.float32),
+                     jnp.moveaxis(dt, 2, 1),
+                     jnp.stack([bm, cm], 2), a), 1, 2)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        y.astype(np.float32), yref.astype(np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_ssd_scan_state_carries_across_chunks():
+    """Same sequence, different chunk sizes => identical output (the scratch
+    state must carry exactly)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    b, s, h, p, n = 1, 128, 2, 32, 16
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    bm = jax.random.normal(ks[2], (b, s, n)) * 0.3
+    cm = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    a = -jnp.exp(jax.random.normal(ks[4], (h,)) * 0.3)
+    y32 = ssd_scan(x, dt, bm, cm, a, chunk=32)
+    y128 = ssd_scan(x, dt, bm, cm, a, chunk=128)
+    np.testing.assert_allclose(y32, y128, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,44 @@
+"""MVA solver: cross-validation vs DES + monotonicity properties."""
+
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.des import run_bw_test
+from repro.core.device_model import platform_a
+from repro.core.littles_law import OpClass
+from repro.core.mva import analyze
+
+P = platform_a()
+
+
+@pytest.mark.parametrize("op", list(OpClass))
+def test_mva_matches_des_at_saturation(op):
+    des = run_bw_test(P, op=op, tier="ddr", n_threads=16, sim_ns=80_000)
+    mva = analyze(P, op, fast_threads=16, slow_threads=0)
+    des_bw = des.bandwidth(f"bw-ddr-{op.value}")
+    assert float(mva.bandwidth_fast_gbps) == pytest.approx(des_bw, rel=0.10)
+
+
+def test_mva_slow_tier_residency_matches_des():
+    des = run_bw_test(P, op=OpClass.LOAD, tier="cxl", n_threads=16,
+                      sim_ns=100_000)
+    mva = analyze(P, OpClass.LOAD, fast_threads=0, slow_threads=16)
+    des_res = des.tier_counters["cxl"].mean_service_time
+    assert float(mva.residency_slow) == pytest.approx(des_res, rel=0.15)
+
+
+@given(n=st.integers(1, 32))
+@settings(max_examples=20, deadline=None)
+def test_mva_bandwidth_monotone_in_threads(n):
+    a = analyze(P, OpClass.LOAD, fast_threads=n, slow_threads=0)
+    b = analyze(P, OpClass.LOAD, fast_threads=n + 1, slow_threads=0)
+    assert float(b.bandwidth_fast_gbps) >= float(a.bandwidth_fast_gbps) - 1e-3
+
+
+@given(n=st.integers(1, 32))
+@settings(max_examples=20, deadline=None)
+def test_mva_residency_monotone_in_threads(n):
+    a = analyze(P, OpClass.LOAD, fast_threads=0, slow_threads=n)
+    b = analyze(P, OpClass.LOAD, fast_threads=0, slow_threads=n + 1)
+    assert float(b.residency_slow) >= float(a.residency_slow) - 1e-3

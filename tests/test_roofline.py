@@ -1,0 +1,61 @@
+"""HLO cost parser: trip-count scaling correctness on known programs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo_costs import parse_hlo_costs
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_exact():
+    a = jnp.zeros((64, 128), jnp.float32)
+    b = jnp.zeros((128, 32), jnp.float32)
+    txt = _compiled_text(lambda x, y: x @ y, a, b)
+    c = parse_hlo_costs(txt)
+    assert c.flops == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_scan_trip_count_scaling():
+    """A scan of N matmuls must cost ~N x one matmul (cost_analysis counts
+    the body once; the parser must not)."""
+    n, d = 8, 64
+    ws = jnp.zeros((n, d, d), jnp.float32)
+    x = jnp.zeros((16, d), jnp.float32)
+
+    def f(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, ws)
+        return c.sum()
+
+    c1 = parse_hlo_costs(_compiled_text(f, ws, x))
+    one_matmul = 2 * 16 * d * d
+    assert c1.flops == pytest.approx(n * one_matmul, rel=0.15)
+
+
+def test_nested_scan_scaling():
+    n_out, n_in, d = 4, 3, 32
+    ws = jnp.zeros((n_out, n_in, d, d), jnp.float32)
+    x = jnp.zeros((8, d), jnp.float32)
+
+    def f(ws, x):
+        def outer(c, w_stack):
+            def inner(c2, w):
+                return jnp.tanh(c2 @ w), None
+            c3, _ = jax.lax.scan(inner, c, w_stack)
+            return c3, None
+        c, _ = jax.lax.scan(outer, x, ws)
+        return c.sum()
+
+    c1 = parse_hlo_costs(_compiled_text(f, ws, x))
+    assert c1.flops == pytest.approx(n_out * n_in * 2 * 8 * d * d, rel=0.2)
+
+
+def test_collective_detection_on_sharded_program():
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device")
