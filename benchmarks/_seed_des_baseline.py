@@ -1,0 +1,601 @@
+# Seed (pre-refactor) DES snapshot — benchmark baseline ONLY.
+#
+# This is the object-per-request DES exactly as it shipped in the seed
+# commit (6755b8d), kept so benchmarks/bench_des.py can measure the
+# fast-path rewrite against its true baseline *interleaved on the same
+# machine* (container CPU throttling makes cross-run wall-clock
+# comparisons unreliable).  Do not import this from library code and do
+# not maintain it: it is a frozen measurement artifact.
+"""Discrete-event simulation of the cores → IRQ → ToR → {DDR, CXL} pipeline.
+
+This is the simulated testbed standing in for the paper's two hardware
+platforms (no CXL hardware exists in this container; the TPU is likewise only
+a compile target).  It models exactly the structures the paper's root-cause
+analysis identifies (§4.2):
+
+  * **Cores** with bounded memory-level parallelism (MLP: LFB/superqueue +
+    prefetcher slots) issue requests in a closed loop; ``lat-test`` style
+    workloads are dependent (MLP=1, pointer chasing), ``bw-test`` style
+    workloads keep MLP slots full.
+  * **IRQ** — the CHA ingress queue: a *shared, finite, FIFO* staging queue.
+    Only its head may dispatch (head-of-line blocking); when full it
+    back-pressures all cores indiscriminately — the paper's "CHA throttles
+    both DDR and CXL requests from upstream components".
+  * **ToR** — the Table of Requests: a finite shared pool of tracking
+    entries.  A request holds its entry from dispatch until data return, so
+    entry residency *is* the memory service time (queue wait at the device +
+    service + bus flight).  Slow-tier requests with 8-10x residency
+    monopolize the pool — the unfair-queuing mechanism.
+  * **Devices** — DDR group / CXL group per :mod:`repro.core.device_model`:
+    ``c`` deterministic servers + unbounded internal queue (requests wait
+    *while holding ToR entries*).
+  * **LLC** — an optional station in front of the devices; hits are serviced
+    fast but still consume ToR entries (paper §4.3), so LLC effectiveness
+    degrades under slow-tier backlog.  Capacity partitioning (Intel CAT
+    analogue) sets per-workload hit rates.
+
+MIKU attaches as a window callback: every ``window_ns`` the simulator hands
+the controller per-tier :class:`TierCounters` deltas and applies the returned
+concurrency/rate decision to slow-tier-bound workloads — identical in shape
+to how the real MIKU samples uncore counters once per second.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.controller import Decision, MikuController
+from repro.core.device_model import DeviceModel, PlatformModel
+from repro.core.littles_law import OpClass, TierCounters
+
+# Event kinds (heap payloads are (time, seq, kind, arg)).
+_EV_COMPLETE = 0  # service slot frees (device done); data starts return flight
+_EV_PHASE = 1
+_EV_WINDOW = 2
+_EV_TOKEN = 3
+_EV_RETIRE = 4  # data returned: ToR entry frees, core slot recycles
+
+
+@dataclasses.dataclass
+class WorkloadSpec:
+    """One co-running benchmark instance (a group of identical cores).
+
+    ``tier`` may be a single tier or a phase schedule (``phases`` overrides
+    ``tier`` with (duration_ns, tier) pairs, cycled — the paper's
+    alternating-every-100 s micro-benchmark, time-scaled).  ``dependent``
+    marks pointer-chasing (lat-test): MLP is forced to 1.  ``sync`` marks the
+    lat-share CAS loop: requests are coherence ops serviced at the LLC/CHA
+    with exclusive-line bouncing.  ``wss_mb`` with a finite ``llc_alloc_mb``
+    yields an LLC hit probability of min(1, alloc/wss) (CAT partitioning).
+    """
+
+    name: str
+    op: OpClass
+    tier: str  # "ddr" | "cxl"
+    n_cores: int
+    #: Outstanding cachelines per core, *including* L2-prefetcher stream
+    #: depth — bw-test's sequential streams keep the prefetchers saturated,
+    #: which is what lets a 16-thread group's aggregate demand exceed the
+    #: shared ToR pool (the monopolization precondition, §4.2).
+    mlp: int = 160
+    dependent: bool = False
+    sync: bool = False
+    wss_mb: float = 32768.0
+    llc_alloc_mb: float = 0.0
+    phases: Optional[Sequence[Tuple[float, str]]] = None
+    miku_managed: bool = True  # slow-tier workloads MIKU may throttle
+    #: Software page-interleaving across tiers: fraction of requests sent to
+    #: DDR (the rest go to CXL).  Overrides ``tier`` when set (Fig. 1/2
+    #: "Interleaving" scheme; Linux weighted interleaving).
+    ddr_fraction: Optional[float] = None
+
+    def effective_mlp(self, granularity: int = 1) -> int:
+        """Outstanding *simulated requests* per core (macro-request units)."""
+        if self.dependent or self.sync:
+            return 1
+        return max(1, self.mlp // granularity)
+
+
+@dataclasses.dataclass
+class WorkloadStats:
+    completed: int = 0
+    bytes: float = 0.0
+    latency_sum: float = 0.0
+    latency_count: int = 0
+    latency_samples: List[float] = dataclasses.field(default_factory=list)
+    # timeline of (t_ns, bytes_completed_in_bucket) for bandwidth-over-time
+    timeline: List[Tuple[float, float]] = dataclasses.field(default_factory=list)
+
+    def mean_latency_ns(self) -> float:
+        return self.latency_sum / max(1, self.latency_count)
+
+    def percentile_ns(self, q: float) -> float:
+        if not self.latency_samples:
+            return 0.0
+        xs = sorted(self.latency_samples)
+        idx = min(len(xs) - 1, int(q * len(xs)))
+        return xs[idx]
+
+    def bandwidth_gbps(self, sim_ns: float) -> float:
+        return self.bytes / sim_ns  # B/ns == GB/s
+
+
+class _Station:
+    """c deterministic servers + FIFO queue.  Queue entries hold ToR slots."""
+
+    __slots__ = ("name", "slots", "busy", "queue")
+
+    def __init__(self, name: str, slots: int):
+        self.name = name
+        self.slots = slots
+        self.busy = 0
+        self.queue: deque = deque()
+
+    @property
+    def backlog(self) -> int:
+        return len(self.queue)
+
+
+class _Request:
+    __slots__ = ("wl", "core", "op", "tier", "station", "t_issue", "t_tor", "service")
+
+    def __init__(self, wl: int, core: int, op: OpClass, tier: str):
+        self.wl = wl
+        self.core = core
+        self.op = op
+        self.tier = tier
+        self.station = ""
+        self.t_issue = 0.0
+        self.t_tor = 0.0
+        self.service = 0.0
+
+
+@dataclasses.dataclass
+class SimResult:
+    sim_ns: float
+    stats: Dict[str, WorkloadStats]
+    tier_counters: Dict[str, TierCounters]
+    tor_peak: int
+    tor_occupancy_integral: float  # entry-ns, all tiers
+    tor_inserts: int
+    decisions: List[Decision]
+    per_tier_occupancy_integral: Dict[str, float]
+
+    def bandwidth(self, name: str) -> float:
+        return self.stats[name].bandwidth_gbps(self.sim_ns)
+
+    def total_bandwidth(self, tier: Optional[str] = None) -> float:
+        return sum(s.bandwidth_gbps(self.sim_ns) for s in self.stats.values())
+
+    @property
+    def tor_avg_latency_ns(self) -> float:
+        """Occupancy/Inserts — exactly the paper's ToR-derived service time."""
+        return self.tor_occupancy_integral / max(1, self.tor_inserts)
+
+
+class TieredMemorySim:
+    """The DES engine.  Deterministic given a seed."""
+
+    def __init__(
+        self,
+        platform: PlatformModel,
+        workloads: Sequence[WorkloadSpec],
+        *,
+        seed: int = 0,
+        granularity: int = 4,
+        window_ns: float = 20_000.0,
+        controller: Optional[MikuController] = None,
+        latency_sample_every: int = 97,
+    ):
+        self.platform = platform
+        self.workloads = list(workloads)
+        self.rng = random.Random(seed)
+        # Granularity batches `granularity` cachelines per simulated request:
+        # identical bandwidth & queueing structure, ~granularity x fewer
+        # events.  Latency-sensitive (dependent/sync) workloads always run at
+        # single-access granularity.
+        self.granularity = max(1, granularity)
+        self.window_ns = window_ns
+        self.controller = controller
+        self.latency_sample_every = latency_sample_every
+
+        self.now = 0.0
+        self._seq = 0
+        self._heap: List[Tuple[float, int, int, object]] = []
+
+        # Stations.
+        self.ddr = _Station("ddr", platform.ddr.total_slots)
+        self.cxl = _Station("cxl", platform.cxl.total_slots)
+        self.llc = _Station("llc", platform.llc_slots)
+        self._stations = {"ddr": self.ddr, "cxl": self.cxl, "llc": self.llc}
+
+        # Shared queues.  Platform capacities are in cachelines; one simulated
+        # macro-request covers `granularity` cachelines, so scale down.
+        self.tor_capacity = max(1, platform.tor_entries // self.granularity)
+        self.tor_used = 0
+        self.tor_peak = 0
+        self.irq: deque = deque()
+        self.irq_capacity = max(1, platform.irq_entries // self.granularity)
+        # Round-robin arbitration order over every (workload, core) pair:
+        # real cores are open-loop instruction streams that re-attempt IRQ
+        # insertion every cycle; the IRQ arbitrates fairly *per core*, so the
+        # IRQ inflow mix reflects core counts — not completion rates.  This
+        # is precisely what makes the paper's collapse: DDR and CXL cores
+        # inject at the same rate while CXL entries retire ~10x slower.
+        self._rr: List[Tuple[int, int]] = []
+        self._rr_ptr = 0
+
+        # Per-core issue bookkeeping.
+        self._core_out: List[List[int]] = []  # outstanding per (wl, core)
+        self._phase_tier: List[str] = []
+        self._phase_idx: List[int] = []
+
+        # Throttle state per workload (set by MIKU decisions).
+        self._max_cores: List[Optional[int]] = [None] * len(self.workloads)
+        self._rate: List[float] = [1.0] * len(self.workloads)
+        self._tokens: List[float] = [0.0] * len(self.workloads)
+        self._last_refill: List[float] = [0.0] * len(self.workloads)
+        self._token_wait: List[bool] = [False] * len(self.workloads)
+
+        # Accounting.
+        self.stats: Dict[str, WorkloadStats] = {
+            w.name: WorkloadStats() for w in self.workloads
+        }
+        self.tier_counters = {"ddr": TierCounters(), "cxl": TierCounters()}
+        self._window_marks = {
+            "ddr": self.tier_counters["ddr"].snapshot(),
+            "cxl": self.tier_counters["cxl"].snapshot(),
+        }
+        self.tor_occupancy_integral = 0.0
+        self._per_tier_occ = {"ddr": 0.0, "cxl": 0.0}
+        self.tor_inserts = 0
+        self._last_occ_t = 0.0
+        self.decisions: List[Decision] = []
+        self._tier_inflight = {"ddr": 0, "cxl": 0}
+        self._timeline_bucket_ns = window_ns
+        self._timeline_acc: Dict[str, float] = {w.name: 0.0 for w in self.workloads}
+        self._timeline_next = self._timeline_bucket_ns
+
+        for wi, w in enumerate(self.workloads):
+            self._core_out.append([0] * w.n_cores)
+            self._phase_idx.append(0)
+            self._phase_tier.append(w.phases[0][1] if w.phases else w.tier)
+            for core in range(w.n_cores):
+                self._rr.append((wi, core))
+
+    # -- event plumbing -----------------------------------------------------
+    def _push(self, t: float, kind: int, arg: object) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, kind, arg))
+
+    def _advance_occupancy(self) -> None:
+        dt = self.now - self._last_occ_t
+        if dt > 0:
+            self.tor_occupancy_integral += self.tor_used * dt
+            self._per_tier_occ["ddr"] += self._tier_inflight["ddr"] * dt
+            self._per_tier_occ["cxl"] += self._tier_inflight["cxl"] * dt
+            self._last_occ_t = self.now
+
+    # -- issue path ----------------------------------------------------------
+    def _request_bytes(self, wl: WorkloadSpec, device: DeviceModel) -> int:
+        g = 1 if (wl.dependent or wl.sync) else self.granularity
+        return device.access_bytes * g
+
+    def _touches_slow(self, wi: int) -> bool:
+        """Does this workload currently generate slow-tier traffic?  (MIKU
+        identifies CXL-accessing threads via sampled physical addresses; the
+        simulator knows placement exactly — DESIGN.md §2.)"""
+        w = self.workloads[wi]
+        if w.ddr_fraction is not None:
+            return w.ddr_fraction < 1.0
+        return self._phase_tier[wi] == "cxl"
+
+    def _core_active(self, wi: int, core: int) -> bool:
+        limit = self._max_cores[wi]
+        w = self.workloads[wi]
+        if not w.miku_managed or not self._touches_slow(wi):
+            limit = None  # decisions apply to slow-tier-bound workloads only
+        return limit is None or core < limit
+
+    def _take_token(self, wi: int, cost: float) -> bool:
+        """Token bucket in request-cost units; rate_factor scales refill."""
+        rate = self._rate[wi]
+        w = self.workloads[wi]
+        if rate >= 1.0 or not w.miku_managed or not self._touches_slow(wi):
+            return True
+        dt = self.now - self._last_refill[wi]
+        self._tokens[wi] = min(cost * 4.0, self._tokens[wi] + dt * rate)
+        self._last_refill[wi] = self.now
+        if self._tokens[wi] >= cost:
+            self._tokens[wi] -= cost
+            return True
+        if not self._token_wait[wi]:
+            self._token_wait[wi] = True
+            wait = (cost - self._tokens[wi]) / max(rate, 1e-6)
+            self._push(self.now + wait, _EV_TOKEN, wi)
+        return False
+
+    def _issue_one(self, wi: int, core: int) -> bool:
+        """Try to issue exactly one request from (wi, core) into the IRQ."""
+        w = self.workloads[wi]
+        if self._core_out[wi][core] >= w.effective_mlp(self.granularity):
+            return False
+        if not self._core_active(wi, core):
+            return False
+        tier = self._phase_tier[wi]
+        if w.ddr_fraction is not None:
+            tier = "ddr" if self.rng.random() < w.ddr_fraction else "cxl"
+        device = self.platform.device_for(tier)
+        cost = device.service_ns(w.op) * (
+            1 if (w.dependent or w.sync) else self.granularity
+        )
+        if not self._take_token(wi, cost):
+            return False
+        req = _Request(wi, core, w.op, tier)
+        req.t_issue = self.now
+        self._core_out[wi][core] += 1
+        self.irq.append(req)
+        return True
+
+    def _fill_irq(self) -> None:
+        """Round-robin core arbitration into free IRQ space (open-loop issue
+        pressure: every core with MLP headroom re-attempts continuously)."""
+        n = len(self._rr)
+        misses = 0
+        while len(self.irq) < self.irq_capacity and misses < n:
+            wi, core = self._rr[self._rr_ptr]
+            self._rr_ptr = (self._rr_ptr + 1) % n
+            if self._issue_one(wi, core):
+                misses = 0
+            else:
+                misses += 1
+
+    def _refill_issue(self, wi: int) -> None:
+        del wi
+        self._fill_irq()
+        self._pump()
+
+    # -- IRQ -> ToR -> station ------------------------------------------------
+    def _pump(self) -> None:
+        """Admit IRQ heads into the ToR while entries are free (HoL FIFO),
+        letting cores refill freed IRQ space round-robin."""
+        while self.irq and self.tor_used < self.tor_capacity:
+            req = self.irq.popleft()
+            self._advance_occupancy()
+            self.tor_used += 1
+            self.tor_peak = max(self.tor_peak, self.tor_used)
+            self.tor_inserts += 1
+            self._tier_inflight[req.tier] += 1
+            req.t_tor = self.now
+            self._route(req)
+            if len(self.irq) < self.irq_capacity:
+                self._fill_irq()
+
+    def _route(self, req: _Request) -> None:
+        w = self.workloads[req.wl]
+        if w.sync:
+            station = self.llc
+            req.service = self.platform.llc_service_ns * 2.0  # line bounce RFO
+            req.station = "llc"
+        else:
+            hit = False
+            if w.llc_alloc_mb > 0:
+                p_hit = min(1.0, w.llc_alloc_mb / max(w.wss_mb, 1e-9))
+                hit = self.rng.random() < p_hit
+            if hit:
+                station = self.llc
+                req.service = self.platform.llc_service_ns * (
+                    1 if (w.dependent or w.sync) else self.granularity
+                )
+                req.station = "llc"
+            else:
+                device = self.platform.device_for(req.tier)
+                station = self._stations[req.tier]
+                g = 1 if (w.dependent or w.sync) else self.granularity
+                req.service = device.service_ns(w.op) * g
+                req.station = req.tier
+        if station.busy < station.slots:
+            station.busy += 1
+            self._start_service(req)
+        else:
+            station.queue.append(req)
+
+    def _start_service(self, req: _Request) -> None:
+        # The device slot is held for the service time only; the return
+        # flight (pipeline) happens off the slot.  The ToR entry, however, is
+        # held until the data returns (_EV_RETIRE) — this is why slow-tier
+        # residency at the ToR explodes under load while device throughput
+        # stays flat (paper §4.2 "service time rises but remains stable").
+        self._push(self.now + req.service, _EV_COMPLETE, req)
+
+    def _complete(self, req: _Request) -> None:
+        station = self._stations[req.station]
+        # Free the server; pull the next queued request.
+        if station.queue:
+            nxt = station.queue.popleft()
+            self._start_service(nxt)
+        else:
+            station.busy -= 1
+        pipeline = (
+            0.0
+            if req.station == "llc"
+            else self.platform.device_for(req.tier).pipeline_ns
+        )
+        if pipeline > 0.0:
+            self._push(self.now + pipeline, _EV_RETIRE, req)
+        else:
+            self._retire(req)
+
+    def _retire(self, req: _Request) -> None:
+        # Free the ToR entry.
+        self._advance_occupancy()
+        self.tor_used -= 1
+        self._tier_inflight[req.tier] -= 1
+        residency = self.now - req.t_tor
+        if req.station != "llc":
+            self.tier_counters[req.tier].record(req.op, residency)
+        # Account workload stats.
+        w = self.workloads[req.wl]
+        st = self.stats[w.name]
+        st.completed += 1
+        device = self.platform.device_for(req.tier)
+        nbytes = float(self._request_bytes(w, device))
+        st.bytes += nbytes
+        self._timeline_acc[w.name] += nbytes
+        latency = self.now - req.t_issue
+        st.latency_sum += latency
+        st.latency_count += 1
+        if st.latency_count % self.latency_sample_every == 0:
+            st.latency_samples.append(latency)
+        # Core slot freed: reissue (round-robin with everyone else), admit.
+        self._core_out[req.wl][req.core] -= 1
+        self._fill_irq()
+        self._pump()
+
+    # -- phases / windows ------------------------------------------------------
+    def _schedule_phases(self) -> None:
+        for wi, w in enumerate(self.workloads):
+            if w.phases:
+                dur, _ = w.phases[0]
+                self._push(dur, _EV_PHASE, wi)
+
+    def _phase_flip(self, wi: int) -> None:
+        w = self.workloads[wi]
+        assert w.phases is not None
+        self._phase_idx[wi] = (self._phase_idx[wi] + 1) % len(w.phases)
+        dur, tier = w.phases[self._phase_idx[wi]]
+        self._phase_tier[wi] = tier
+        self._push(self.now + dur, _EV_PHASE, wi)
+        self._refill_issue(wi)
+
+    def _window(self) -> None:
+        if self.controller is not None:
+            deltas = {}
+            for tier in ("ddr", "cxl"):
+                snap = self.tier_counters[tier]
+                deltas[tier] = snap.delta(self._window_marks[tier])
+                self._window_marks[tier] = snap.snapshot()
+            decision = self.controller.window(deltas["ddr"], deltas["cxl"])
+            self.decisions.append(decision)
+            for wi, w in enumerate(self.workloads):
+                if not w.miku_managed:
+                    continue
+                self._max_cores[wi] = decision.max_concurrency
+                self._rate[wi] = decision.rate_factor
+                self._refill_issue(wi)
+        # Flush bandwidth timeline buckets.
+        while self.now >= self._timeline_next:
+            for w in self.workloads:
+                self.stats[w.name].timeline.append(
+                    (self._timeline_next, self._timeline_acc[w.name])
+                )
+                self._timeline_acc[w.name] = 0.0
+            self._timeline_next += self._timeline_bucket_ns
+        self._push(self.now + self.window_ns, _EV_WINDOW, None)
+
+    # -- run --------------------------------------------------------------------
+    def run(self, sim_ns: float) -> SimResult:
+        self._schedule_phases()
+        self._push(self.window_ns, _EV_WINDOW, None)
+        self._fill_irq()
+        self._pump()
+        while self._heap:
+            t, _, kind, arg = heapq.heappop(self._heap)
+            if t > sim_ns:
+                break
+            self.now = t
+            if kind == _EV_COMPLETE:
+                self._complete(arg)  # type: ignore[arg-type]
+            elif kind == _EV_RETIRE:
+                self._retire(arg)  # type: ignore[arg-type]
+            elif kind == _EV_PHASE:
+                self._phase_flip(arg)  # type: ignore[arg-type]
+            elif kind == _EV_WINDOW:
+                self._window()
+            elif kind == _EV_TOKEN:
+                wi = arg  # type: ignore[assignment]
+                self._token_wait[wi] = False
+                self._refill_issue(wi)
+        self.now = sim_ns
+        self._advance_occupancy()
+        return SimResult(
+            sim_ns=sim_ns,
+            stats=self.stats,
+            tier_counters=self.tier_counters,
+            tor_peak=self.tor_peak,
+            tor_occupancy_integral=self.tor_occupancy_integral,
+            tor_inserts=self.tor_inserts,
+            decisions=self.decisions,
+            per_tier_occupancy_integral=dict(self._per_tier_occ),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Convenience runners used by memsim + benchmarks.
+# ---------------------------------------------------------------------------
+
+
+def run_bw_test(
+    platform: PlatformModel,
+    *,
+    op: OpClass,
+    tier: str,
+    n_threads: int,
+    sim_ns: float = 150_000.0,
+    mlp: int = 160,
+    seed: int = 0,
+) -> SimResult:
+    wl = WorkloadSpec(
+        name=f"bw-{tier}-{op.value}", op=op, tier=tier, n_cores=n_threads, mlp=mlp
+    )
+    sim = TieredMemorySim(platform, [wl], seed=seed)
+    return sim.run(sim_ns)
+
+
+def run_lat_test(
+    platform: PlatformModel,
+    *,
+    op: OpClass,
+    tier: str,
+    n_threads: int = 1,
+    sim_ns: float = 300_000.0,
+    seed: int = 0,
+) -> SimResult:
+    wl = WorkloadSpec(
+        name=f"lat-{tier}-{op.value}",
+        op=op,
+        tier=tier,
+        n_cores=n_threads,
+        dependent=True,
+    )
+    sim = TieredMemorySim(platform, [wl], seed=seed, granularity=1)
+    return sim.run(sim_ns)
+
+
+def run_corun(
+    platform: PlatformModel,
+    *,
+    op: OpClass,
+    n_threads: int = 16,
+    sim_ns: float = 200_000.0,
+    controller: Optional[MikuController] = None,
+    mlp: int = 160,
+    seed: int = 0,
+    window_ns: float = 10_000.0,
+) -> SimResult:
+    """Two co-running bw-tests: one on DDR, one on CXL (paper Fig. 5/10)."""
+    wls = [
+        WorkloadSpec(
+            name="ddr", op=op, tier="ddr", n_cores=n_threads, mlp=mlp,
+            miku_managed=False,
+        ),
+        WorkloadSpec(name="cxl", op=op, tier="cxl", n_cores=n_threads, mlp=mlp),
+    ]
+    sim = TieredMemorySim(
+        platform, wls, seed=seed, controller=controller, window_ns=window_ns
+    )
+    return sim.run(sim_ns)

@@ -1,0 +1,107 @@
+"""DES microbenchmark: fast-path rewrite vs the seed DES, interleaved A/B.
+
+Measures the fig5 co-run config (LOAD, 16+16 threads, 300 us simulated) on
+both the current DES and the pinned seed snapshot
+(``benchmarks/_seed_des_baseline.py``), alternating reps so container CPU
+throttling hits both sides equally, and verifies the Fig. 3/5 bandwidths
+against the recorded seed goldens (they are bit-identical by construction;
+1% is the gate).  Emits ``BENCH_des.json`` at the repo root.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_des.py [--reps N] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_REPO_ROOT = os.path.dirname(_HERE)
+if _REPO_ROOT not in sys.path:
+    sys.path.insert(0, _REPO_ROOT)
+
+from repro.core.des import run_bw_test, run_corun
+from repro.core.device_model import platform_a
+from repro.core.littles_law import OpClass
+
+from benchmarks import _seed_des_baseline as seed_des
+
+_GOLDENS = os.path.join(_REPO_ROOT, "tests", "data", "seed_fig_goldens.json")
+
+
+def _time(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def bench_ab(reps: int) -> dict:
+    p = platform_a()
+    kw = dict(op=OpClass.LOAD, n_threads=16, sim_ns=300_000)
+    seed_t, new_t = [], []
+    completed = 0
+    for _ in range(reps):
+        seed_t.append(_time(lambda: seed_des.run_corun(p, **kw)))
+        t0 = time.perf_counter()
+        res = run_corun(p, **kw)
+        new_t.append(time.perf_counter() - t0)
+        completed = sum(s.completed for s in res.stats.values())
+    return {
+        "config": "fig5_corun_load_16t_300us",
+        "seed_wall_s": {"best": round(min(seed_t), 4),
+                        "median": round(statistics.median(seed_t), 4)},
+        "corun_wall_s": {"best": round(min(new_t), 4),
+                         "median": round(statistics.median(new_t), 4)},
+        "speedup_vs_seed": round(min(seed_t) / min(new_t), 2),
+        "speedup_vs_seed_median": round(
+            statistics.median(seed_t) / statistics.median(new_t), 2),
+        "events_per_s": int(completed / min(new_t)),
+        "completed_requests": completed,
+    }
+
+
+def check_goldens() -> dict:
+    p = platform_a()
+    with open(_GOLDENS) as f:
+        gold = json.load(f)
+    worst = 0.0
+    for row in gold["fig3"]:
+        op = OpClass(row["op"])
+        r = run_bw_test(p, op=op, tier=row["tier"], n_threads=16,
+                        sim_ns=120_000)
+        bw = r.bandwidth(f"bw-{row['tier']}-{op.value}")
+        worst = max(worst, abs(bw - row["bandwidth_gbps"])
+                    / max(row["bandwidth_gbps"], 1e-9))
+    for opv, g in gold["fig5"].items():
+        both = run_corun(p, op=OpClass(opv), n_threads=16, sim_ns=300_000)
+        worst = max(worst, abs(both.bandwidth("ddr") - g["ddr_gbps"])
+                    / max(g["ddr_gbps"], 1e-9))
+        worst = max(worst, abs(both.bandwidth("cxl") - g["cxl_gbps"])
+                    / max(g["cxl_gbps"], 1e-9))
+    return {
+        "goldens_within_1pct": worst < 0.01,
+        "goldens_max_rel_err": worst,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=6)
+    ap.add_argument("--out", default=os.path.join(_REPO_ROOT, "BENCH_des.json"))
+    args = ap.parse_args()
+    out = {"bench": "des_fast_path", **bench_ab(args.reps), **check_goldens()}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(json.dumps(out, indent=2))
+    if out["speedup_vs_seed"] < 2.0:
+        print("WARNING: speedup below the 2x acceptance bar "
+              "(noisy machine, or a fast-path regression)")
+
+
+if __name__ == "__main__":
+    main()

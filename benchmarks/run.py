@@ -1,41 +1,71 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+# Usage:
+#   PYTHONPATH=src python benchmarks/run.py [filter] [--jobs N]
+#
+# ``--jobs N`` runs the figure modules concurrently in a process pool (each
+# module's sweep is itself a batch of independent sims; figure-level
+# parallelism composes with REPRO_SWEEP_PROCS for the in-module sweeps).
+# Output order is deterministic (module order) either way.
 
 from __future__ import annotations
 
+import argparse
+import os
 import sys
+from concurrent.futures import ProcessPoolExecutor
+
+# Allow `python benchmarks/run.py` as well as `python -m benchmarks.run`.
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO_ROOT not in sys.path:
+    sys.path.insert(0, _REPO_ROOT)
+
+_MODULE_NAMES = [
+    "fig2_tiering",
+    "fig3_bandwidth",
+    "fig4_latency",
+    "fig5_corun",
+    "fig7_llc",
+    "fig8_sync",
+    "fig9_service",
+    "fig10_miku",
+    "fig11_llm",
+    "fig13_spark",
+    "fig14_kv",
+    "roofline_table",
+]
+
+
+def _run_module(name: str) -> list:
+    """Worker entry: import + run one figure module, exceptions as rows."""
+    import importlib
+
+    try:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        return list(mod.run())
+    except Exception as ex:  # keep the harness going; failures visible
+        return [(name, 0.0, f"ERROR:{type(ex).__name__}:{ex}")]
 
 
 def main() -> None:
-    from benchmarks import (
-        fig2_tiering,
-        fig3_bandwidth,
-        fig4_latency,
-        fig5_corun,
-        fig7_llc,
-        fig8_sync,
-        fig9_service,
-        fig10_miku,
-        fig11_llm,
-        fig13_spark,
-        fig14_kv,
-        roofline_table,
-    )
+    ap = argparse.ArgumentParser()
+    ap.add_argument("only", nargs="?", default=None,
+                    help="substring filter on figure module names")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="process-pool width for running figure modules")
+    args = ap.parse_args()
+
     from benchmarks.common import emit
 
-    modules = [
-        fig2_tiering, fig3_bandwidth, fig4_latency, fig5_corun, fig7_llc,
-        fig8_sync, fig9_service, fig10_miku, fig11_llm, fig13_spark,
-        fig14_kv, roofline_table,
-    ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    names = [n for n in _MODULE_NAMES if not args.only or args.only in n]
     print("name,us_per_call,derived")
-    for mod in modules:
-        if only and only not in mod.__name__:
-            continue
-        try:
-            emit(mod.run())
-        except Exception as ex:  # keep the harness going; failures visible
-            emit([(mod.__name__, 0.0, f"ERROR:{type(ex).__name__}:{ex}")])
+    if args.jobs > 1 and len(names) > 1:
+        with ProcessPoolExecutor(max_workers=min(args.jobs, len(names))) as pool:
+            for rows in pool.map(_run_module, names):
+                emit(rows)
+    else:
+        for name in names:
+            emit(_run_module(name))
 
 
 if __name__ == "__main__":

@@ -29,6 +29,14 @@ from repro.core.littles_law import (
     TierEstimate,
 )
 from repro.core.offload import HostOffloader, TransferQueue
+from repro.core.substrate import (
+    ControlLoop,
+    MemorySubstrate,
+    ReplaySubstrate,
+    StepTimingSubstrate,
+    WindowedCounters,
+    WindowRecord,
+)
 from repro.core.tiers import (
     HBM_TIER,
     HOST_TIER,
@@ -61,6 +69,12 @@ __all__ = [
     "TierEstimate",
     "HostOffloader",
     "TransferQueue",
+    "ControlLoop",
+    "MemorySubstrate",
+    "ReplaySubstrate",
+    "StepTimingSubstrate",
+    "WindowedCounters",
+    "WindowRecord",
     "HBM_TIER",
     "HOST_TIER",
     "TieredLayout",

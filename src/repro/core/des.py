@@ -26,10 +26,21 @@ analysis identifies (§4.2):
     degrades under slow-tier backlog.  Capacity partitioning (Intel CAT
     analogue) sets per-workload hit rates.
 
-MIKU attaches as a window callback: every ``window_ns`` the simulator hands
-the controller per-tier :class:`TierCounters` deltas and applies the returned
-concurrency/rate decision to slow-tier-bound workloads — identical in shape
-to how the real MIKU samples uncore counters once per second.
+MIKU attaches through :class:`repro.core.substrate.ControlLoop`: the sim is
+a :class:`~repro.core.substrate.MemorySubstrate` whose windows the loop
+drives as simulator events — every ``window_ns`` the loop pulls per-tier
+:class:`TierCounters` deltas and applies the returned concurrency/rate
+decision to slow-tier-bound workloads, identical in shape to how the real
+MIKU samples uncore counters once per second.
+
+Implementation notes (the fast path): requests live in preallocated
+parallel arrays recycled through a free-list — no per-request objects.
+Heap entries are ``(time, packed)`` 2-tuples with sequence number, event
+kind, and request id packed into one integer; tier/station names are small
+integer codes; per-(workload, tier) service times and byte counts are
+precomputed at init.  Latencies are reservoir-sampled into a bounded buffer
+(drawn from a dedicated RNG so the simulation's own random stream — and
+therefore every bandwidth figure — is unchanged by sampling).
 """
 
 from __future__ import annotations
@@ -38,18 +49,34 @@ import dataclasses
 import heapq
 import random
 from collections import deque
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.controller import Decision, MikuController
 from repro.core.device_model import DeviceModel, PlatformModel
 from repro.core.littles_law import OpClass, TierCounters
+from repro.core.substrate import ControlLoop, WindowedCounters
 
-# Event kinds (heap payloads are (time, seq, kind, arg)).
+# Event kinds.  Heap payloads are (time, packed) with
+# packed = (seq << _SEQ_SHIFT) | (kind << _KIND_SHIFT) | arg — seq in the
+# high bits preserves strict FIFO tie-breaking on equal timestamps.
 _EV_COMPLETE = 0  # service slot frees (device done); data starts return flight
 _EV_PHASE = 1
 _EV_WINDOW = 2
 _EV_TOKEN = 3
 _EV_RETIRE = 4  # data returned: ToR entry frees, core slot recycles
+
+_KIND_SHIFT = 32
+_SEQ_SHIFT = 36
+_ARG_MASK = 0xFFFFFFFF
+
+# Station / tier integer codes (tiers are the first two).
+_DDR, _CXL, _LLC = 0, 1, 2
+_TIER_NAMES = ("ddr", "cxl")
+_OPS = tuple(OpClass)
+
+#: Default bound on per-workload latency reservoirs (satellite: keep
+#: ``percentile_ns`` within tolerance at a fixed memory footprint).
+LATENCY_RESERVOIR = 2048
 
 
 @dataclasses.dataclass
@@ -98,6 +125,8 @@ class WorkloadStats:
     bytes: float = 0.0
     latency_sum: float = 0.0
     latency_count: int = 0
+    #: Bounded reservoir sample of request latencies (uniform over all
+    #: completed requests).
     latency_samples: List[float] = dataclasses.field(default_factory=list)
     # timeline of (t_ns, bytes_completed_in_bucket) for bandwidth-over-time
     timeline: List[Tuple[float, float]] = dataclasses.field(default_factory=list)
@@ -114,36 +143,6 @@ class WorkloadStats:
 
     def bandwidth_gbps(self, sim_ns: float) -> float:
         return self.bytes / sim_ns  # B/ns == GB/s
-
-
-class _Station:
-    """c deterministic servers + FIFO queue.  Queue entries hold ToR slots."""
-
-    __slots__ = ("name", "slots", "busy", "queue")
-
-    def __init__(self, name: str, slots: int):
-        self.name = name
-        self.slots = slots
-        self.busy = 0
-        self.queue: deque = deque()
-
-    @property
-    def backlog(self) -> int:
-        return len(self.queue)
-
-
-class _Request:
-    __slots__ = ("wl", "core", "op", "tier", "station", "t_issue", "t_tor", "service")
-
-    def __init__(self, wl: int, core: int, op: OpClass, tier: str):
-        self.wl = wl
-        self.core = core
-        self.op = op
-        self.tier = tier
-        self.station = ""
-        self.t_issue = 0.0
-        self.t_tor = 0.0
-        self.service = 0.0
 
 
 @dataclasses.dataclass
@@ -170,7 +169,12 @@ class SimResult:
 
 
 class TieredMemorySim:
-    """The DES engine.  Deterministic given a seed."""
+    """The DES engine.  Deterministic given a seed.
+
+    Implements the :class:`~repro.core.substrate.MemorySubstrate` protocol
+    (``clock_ns`` / ``counters_delta`` / ``apply``); a
+    :class:`~repro.core.substrate.ControlLoop` owns the MIKU windowing.
+    """
 
     def __init__(
         self,
@@ -181,11 +185,16 @@ class TieredMemorySim:
         granularity: int = 4,
         window_ns: float = 20_000.0,
         controller: Optional[MikuController] = None,
-        latency_sample_every: int = 97,
+        latency_reservoir: int = LATENCY_RESERVOIR,
     ):
         self.platform = platform
         self.workloads = list(workloads)
         self.rng = random.Random(seed)
+        # Reservoir sampling draws from its own stream so enabling/resizing
+        # it can never perturb the simulated system.
+        self._res_rng = random.Random((seed << 16) ^ 0x5EED)
+        self._res_random = self._res_rng.random
+        self._reservoir_k = latency_reservoir
         # Granularity batches `granularity` cachelines per simulated request:
         # identical bandwidth & queueing structure, ~granularity x fewer
         # events.  Latency-sensitive (dependent/sync) workloads always run at
@@ -193,17 +202,23 @@ class TieredMemorySim:
         self.granularity = max(1, granularity)
         self.window_ns = window_ns
         self.controller = controller
-        self.latency_sample_every = latency_sample_every
+        self.control = ControlLoop(
+            self, controller, window_ns=window_ns, record=False
+        )
 
         self.now = 0.0
         self._seq = 0
-        self._heap: List[Tuple[float, int, int, object]] = []
+        self._heap: List[Tuple[float, int]] = []
 
-        # Stations.
-        self.ddr = _Station("ddr", platform.ddr.total_slots)
-        self.cxl = _Station("cxl", platform.cxl.total_slots)
-        self.llc = _Station("llc", platform.llc_slots)
-        self._stations = {"ddr": self.ddr, "cxl": self.cxl, "llc": self.llc}
+        # Stations: [ddr, cxl, llc] slot counts, busy counts, FIFO queues of
+        # request ids.  Queue entries hold ToR slots.
+        self._st_slots = [
+            platform.ddr.total_slots,
+            platform.cxl.total_slots,
+            platform.llc_slots,
+        ]
+        self._st_busy = [0, 0, 0]
+        self._st_q: List[deque] = [deque(), deque(), deque()]
 
         # Shared queues.  Platform capacities are in cachelines; one simulated
         # macro-request covers `granularity` cachelines, so scale down.
@@ -212,93 +227,196 @@ class TieredMemorySim:
         self.tor_peak = 0
         self.irq: deque = deque()
         self.irq_capacity = max(1, platform.irq_entries // self.granularity)
+
+        # Request pool: parallel arrays + free-list (no per-request objects).
+        self._r_wl: List[int] = []
+        self._r_gi: List[int] = []
+        self._r_tier: List[int] = []
+        self._r_station: List[int] = []
+        self._r_tissue: List[float] = []
+        self._r_ttor: List[float] = []
+        self._r_service: List[float] = []
+        self._r_free: List[int] = []
+
         # Round-robin arbitration order over every (workload, core) pair:
         # real cores are open-loop instruction streams that re-attempt IRQ
         # insertion every cycle; the IRQ arbitrates fairly *per core*, so the
         # IRQ inflow mix reflects core counts — not completion rates.  This
         # is precisely what makes the paper's collapse: DDR and CXL cores
         # inject at the same rate while CXL entries retire ~10x slower.
-        self._rr: List[Tuple[int, int]] = []
+        self._rr_wi: List[int] = []
+        self._rr_core: List[int] = []
         self._rr_ptr = 0
+        self._out: List[int] = []  # outstanding per global core index
 
-        # Per-core issue bookkeeping.
-        self._core_out: List[List[int]] = []  # outstanding per (wl, core)
-        self._phase_tier: List[str] = []
-        self._phase_idx: List[int] = []
+        n = len(self.workloads)
+        g = self.granularity
 
-        # Throttle state per workload (set by MIKU decisions).
-        self._max_cores: List[Optional[int]] = [None] * len(self.workloads)
-        self._rate: List[float] = [1.0] * len(self.workloads)
-        self._tokens: List[float] = [0.0] * len(self.workloads)
-        self._last_refill: List[float] = [0.0] * len(self.workloads)
-        self._token_wait: List[bool] = [False] * len(self.workloads)
+        # Per-workload precomputed constants (indexed by wi).
+        self._w_g: List[int] = []  # cachelines per macro-request
+        self._w_svc: List[Tuple[float, float]] = []  # device service by tier
+        self._w_bytes: List[Tuple[float, float]] = []  # retired bytes by tier
+        self._w_llc_svc: List[float] = []
+        self._w_phit: List[float] = []  # <0 disables the LLC lottery
+        self._w_frac: List[Optional[float]] = []
+        self._w_managed: List[bool] = []
+        self._w_op: List[int] = []  # index into _OPS
+        self._w_effmlp: List[int] = []
+        self._gi0: List[int] = []  # first global core index per workload
 
-        # Accounting.
+        # Phase / throttle state per workload.
+        self._phase_tier: List[int] = []
+        self._phase_idx: List[int] = [0] * n
+        self._max_cores: List[Optional[int]] = [None] * n
+        self._rate: List[float] = [1.0] * n
+        self._tokens: List[float] = [0.0] * n
+        self._last_refill: List[float] = [0.0] * n
+        self._token_wait: List[bool] = [False] * n
+        # Effective (cached) throttle state: _limit is the active core cap
+        # (None unless managed *and* currently slow-touching); _unthrottled
+        # short-circuits the token bucket.
+        self._limit: List[Optional[int]] = [None] * n
+        self._unthrottled: List[bool] = [True] * n
+
+        for wi, w in enumerate(self.workloads):
+            ge = 1 if (w.dependent or w.sync) else g
+            self._w_g.append(ge)
+            self._w_svc.append(
+                (
+                    platform.ddr.service_ns(w.op) * ge,
+                    platform.cxl.service_ns(w.op) * ge,
+                )
+            )
+            self._w_bytes.append(
+                (
+                    float(platform.ddr.access_bytes * ge),
+                    float(platform.cxl.access_bytes * ge),
+                )
+            )
+            self._w_llc_svc.append(
+                platform.llc_service_ns * 2.0
+                if w.sync
+                else platform.llc_service_ns * ge
+            )
+            # LLC routing sentinel: 2.0 = sync (always LLC, line-bounce
+            # service); [0, 1] = CAT hit lottery; -1.0 = straight to device.
+            if w.sync:
+                self._w_phit.append(2.0)
+            elif w.llc_alloc_mb > 0:
+                self._w_phit.append(min(1.0, w.llc_alloc_mb / max(w.wss_mb, 1e-9)))
+            else:
+                self._w_phit.append(-1.0)
+            self._w_frac.append(w.ddr_fraction)
+            self._w_managed.append(w.miku_managed)
+            self._w_op.append(_OPS.index(w.op))
+            self._w_effmlp.append(w.effective_mlp(g))
+            tier0 = w.phases[0][1] if w.phases else w.tier
+            self._phase_tier.append(_TIER_NAMES.index(tier0))
+            self._gi0.append(len(self._rr_wi))
+            for core in range(w.n_cores):
+                self._rr_wi.append(wi)
+                self._rr_core.append(core)
+                self._out.append(0)
+
+        # Device pipeline (return-flight) latency per tier.
+        self._pipe = (platform.ddr.pipeline_ns, platform.cxl.pipeline_ns)
+
+        # Accounting: per-workload flat accumulators, materialized into
+        # WorkloadStats at the end of the run.
         self.stats: Dict[str, WorkloadStats] = {
             w.name: WorkloadStats() for w in self.workloads
         }
-        self.tier_counters = {"ddr": TierCounters(), "cxl": TierCounters()}
-        self._window_marks = {
-            "ddr": self.tier_counters["ddr"].snapshot(),
-            "cxl": self.tier_counters["cxl"].snapshot(),
+        self._stat_completed = [0] * n
+        self._stat_bytes = [0.0] * n
+        self._stat_latsum = [0.0] * n
+        self._stat_latcnt = [0] * n
+        self._stat_res: List[List[float]] = [[] for _ in range(n)]
+
+        # Tier counters: flat accumulators + a WindowedCounters pair the
+        # control loop reads deltas from (fast=ddr, slow=cxl).
+        self._counters = WindowedCounters()
+        self.tier_counters = {
+            "ddr": self._counters.fast,
+            "cxl": self._counters.slow,
         }
+        self._tc_ins = [0, 0]
+        self._tc_occ = [0.0, 0.0]
+        self._tc_cls = [[0] * len(_OPS), [0] * len(_OPS)]
+
+        # Occupancy integrals are accumulated as per-request residencies at
+        # retire time (Σ residency == ∫ occupancy dt); requests still in
+        # flight at the horizon are charged their partial residency at the
+        # end of run().  Per-tier sums are keyed by the request's *tier*
+        # (LLC hits still hold ToR entries and count toward their tier,
+        # paper §4.3); the total integral is their sum.
         self.tor_occupancy_integral = 0.0
-        self._per_tier_occ = {"ddr": 0.0, "cxl": 0.0}
+        self._occ_tier = [0.0, 0.0]
         self.tor_inserts = 0
-        self._last_occ_t = 0.0
-        self.decisions: List[Decision] = []
-        self._tier_inflight = {"ddr": 0, "cxl": 0}
+        self._tier_inflight = [0, 0]
         self._timeline_bucket_ns = window_ns
-        self._timeline_acc: Dict[str, float] = {w.name: 0.0 for w in self.workloads}
+        self._timeline_acc = [0.0] * n
         self._timeline_next = self._timeline_bucket_ns
 
-        for wi, w in enumerate(self.workloads):
-            self._core_out.append([0] * w.n_cores)
-            self._phase_idx.append(0)
-            self._phase_tier.append(w.phases[0][1] if w.phases else w.tier)
-            for core in range(w.n_cores):
-                self._rr.append((wi, core))
+    # -- substrate protocol ---------------------------------------------------
+    @property
+    def clock_ns(self) -> float:
+        return self.now
 
-    # -- event plumbing -----------------------------------------------------
-    def _push(self, t: float, kind: int, arg: object) -> None:
-        self._seq += 1
-        heapq.heappush(self._heap, (t, self._seq, kind, arg))
+    def _materialize_counters(self) -> None:
+        for code, tc in ((_DDR, self._counters.fast), (_CXL, self._counters.slow)):
+            tc.inserts = self._tc_ins[code]
+            tc.occupancy_time = self._tc_occ[code]
+            cls = self._tc_cls[code]
+            for i, op in enumerate(_OPS):
+                tc.class_counts[op] = cls[i]
 
-    def _advance_occupancy(self) -> None:
-        dt = self.now - self._last_occ_t
-        if dt > 0:
-            self.tor_occupancy_integral += self.tor_used * dt
-            self._per_tier_occ["ddr"] += self._tier_inflight["ddr"] * dt
-            self._per_tier_occ["cxl"] += self._tier_inflight["cxl"] * dt
-            self._last_occ_t = self.now
+    def counters_delta(self) -> Tuple[TierCounters, TierCounters]:
+        self._materialize_counters()
+        return self._counters.delta()
 
-    # -- issue path ----------------------------------------------------------
-    def _request_bytes(self, wl: WorkloadSpec, device: DeviceModel) -> int:
-        g = 1 if (wl.dependent or wl.sync) else self.granularity
-        return device.access_bytes * g
+    def apply(self, decision: Decision) -> None:
+        """Throttle slow-tier-bound workloads per the window's decision."""
+        for wi in range(len(self.workloads)):
+            if not self._w_managed[wi]:
+                continue
+            self._max_cores[wi] = decision.max_concurrency
+            self._rate[wi] = decision.rate_factor
+            self._recompute_throttle(wi)
+            self._fill_irq()
+            self._pump()
 
+    @property
+    def decisions(self) -> List[Decision]:
+        return self.control.decisions
+
+    # -- throttle cache -------------------------------------------------------
     def _touches_slow(self, wi: int) -> bool:
         """Does this workload currently generate slow-tier traffic?  (MIKU
         identifies CXL-accessing threads via sampled physical addresses; the
         simulator knows placement exactly — DESIGN.md §2.)"""
-        w = self.workloads[wi]
-        if w.ddr_fraction is not None:
-            return w.ddr_fraction < 1.0
-        return self._phase_tier[wi] == "cxl"
+        frac = self._w_frac[wi]
+        if frac is not None:
+            return frac < 1.0
+        return self._phase_tier[wi] == _CXL
 
-    def _core_active(self, wi: int, core: int) -> bool:
-        limit = self._max_cores[wi]
-        w = self.workloads[wi]
-        if not w.miku_managed or not self._touches_slow(wi):
-            limit = None  # decisions apply to slow-tier-bound workloads only
-        return limit is None or core < limit
+    def _recompute_throttle(self, wi: int) -> None:
+        throttleable = self._w_managed[wi] and self._touches_slow(wi)
+        self._limit[wi] = self._max_cores[wi] if throttleable else None
+        self._unthrottled[wi] = self._rate[wi] >= 1.0 or not throttleable
 
+    # -- event plumbing -------------------------------------------------------
+    def _push(self, t: float, kind: int, arg: int) -> None:
+        self._seq += 1
+        heapq.heappush(
+            self._heap, (t, (self._seq << _SEQ_SHIFT) | (kind << _KIND_SHIFT) | arg)
+        )
+
+    # -- issue path -----------------------------------------------------------
     def _take_token(self, wi: int, cost: float) -> bool:
-        """Token bucket in request-cost units; rate_factor scales refill."""
+        """Token bucket in request-cost units; rate_factor scales refill.
+        Only reached when the workload is actually rate-throttled (the
+        ``_unthrottled`` fast path filters everything else)."""
         rate = self._rate[wi]
-        w = self.workloads[wi]
-        if rate >= 1.0 or not w.miku_managed or not self._touches_slow(wi):
-            return True
         dt = self.now - self._last_refill[wi]
         self._tokens[wi] = min(cost * 4.0, self._tokens[wi] + dt * rate)
         self._last_refill[wi] = self.now
@@ -311,40 +429,63 @@ class TieredMemorySim:
             self._push(self.now + wait, _EV_TOKEN, wi)
         return False
 
-    def _issue_one(self, wi: int, core: int) -> bool:
-        """Try to issue exactly one request from (wi, core) into the IRQ."""
-        w = self.workloads[wi]
-        if self._core_out[wi][core] >= w.effective_mlp(self.granularity):
-            return False
-        if not self._core_active(wi, core):
-            return False
-        tier = self._phase_tier[wi]
-        if w.ddr_fraction is not None:
-            tier = "ddr" if self.rng.random() < w.ddr_fraction else "cxl"
-        device = self.platform.device_for(tier)
-        cost = device.service_ns(w.op) * (
-            1 if (w.dependent or w.sync) else self.granularity
-        )
-        if not self._take_token(wi, cost):
-            return False
-        req = _Request(wi, core, w.op, tier)
-        req.t_issue = self.now
-        self._core_out[wi][core] += 1
-        self.irq.append(req)
-        return True
-
     def _fill_irq(self) -> None:
         """Round-robin core arbitration into free IRQ space (open-loop issue
         pressure: every core with MLP headroom re-attempts continuously)."""
-        n = len(self._rr)
+        irq = self.irq
+        cap = self.irq_capacity
+        if len(irq) >= cap:
+            return
+        rr_wi, rr_core = self._rr_wi, self._rr_core
+        n = len(rr_wi)
+        ptr = self._rr_ptr
+        out = self._out
+        effmlp, limit = self._w_effmlp, self._limit
+        frac_of, cur_tier = self._w_frac, self._phase_tier
+        unthrottled, svc = self._unthrottled, self._w_svc
+        rnd = self.rng.random
+        free = self._r_free
         misses = 0
-        while len(self.irq) < self.irq_capacity and misses < n:
-            wi, core = self._rr[self._rr_ptr]
-            self._rr_ptr = (self._rr_ptr + 1) % n
-            if self._issue_one(wi, core):
-                misses = 0
-            else:
+        while len(irq) < cap and misses < n:
+            gi = ptr
+            ptr += 1
+            if ptr == n:
+                ptr = 0
+            wi = rr_wi[gi]
+            if out[gi] >= effmlp[wi]:
                 misses += 1
+                continue
+            lim = limit[wi]
+            if lim is not None and rr_core[gi] >= lim:
+                misses += 1
+                continue
+            frac = frac_of[wi]
+            if frac is None:
+                tier = cur_tier[wi]
+            else:
+                tier = _DDR if rnd() < frac else _CXL
+            if not unthrottled[wi] and not self._take_token(wi, svc[wi][tier]):
+                misses += 1
+                continue
+            if free:
+                rid = free.pop()
+                self._r_wl[rid] = wi
+                self._r_gi[rid] = gi
+                self._r_tier[rid] = tier
+                self._r_tissue[rid] = self.now
+            else:
+                rid = len(self._r_wl)
+                self._r_wl.append(wi)
+                self._r_gi.append(gi)
+                self._r_tier.append(tier)
+                self._r_station.append(tier)
+                self._r_tissue.append(self.now)
+                self._r_ttor.append(0.0)
+                self._r_service.append(0.0)
+            out[gi] += 1
+            irq.append(rid)
+            misses = 0
+        self._rr_ptr = ptr
 
     def _refill_issue(self, wi: int) -> None:
         del wi
@@ -354,99 +495,158 @@ class TieredMemorySim:
     # -- IRQ -> ToR -> station ------------------------------------------------
     def _pump(self) -> None:
         """Admit IRQ heads into the ToR while entries are free (HoL FIFO),
-        letting cores refill freed IRQ space round-robin."""
-        while self.irq and self.tor_used < self.tor_capacity:
-            req = self.irq.popleft()
-            self._advance_occupancy()
+        letting cores refill freed IRQ space round-robin; route each admitted
+        request to its station (LLC lottery included).  The round-robin issue
+        scan is inlined (same arbitration as :meth:`_fill_irq`) — in steady
+        state every admission frees exactly one IRQ slot and one core issues
+        into it, so this loop is the simulator's hottest path."""
+        irq = self.irq
+        cap = self.tor_capacity
+        irq_cap = self.irq_capacity
+        now = self.now
+        r_wl, r_tier, r_station = self._r_wl, self._r_tier, self._r_station
+        r_ttor, r_tissue, r_service = self._r_ttor, self._r_tissue, self._r_service
+        r_gi = self._r_gi
+        phit, llc_svc, svc = self._w_phit, self._w_llc_svc, self._w_svc
+        st_busy, st_slots, st_q = self._st_busy, self._st_slots, self._st_q
+        rnd = self.rng.random
+        heap = self._heap
+        push = heapq.heappush
+        rr_wi, rr_core = self._rr_wi, self._rr_core
+        n_rr = len(rr_wi)
+        out = self._out
+        effmlp, limit = self._w_effmlp, self._limit
+        frac_of, cur_tier = self._w_frac, self._phase_tier
+        unthrottled = self._unthrottled
+        free = self._r_free
+        tier_inflight = self._tier_inflight
+        while irq and self.tor_used < cap:
+            rid = irq.popleft()
             self.tor_used += 1
-            self.tor_peak = max(self.tor_peak, self.tor_used)
+            if self.tor_used > self.tor_peak:
+                self.tor_peak = self.tor_used
             self.tor_inserts += 1
-            self._tier_inflight[req.tier] += 1
-            req.t_tor = self.now
-            self._route(req)
-            if len(self.irq) < self.irq_capacity:
-                self._fill_irq()
-
-    def _route(self, req: _Request) -> None:
-        w = self.workloads[req.wl]
-        if w.sync:
-            station = self.llc
-            req.service = self.platform.llc_service_ns * 2.0  # line bounce RFO
-            req.station = "llc"
-        else:
-            hit = False
-            if w.llc_alloc_mb > 0:
-                p_hit = min(1.0, w.llc_alloc_mb / max(w.wss_mb, 1e-9))
-                hit = self.rng.random() < p_hit
-            if hit:
-                station = self.llc
-                req.service = self.platform.llc_service_ns * (
-                    1 if (w.dependent or w.sync) else self.granularity
-                )
-                req.station = "llc"
+            tier = r_tier[rid]
+            tier_inflight[tier] += 1
+            r_ttor[rid] = now
+            # Route (inlined): sync → LLC bounce; else LLC lottery, else
+            # the tier device.
+            wi = r_wl[rid]
+            p = phit[wi]
+            if p == 2.0:  # sync workloads: coherence ops at the LLC
+                station = _LLC
+                service = llc_svc[wi]
+            elif p >= 0.0 and rnd() < p:
+                station = _LLC
+                service = llc_svc[wi]
             else:
-                device = self.platform.device_for(req.tier)
-                station = self._stations[req.tier]
-                g = 1 if (w.dependent or w.sync) else self.granularity
-                req.service = device.service_ns(w.op) * g
-                req.station = req.tier
-        if station.busy < station.slots:
-            station.busy += 1
-            self._start_service(req)
-        else:
-            station.queue.append(req)
+                station = tier
+                service = svc[wi][tier]
+            r_station[rid] = station
+            r_service[rid] = service
+            if st_busy[station] < st_slots[station]:
+                st_busy[station] += 1
+                self._seq += 1
+                push(
+                    heap,
+                    (
+                        now + service,
+                        (self._seq << _SEQ_SHIFT)
+                        | (_EV_COMPLETE << _KIND_SHIFT)
+                        | rid,
+                    ),
+                )
+            else:
+                st_q[station].append(rid)
+            # Refill freed IRQ space (inlined _fill_irq: identical
+            # round-robin arbitration, shared pointer).
+            if len(irq) < irq_cap:
+                ptr = self._rr_ptr
+                misses = 0
+                while len(irq) < irq_cap and misses < n_rr:
+                    gi = ptr
+                    ptr += 1
+                    if ptr == n_rr:
+                        ptr = 0
+                    iwi = rr_wi[gi]
+                    if out[gi] >= effmlp[iwi]:
+                        misses += 1
+                        continue
+                    lim = limit[iwi]
+                    if lim is not None and rr_core[gi] >= lim:
+                        misses += 1
+                        continue
+                    frac = frac_of[iwi]
+                    if frac is None:
+                        itier = cur_tier[iwi]
+                    else:
+                        itier = _DDR if rnd() < frac else _CXL
+                    if not unthrottled[iwi] and not self._take_token(
+                        iwi, svc[iwi][itier]
+                    ):
+                        misses += 1
+                        continue
+                    if free:
+                        nrid = free.pop()
+                        r_wl[nrid] = iwi
+                        r_gi[nrid] = gi
+                        r_tier[nrid] = itier
+                        r_tissue[nrid] = now
+                    else:
+                        nrid = len(r_wl)
+                        r_wl.append(iwi)
+                        r_gi.append(gi)
+                        r_tier.append(itier)
+                        r_station.append(itier)
+                        r_tissue.append(now)
+                        r_ttor.append(0.0)
+                        r_service.append(0.0)
+                    out[gi] += 1
+                    irq.append(nrid)
+                    misses = 0
+                self._rr_ptr = ptr
 
-    def _start_service(self, req: _Request) -> None:
-        # The device slot is held for the service time only; the return
-        # flight (pipeline) happens off the slot.  The ToR entry, however, is
-        # held until the data returns (_EV_RETIRE) — this is why slow-tier
-        # residency at the ToR explodes under load while device throughput
-        # stays flat (paper §4.2 "service time rises but remains stable").
-        self._push(self.now + req.service, _EV_COMPLETE, req)
-
-    def _complete(self, req: _Request) -> None:
-        station = self._stations[req.station]
-        # Free the server; pull the next queued request.
-        if station.queue:
-            nxt = station.queue.popleft()
-            self._start_service(nxt)
-        else:
-            station.busy -= 1
-        pipeline = (
-            0.0
-            if req.station == "llc"
-            else self.platform.device_for(req.tier).pipeline_ns
-        )
-        if pipeline > 0.0:
-            self._push(self.now + pipeline, _EV_RETIRE, req)
-        else:
-            self._retire(req)
-
-    def _retire(self, req: _Request) -> None:
-        # Free the ToR entry.
-        self._advance_occupancy()
+    def _retire(self, rid: int) -> None:
+        # NOTE: the run() event loop has an inlined copy of this body for
+        # _EV_RETIRE events (the hottest handler); keep the two in sync.
+        # This method serves the synchronous paths (LLC hits retiring
+        # directly from their completion, zero-pipeline devices).
+        now = self.now
         self.tor_used -= 1
-        self._tier_inflight[req.tier] -= 1
-        residency = self.now - req.t_tor
-        if req.station != "llc":
-            self.tier_counters[req.tier].record(req.op, residency)
+        tier = self._r_tier[rid]
+        self._tier_inflight[tier] -= 1
+        wi = self._r_wl[rid]
+        residency = now - self._r_ttor[rid]
+        self._occ_tier[tier] += residency
+        if self._r_station[rid] != _LLC:
+            self._tc_ins[tier] += 1
+            self._tc_occ[tier] += residency
+            self._tc_cls[tier][self._w_op[wi]] += 1
         # Account workload stats.
-        w = self.workloads[req.wl]
-        st = self.stats[w.name]
-        st.completed += 1
-        device = self.platform.device_for(req.tier)
-        nbytes = float(self._request_bytes(w, device))
-        st.bytes += nbytes
-        self._timeline_acc[w.name] += nbytes
-        latency = self.now - req.t_issue
-        st.latency_sum += latency
-        st.latency_count += 1
-        if st.latency_count % self.latency_sample_every == 0:
-            st.latency_samples.append(latency)
+        self._stat_completed[wi] += 1
+        nbytes = self._w_bytes[wi][tier]
+        self._stat_bytes[wi] += nbytes
+        self._timeline_acc[wi] += nbytes
+        latency = now - self._r_tissue[rid]
+        self._stat_latsum[wi] += latency
+        cnt = self._stat_latcnt[wi] + 1
+        self._stat_latcnt[wi] = cnt
+        # Reservoir sampling (algorithm R) on a dedicated RNG stream.
+        res = self._stat_res[wi]
+        k = self._reservoir_k
+        if len(res) < k:
+            res.append(latency)
+        else:
+            j = int(self._res_random() * cnt)
+            if j < k:
+                res[j] = latency
         # Core slot freed: reissue (round-robin with everyone else), admit.
-        self._core_out[req.wl][req.core] -= 1
-        self._fill_irq()
-        self._pump()
+        self._out[self._r_gi[rid]] -= 1
+        self._r_free.append(rid)
+        if len(self.irq) < self.irq_capacity:
+            self._fill_irq()
+        if self.irq and self.tor_used < self.tor_capacity:
+            self._pump()
 
     # -- phases / windows ------------------------------------------------------
     def _schedule_phases(self) -> None:
@@ -460,60 +660,238 @@ class TieredMemorySim:
         assert w.phases is not None
         self._phase_idx[wi] = (self._phase_idx[wi] + 1) % len(w.phases)
         dur, tier = w.phases[self._phase_idx[wi]]
-        self._phase_tier[wi] = tier
+        self._phase_tier[wi] = _TIER_NAMES.index(tier)
+        self._recompute_throttle(wi)
         self._push(self.now + dur, _EV_PHASE, wi)
         self._refill_issue(wi)
 
     def _window(self) -> None:
-        if self.controller is not None:
-            deltas = {}
-            for tier in ("ddr", "cxl"):
-                snap = self.tier_counters[tier]
-                deltas[tier] = snap.delta(self._window_marks[tier])
-                self._window_marks[tier] = snap.snapshot()
-            decision = self.controller.window(deltas["ddr"], deltas["cxl"])
-            self.decisions.append(decision)
-            for wi, w in enumerate(self.workloads):
-                if not w.miku_managed:
-                    continue
-                self._max_cores[wi] = decision.max_concurrency
-                self._rate[wi] = decision.rate_factor
-                self._refill_issue(wi)
+        # The control loop consumes counter deltas, runs the controller, and
+        # applies the decision (see ``apply``); with no controller it still
+        # keeps the window cadence for the timeline flush below.
+        self.control.fire()
         # Flush bandwidth timeline buckets.
         while self.now >= self._timeline_next:
-            for w in self.workloads:
-                self.stats[w.name].timeline.append(
-                    (self._timeline_next, self._timeline_acc[w.name])
-                )
-                self._timeline_acc[w.name] = 0.0
+            acc = self._timeline_acc
+            for wi, w in enumerate(self.workloads):
+                self.stats[w.name].timeline.append((self._timeline_next, acc[wi]))
+                acc[wi] = 0.0
             self._timeline_next += self._timeline_bucket_ns
-        self._push(self.now + self.window_ns, _EV_WINDOW, None)
+        self._push(self.control.next_window_ns, _EV_WINDOW, 0)
 
     # -- run --------------------------------------------------------------------
     def run(self, sim_ns: float) -> SimResult:
         self._schedule_phases()
-        self._push(self.window_ns, _EV_WINDOW, None)
+        self._push(self.control.next_window_ns, _EV_WINDOW, 0)
         self._fill_irq()
         self._pump()
-        while self._heap:
-            t, _, kind, arg = heapq.heappop(self._heap)
+        heap = self._heap
+        pop = heapq.heappop
+        push = heapq.heappush
+        retire = self._retire
+        kshift, amask = _KIND_SHIFT, _ARG_MASK
+        ev_complete, ev_retire, ev_phase, ev_window = (
+            _EV_COMPLETE, _EV_RETIRE, _EV_PHASE, _EV_WINDOW,
+        )
+        complete_bits = ev_complete << kshift
+        retire_bits = ev_retire << kshift
+        # Loop-stable array bindings for the two inlined hot handlers (these
+        # list objects are appended to but never rebound).
+        r_wl, r_gi, r_tier = self._r_wl, self._r_gi, self._r_tier
+        r_station, r_tissue = self._r_station, self._r_tissue
+        r_ttor, r_service = self._r_ttor, self._r_service
+        st_busy, st_q = self._st_busy, self._st_q
+        tier_inflight, occ_tier = self._tier_inflight, self._occ_tier
+        tc_ins, tc_occ, tc_cls = self._tc_ins, self._tc_occ, self._tc_cls
+        w_op, w_bytes = self._w_op, self._w_bytes
+        stat_completed, stat_bytes = self._stat_completed, self._stat_bytes
+        stat_latsum, stat_latcnt = self._stat_latsum, self._stat_latcnt
+        stat_res, timeline_acc = self._stat_res, self._timeline_acc
+        out, free = self._out, self._r_free
+        irq = self.irq
+        irq_cap = self.irq_capacity
+        pipe = self._pipe
+        res_random = self._res_random
+        rk = self._reservoir_k
+        # Bindings for the inlined admission/issue path (see _pump).
+        tor_cap = self.tor_capacity
+        st_slots = self._st_slots
+        phit, llc_svc, svc = self._w_phit, self._w_llc_svc, self._w_svc
+        rnd = self.rng.random
+        rr_wi, rr_core = self._rr_wi, self._rr_core
+        n_rr = len(rr_wi)
+        effmlp, limit = self._w_effmlp, self._limit
+        frac_of, cur_tier = self._w_frac, self._phase_tier
+        unthrottled = self._unthrottled
+        while heap:
+            t, packed = pop(heap)
             if t > sim_ns:
                 break
             self.now = t
-            if kind == _EV_COMPLETE:
-                self._complete(arg)  # type: ignore[arg-type]
-            elif kind == _EV_RETIRE:
-                self._retire(arg)  # type: ignore[arg-type]
-            elif kind == _EV_PHASE:
-                self._phase_flip(arg)  # type: ignore[arg-type]
-            elif kind == _EV_WINDOW:
+            kind = (packed >> kshift) & 0xF
+            if kind == ev_retire:
+                # --- inlined _retire (keep in sync with the method) -------
+                rid = packed & amask
+                tor_used = self.tor_used - 1
+                tier = r_tier[rid]
+                tier_inflight[tier] -= 1
+                wi = r_wl[rid]
+                residency = t - r_ttor[rid]
+                occ_tier[tier] += residency
+                if r_station[rid] != _LLC:
+                    tc_ins[tier] += 1
+                    tc_occ[tier] += residency
+                    tc_cls[tier][w_op[wi]] += 1
+                stat_completed[wi] += 1
+                nbytes = w_bytes[wi][tier]
+                stat_bytes[wi] += nbytes
+                timeline_acc[wi] += nbytes
+                latency = t - r_tissue[rid]
+                stat_latsum[wi] += latency
+                cnt = stat_latcnt[wi] + 1
+                stat_latcnt[wi] = cnt
+                res = stat_res[wi]
+                if len(res) < rk:
+                    res.append(latency)
+                else:
+                    j = int(res_random() * cnt)
+                    if j < rk:
+                        res[j] = latency
+                out[r_gi[rid]] -= 1
+                free.append(rid)
+                if len(irq) < irq_cap:
+                    self.tor_used = tor_used
+                    self._fill_irq()
+                # --- inlined _pump (keep in sync with the method): admit
+                # IRQ heads into freed ToR entries, refill issue slots ------
+                while irq and tor_used < tor_cap:
+                    arid = irq.popleft()
+                    tor_used += 1
+                    if tor_used > self.tor_peak:
+                        self.tor_peak = tor_used
+                    self.tor_inserts += 1
+                    atier = r_tier[arid]
+                    tier_inflight[atier] += 1
+                    r_ttor[arid] = t
+                    awi = r_wl[arid]
+                    p = phit[awi]
+                    if p == 2.0:
+                        station = _LLC
+                        service = llc_svc[awi]
+                    elif p >= 0.0 and rnd() < p:
+                        station = _LLC
+                        service = llc_svc[awi]
+                    else:
+                        station = atier
+                        service = svc[awi][atier]
+                    r_station[arid] = station
+                    r_service[arid] = service
+                    if st_busy[station] < st_slots[station]:
+                        st_busy[station] += 1
+                        seq = self._seq + 1
+                        self._seq = seq
+                        push(heap, (t + service,
+                                    (seq << _SEQ_SHIFT) | complete_bits | arid))
+                    else:
+                        st_q[station].append(arid)
+                    if len(irq) < irq_cap:
+                        ptr = self._rr_ptr
+                        misses = 0
+                        while len(irq) < irq_cap and misses < n_rr:
+                            gi = ptr
+                            ptr += 1
+                            if ptr == n_rr:
+                                ptr = 0
+                            iwi = rr_wi[gi]
+                            if out[gi] >= effmlp[iwi]:
+                                misses += 1
+                                continue
+                            lim = limit[iwi]
+                            if lim is not None and rr_core[gi] >= lim:
+                                misses += 1
+                                continue
+                            frac = frac_of[iwi]
+                            if frac is None:
+                                itier = cur_tier[iwi]
+                            else:
+                                itier = _DDR if rnd() < frac else _CXL
+                            if not unthrottled[iwi] and not self._take_token(
+                                iwi, svc[iwi][itier]
+                            ):
+                                misses += 1
+                                continue
+                            if free:
+                                nrid = free.pop()
+                                r_wl[nrid] = iwi
+                                r_gi[nrid] = gi
+                                r_tier[nrid] = itier
+                                r_tissue[nrid] = t
+                            else:
+                                nrid = len(r_wl)
+                                r_wl.append(iwi)
+                                r_gi.append(gi)
+                                r_tier.append(itier)
+                                r_station.append(itier)
+                                r_tissue.append(t)
+                                r_ttor.append(0.0)
+                                r_service.append(0.0)
+                            out[gi] += 1
+                            irq.append(nrid)
+                            misses = 0
+                        self._rr_ptr = ptr
+                self.tor_used = tor_used
+            elif kind == ev_complete:
+                # --- inlined _complete: free the server, pull the next
+                # queued request, start the return flight ------------------
+                rid = packed & amask
+                station = r_station[rid]
+                q = st_q[station]
+                if q:
+                    nxt = q.popleft()
+                    seq = self._seq + 1
+                    self._seq = seq
+                    push(heap, (t + r_service[nxt],
+                                (seq << _SEQ_SHIFT) | complete_bits | nxt))
+                else:
+                    st_busy[station] -= 1
+                if station == _LLC:
+                    retire(rid)  # LLC: no return flight, retire in place
+                else:
+                    pipeline = pipe[r_tier[rid]]
+                    if pipeline > 0.0:
+                        seq = self._seq + 1
+                        self._seq = seq
+                        push(heap, (t + pipeline,
+                                    (seq << _SEQ_SHIFT) | retire_bits | rid))
+                    else:
+                        retire(rid)
+            elif kind == ev_phase:
+                self._phase_flip(packed & amask)
+            elif kind == ev_window:
                 self._window()
-            elif kind == _EV_TOKEN:
-                wi = arg  # type: ignore[assignment]
+            else:  # _EV_TOKEN
+                wi = packed & amask
                 self._token_wait[wi] = False
                 self._refill_issue(wi)
         self.now = sim_ns
-        self._advance_occupancy()
+        # Charge partial residency for requests still holding ToR entries at
+        # the horizon (admitted = allocated minus free-list minus staged in
+        # the IRQ): Σ residency == ∫ occupancy dt, exactly.
+        dead = set(free)
+        dead.update(irq)
+        for rid in range(len(r_wl)):
+            if rid not in dead:
+                occ_tier[r_tier[rid]] += sim_ns - r_ttor[rid]
+        self.tor_occupancy_integral = occ_tier[_DDR] + occ_tier[_CXL]
+        self._materialize_counters()
+        # Materialize flat accumulators into the public WorkloadStats.
+        for wi, w in enumerate(self.workloads):
+            st = self.stats[w.name]
+            st.completed = self._stat_completed[wi]
+            st.bytes = self._stat_bytes[wi]
+            st.latency_sum = self._stat_latsum[wi]
+            st.latency_count = self._stat_latcnt[wi]
+            st.latency_samples = self._stat_res[wi]
         return SimResult(
             sim_ns=sim_ns,
             stats=self.stats,
@@ -521,8 +899,11 @@ class TieredMemorySim:
             tor_peak=self.tor_peak,
             tor_occupancy_integral=self.tor_occupancy_integral,
             tor_inserts=self.tor_inserts,
-            decisions=self.decisions,
-            per_tier_occupancy_integral=dict(self._per_tier_occ),
+            decisions=self.control.decisions,
+            per_tier_occupancy_integral={
+                "ddr": self._occ_tier[_DDR],
+                "cxl": self._occ_tier[_CXL],
+            },
         )
 
 

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core.controller import Decision, MikuController
 from repro.core.littles_law import OpClass, TierCounters
+from repro.core.substrate import ControlLoop, WindowedCounters
 from repro.core.tiers import (
     HBM_TIER,
     HOST_TIER,
@@ -81,6 +82,11 @@ class TransferQueue:
     (``advance``).  Fast-tier traffic (HBM reads/writes of the step itself)
     is reported via ``account_fast`` so the controller sees the same two-tier
     picture as on the x86 platforms.
+
+    The queue is a :class:`~repro.core.substrate.MemorySubstrate`: a
+    :class:`~repro.core.substrate.ControlLoop` owns window scheduling,
+    counter deltas, and the decision history; ``advance`` merely interleaves
+    the loop's window boundaries with transfer completions in time order.
     """
 
     def __init__(
@@ -93,22 +99,41 @@ class TransferQueue:
         self.fast = fast
         self.slow = slow
         self.controller = controller
-        self.window_ns = window_ns
         self.now = 0.0
+        self._counters = WindowedCounters()
         self.counters: Dict[str, TierCounters] = {
-            "fast": TierCounters(),
-            "slow": TierCounters(),
+            "fast": self._counters.fast,
+            "slow": self._counters.slow,
         }
-        self._marks = {k: v.snapshot() for k, v in self.counters.items()}
         self._inflight: List[_InFlight] = []
         self._pending: List[Tuple[int, OpClass]] = []
         self._decision = Decision(
             max_concurrency=None, rate_factor=1.0, phase=None  # type: ignore[arg-type]
         )
-        self._next_window = window_ns
-        self._tokens = 0.0
-        self._last_refill = 0.0
-        self.decisions: List[Decision] = []
+        # record=False: nothing consumes per-window telemetry records here,
+        # and a long-lived queue fires windows forever.
+        self.control = ControlLoop(
+            self, controller, window_ns=window_ns, record=False
+        )
+
+    # -- substrate protocol -------------------------------------------------
+    @property
+    def clock_ns(self) -> float:
+        return self.now
+
+    def counters_delta(self) -> Tuple[TierCounters, TierCounters]:
+        return self._counters.delta()
+
+    def apply(self, decision: Decision) -> None:
+        self._decision = decision
+
+    @property
+    def window_ns(self) -> float:
+        return self.control.window_ns
+
+    @property
+    def decisions(self) -> List[Decision]:
+        return self.control.decisions
 
     # -- instrumentation ----------------------------------------------------
     def account_fast(self, nbytes: int, duration_ns: float, op: OpClass) -> None:
@@ -181,20 +206,21 @@ class TransferQueue:
         return 1.0 + c * min(1.0, self.slow_backlog() / pool)
 
     def advance(self, dt_ns: float) -> None:
-        """Move the simulated clock; retire completed transfers; run MIKU
-        windows on schedule."""
+        """Move the simulated clock; retire completed transfers; fire MIKU
+        windows (via the control loop) on schedule, in time order."""
         target = self.now + dt_ns
         while True:
             next_evt = min(
                 [f.t_complete for f in self._inflight if f.t_complete <= target],
                 default=None,
             )
-            boundary = self._next_window if self._next_window <= target else None
+            nw = self.control.next_window_ns
+            boundary = nw if nw <= target else None
             if next_evt is None and boundary is None:
                 break
             if boundary is not None and (next_evt is None or boundary <= next_evt):
                 self.now = boundary
-                self._run_window()
+                self.control.fire()
             else:
                 self.now = next_evt  # type: ignore[assignment]
                 done = [f for f in self._inflight if f.t_complete <= self.now]
@@ -204,17 +230,6 @@ class TransferQueue:
                 for f in done:
                     self.counters["slow"].record(f.op, f.t_complete - f.t_enqueue)
         self.now = target
-
-    def _run_window(self) -> None:
-        self._next_window += self.window_ns
-        if self.controller is None:
-            return
-        deltas = {}
-        for k, c in self.counters.items():
-            deltas[k] = c.delta(self._marks[k])
-            self._marks[k] = c.snapshot()
-        self._decision = self.controller.window(deltas["fast"], deltas["slow"])
-        self.decisions.append(self._decision)
 
     @property
     def decision(self) -> Decision:

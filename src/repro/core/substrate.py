@@ -1,0 +1,284 @@
+"""Unified control-plane substrate — one windowed feedback loop, many backends.
+
+The paper's contribution is a single feedback law: sample shared-queue
+counters once per window, estimate per-tier service times (Little's Law),
+decide how much slow-tier concurrency/rate to allow, apply the decision.
+Before this module the repo re-implemented that window/snapshot/delta/apply
+plumbing in five places (DES, TransferQueue, serving cluster, straggler
+governor, sweep runner).  Now each of those systems is merely a
+:class:`MemorySubstrate` — *what* is measured and *how* decisions take
+effect — while :class:`ControlLoop` owns *when*: window scheduling, counter
+snapshot/delta bookkeeping, decision history, and per-window telemetry.
+
+A substrate exposes three things:
+
+  * ``clock_ns``        — its notion of time (simulated or wall).
+  * ``counters_delta()``— counters accumulated since the previous window,
+    consumed on read.  Canonically a ``(fast, slow)`` pair of
+    :class:`~repro.core.littles_law.TierCounters`; substrates with a
+    different decision law (the straggler governor's per-host step times)
+    may return any tuple their paired controller's ``window(*delta)``
+    accepts.
+  * ``apply(decision)`` — make the controller's decision take effect
+    (core masks + token buckets in the DES, in-flight caps on the transfer
+    path, per-host dispatch shares in the launcher).
+
+:class:`WindowedCounters` is the shared snapshot/delta helper so substrates
+never hand-roll mark bookkeeping again.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Protocol, Sequence, Tuple
+
+from repro.core.littles_law import TierCounters
+
+
+class MemorySubstrate(Protocol):
+    """Anything the control loop can instrument and throttle."""
+
+    @property
+    def clock_ns(self) -> float:
+        """The substrate's current time in nanoseconds."""
+        ...
+
+    def counters_delta(self) -> Tuple[Any, ...]:
+        """Counters accumulated since the last call (consumed on read).
+
+        Canonical form is ``(fast: TierCounters, slow: TierCounters)``.
+        """
+        ...
+
+    def apply(self, decision: Any) -> None:
+        """Apply one window's decision to the substrate."""
+        ...
+
+
+class WindowedCounters:
+    """A (fast, slow) pair of cumulative TierCounters with consume-on-read
+    window deltas — the snapshot/mark plumbing every substrate used to
+    duplicate."""
+
+    __slots__ = ("fast", "slow", "_fast_mark", "_slow_mark")
+
+    def __init__(self) -> None:
+        self.fast = TierCounters()
+        self.slow = TierCounters()
+        self._fast_mark = self.fast.snapshot()
+        self._slow_mark = self.slow.snapshot()
+
+    def delta(self) -> Tuple[TierCounters, TierCounters]:
+        """(fast, slow) accumulated since the previous ``delta()`` call."""
+        df = self.fast.delta(self._fast_mark)
+        ds = self.slow.delta(self._slow_mark)
+        self._fast_mark = self.fast.snapshot()
+        self._slow_mark = self.slow.snapshot()
+        return df, ds
+
+    def reset(self) -> None:
+        self.fast = TierCounters()
+        self.slow = TierCounters()
+        self._fast_mark = self.fast.snapshot()
+        self._slow_mark = self.slow.snapshot()
+
+
+@dataclasses.dataclass
+class WindowRecord:
+    """Telemetry for one control window."""
+
+    index: int
+    t_ns: float
+    delta: Tuple[Any, ...]
+    decision: Any
+
+
+class ControlLoop:
+    """Drives a decision law over a substrate's windows.
+
+    The loop owns the window schedule (``window_ns`` boundaries on the
+    substrate's clock), pulls counter deltas from the substrate, feeds them
+    to the controller's ``window(*delta)``, records the decision, and hands
+    it back to the substrate via ``apply``.
+
+    Two driving styles, matching the two kinds of hosts:
+
+      * event-driven (the DES schedules :attr:`next_window_ns` as a sim
+        event; the transfer queue's ``advance`` interleaves that boundary
+        with transfer completions in time order; the trainer fires once per
+        step): call :meth:`fire` exactly when a window elapses.
+      * poll-driven (hosts that move their clock in large, irregular
+        steps): call :meth:`poll` after advancing; every elapsed boundary
+        fires, in order.
+
+    ``controller=None`` keeps the window cadence (hosts may piggyback
+    periodic work on it) but skips estimation/decisions entirely.
+    """
+
+    def __init__(
+        self,
+        substrate: MemorySubstrate,
+        controller: Optional[Any] = None,
+        *,
+        window_ns: float = 1_000_000.0,
+        record: bool = True,
+        max_history: Optional[int] = None,
+        on_window: Optional[Callable[[WindowRecord], None]] = None,
+    ) -> None:
+        self.substrate = substrate
+        self.controller = controller
+        self.window_ns = float(window_ns)
+        self.next_window_ns = float(window_ns)
+        self.decisions: List[Any] = []
+        self.records: List[WindowRecord] = []
+        self._record = record
+        #: Cap on retained decision/telemetry history — set it for
+        #: long-lived loops (a trainer fires one window per step, forever);
+        #: None keeps everything (finite sims that return the history).
+        self._max_history = max_history
+        self._on_window = on_window
+        self._windows_run = 0
+
+    # -- driving ----------------------------------------------------------
+    def due(self, now: Optional[float] = None) -> bool:
+        now = self.substrate.clock_ns if now is None else now
+        return now >= self.next_window_ns
+
+    def fire(self) -> Optional[Any]:
+        """Run one window now and advance the schedule by ``window_ns``."""
+        self.next_window_ns += self.window_ns
+        if self.controller is None:
+            return None
+        delta = self.substrate.counters_delta()
+        decision = self.controller.window(*delta)
+        self.decisions.append(decision)
+        self._windows_run += 1
+        if self._record or self._on_window is not None:
+            rec = WindowRecord(
+                index=self._windows_run,
+                t_ns=self.substrate.clock_ns,
+                delta=delta,
+                decision=decision,
+            )
+            if self._record:
+                self.records.append(rec)
+            if self._on_window is not None:
+                self._on_window(rec)
+        if self._max_history is not None:
+            m = self._max_history
+            if len(self.decisions) > 2 * m:
+                del self.decisions[:-m]
+            if len(self.records) > 2 * m:
+                del self.records[:-m]
+        self.substrate.apply(decision)
+        return decision
+
+    def poll(self, now: Optional[float] = None) -> List[Any]:
+        """Fire every window boundary the clock has passed (in order)."""
+        now = self.substrate.clock_ns if now is None else now
+        fired: List[Any] = []
+        while now >= self.next_window_ns:
+            fired.append(self.fire())
+        return fired
+
+    # -- bookkeeping ------------------------------------------------------
+    @property
+    def windows_run(self) -> int:
+        return self._windows_run
+
+    def telemetry(self) -> dict:
+        """Summary counters for dashboards/benchmark CSVs."""
+        restricted = sum(
+            1 for d in self.decisions if getattr(d, "restricted", False)
+        )
+        return {
+            "windows": self._windows_run,
+            "decisions": len(self.decisions),
+            "restricted_windows": restricted,
+            "window_ns": self.window_ns,
+        }
+
+    def reset(self) -> None:
+        self.next_window_ns = self.window_ns
+        self.decisions.clear()
+        self.records.clear()
+        self._windows_run = 0
+        if self.controller is not None and hasattr(self.controller, "reset"):
+            self.controller.reset()
+
+
+class ReplaySubstrate:
+    """A substrate that replays a recorded counter trace — the harness for
+    proving any ControlLoop + controller pairing reproduces a live system's
+    decision sequence (see tests/test_substrate.py)."""
+
+    def __init__(
+        self,
+        deltas: Sequence[Tuple[Any, ...]],
+        *,
+        window_ns: float = 1.0,
+    ) -> None:
+        self._deltas = list(deltas)
+        self._i = 0
+        self.window_ns = window_ns
+        self.applied: List[Any] = []
+
+    @property
+    def clock_ns(self) -> float:
+        return self._i * self.window_ns
+
+    @property
+    def exhausted(self) -> bool:
+        return self._i >= len(self._deltas)
+
+    def counters_delta(self) -> Tuple[Any, ...]:
+        delta = self._deltas[self._i]
+        self._i += 1
+        return delta
+
+    def apply(self, decision: Any) -> None:
+        self.applied.append(decision)
+
+
+class StepTimingSubstrate:
+    """Per-host step-service-time substrate for the straggler governor.
+
+    The launcher records each host's step wall time; every window the
+    control loop hands the governor one mean step time per host (0.0 for a
+    host that missed the window entirely — the governor's worst signal) and
+    applies the returned :class:`~repro.core.controller.HostHealth` list as
+    per-host dispatch rate factors.
+    """
+
+    def __init__(self, n_hosts: int) -> None:
+        self.n_hosts = n_hosts
+        self._sums = [0.0] * n_hosts
+        self._counts = [0] * n_hosts
+        self._clock_ns = 0.0
+        self.health: List[Any] = []
+
+    @property
+    def clock_ns(self) -> float:
+        return self._clock_ns
+
+    def record_step(self, host: int, seconds: float) -> None:
+        self._sums[host] += seconds
+        self._counts[host] += 1
+        self._clock_ns += seconds * 1e9
+
+    def counters_delta(self) -> Tuple[List[float], ...]:
+        times = [
+            self._sums[h] / self._counts[h] if self._counts[h] else 0.0
+            for h in range(self.n_hosts)
+        ]
+        self._sums = [0.0] * self.n_hosts
+        self._counts = [0] * self.n_hosts
+        return (times,)
+
+    def apply(self, healths: List[Any]) -> None:
+        self.health = healths
+
+    def rate_factor(self, host: int) -> float:
+        if not self.health:
+            return 1.0
+        return self.health[host].rate_factor

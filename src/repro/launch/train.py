@@ -28,6 +28,7 @@ import numpy as np
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs import get_arch
 from repro.core.controller import StragglerGovernor
+from repro.core.substrate import ControlLoop, StepTimingSubstrate
 from repro.data.pipeline import HostDataLoader, SyntheticTokenDataset
 from repro.distributed.autosharding import logical_sharding_context
 from repro.distributed.sharding import TRAIN_RULES, tree_shardings
@@ -86,7 +87,16 @@ class Trainer:
         )
         self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
         self.ckpt_every = ckpt_every
+        # Straggler control plane: per-host step times flow through the same
+        # substrate/ControlLoop interface as the memory tiers (DESIGN.md §5).
+        # Single host here; the same loop runs fleet-wide at scale.  One
+        # window per step (the governor's native cadence).
         self.governor = StragglerGovernor(n_hosts=1)
+        self.step_substrate = StepTimingSubstrate(n_hosts=1)
+        self.straggler_loop = ControlLoop(
+            self.step_substrate, self.governor, window_ns=1.0, record=False,
+            max_history=64,
+        )
         self.grad_compression = grad_compression
         self._preempted = False
 
@@ -134,9 +144,11 @@ class Trainer:
                 )
                 loss = float(jax.device_get(metrics["loss"]))
                 dt = time.time() - t0
-                # Straggler governor: per-host step service times (single
-                # host here; the same estimator runs fleet-wide at scale).
-                self.governor.window([dt])
+                # Straggler governor window: record this host's step service
+                # time, fire the control loop (estimate → HostHealth →
+                # per-host dispatch rates applied back to the substrate).
+                self.step_substrate.record_step(0, dt)
+                self.straggler_loop.fire()
                 if step % log_every == 0:
                     print(f"[train] step={step} loss={loss:.4f} "
                           f"({dt*1e3:.0f} ms)")

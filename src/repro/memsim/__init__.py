@@ -15,6 +15,7 @@ from repro.memsim.runner import (
     miku_comparison,
     sync_interference,
 )
+from repro.memsim.sweep import SimJob, run_job, run_sweep
 
 __all__ = [
     "calibrate_estimator",
@@ -25,4 +26,7 @@ __all__ = [
     "llc_partition_sweep",
     "miku_comparison",
     "sync_interference",
+    "SimJob",
+    "run_job",
+    "run_sweep",
 ]

@@ -2,6 +2,12 @@
 
 Every function returns plain dict/list results; :mod:`benchmarks` formats
 them as CSV.  All bandwidths are GB/s, latencies ns, times simulator-ns.
+
+Execution goes through :mod:`repro.memsim.sweep`: each figure builds its
+matrix of independent :class:`~repro.memsim.sweep.SimJob` cells and hands
+the whole batch to :func:`~repro.memsim.sweep.run_sweep`, which fans out
+over a process pool when ``REPRO_SWEEP_PROCS`` (or an explicit
+``processes=``) asks for it — serial and parallel runs are bit-identical.
 """
 
 from __future__ import annotations
@@ -9,61 +15,66 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.controller import MikuController
-from repro.core.des import SimResult, TieredMemorySim, WorkloadSpec
-from repro.core.device_model import PlatformModel, platform_a
+from repro.core.des import WorkloadSpec
+from repro.core.device_model import PlatformModel
 from repro.core.littles_law import OpClass
-from repro.memsim.calibration import default_miku
+from repro.memsim.sweep import SimJob, run_sweep
 from repro.memsim.workloads import alternating_bw_pair, bw_test, lat_share, lat_test
 
 _BW_SIM_NS = 120_000.0
 _CORUN_SIM_NS = 300_000.0
 
 
-def _run(
+def _job(
     platform: PlatformModel,
     workloads: List[WorkloadSpec],
     sim_ns: float,
     *,
-    controller: Optional[MikuController] = None,
+    miku: bool = False,
     seed: int = 0,
     granularity: int = 4,
     window_ns: float = 10_000.0,
-) -> SimResult:
-    sim = TieredMemorySim(
-        platform,
-        workloads,
+) -> SimJob:
+    return SimJob(
+        platform=platform,
+        workloads=workloads,
+        sim_ns=sim_ns,
         seed=seed,
         granularity=granularity,
-        controller=controller,
         window_ns=window_ns,
+        miku=miku,
     )
-    return sim.run(sim_ns)
 
 
 # -- Fig. 3: single-threaded and peak bandwidth, DDR vs CXL -----------------
 
 
 def bandwidth_matrix(
-    platform: PlatformModel, threads: Tuple[int, ...] = (1, 16)
+    platform: PlatformModel,
+    threads: Tuple[int, ...] = (1, 16),
+    processes: Optional[int] = None,
 ) -> List[dict]:
+    cells = [
+        (op, n, tier)
+        for op in OpClass
+        for n in threads
+        for tier in ("ddr", "cxl")
+    ]
+    jobs = [
+        _job(platform, [bw_test(tier, op, n)], _BW_SIM_NS)
+        for op, n, tier in cells
+    ]
     rows = []
-    for op in OpClass:
-        for n in threads:
-            for tier in ("ddr", "cxl"):
-                wl = bw_test(tier, op, n)
-                res = _run(platform, [wl], _BW_SIM_NS)
-                rows.append(
-                    {
-                        "op": op.value,
-                        "tier": tier,
-                        "threads": n,
-                        "bandwidth_gbps": res.bandwidth(wl.name),
-                        "peak_model_gbps": platform.device_for(
-                            tier
-                        ).peak_bandwidth_gbps(op),
-                    }
-                )
+    for (op, n, tier), job, res in zip(cells, jobs, run_sweep(jobs, processes)):
+        rows.append(
+            {
+                "op": op.value,
+                "tier": tier,
+                "threads": n,
+                "bandwidth_gbps": res.bandwidth(job.workloads[0].name),
+                "peak_model_gbps": platform.device_for(tier).peak_bandwidth_gbps(op),
+            }
+        )
     return rows
 
 
@@ -71,30 +82,36 @@ def bandwidth_matrix(
 
 
 def latency_matrix(
-    platform: PlatformModel, threads: Tuple[int, ...] = (1, 2, 4, 8, 16)
+    platform: PlatformModel,
+    threads: Tuple[int, ...] = (1, 2, 4, 8, 16),
+    processes: Optional[int] = None,
 ) -> List[dict]:
+    cells = [(tier, n) for tier in ("ddr", "cxl") for n in threads]
+    jobs = [
+        _job(platform, [lat_test(tier, OpClass.LOAD, n)], 400_000.0, granularity=1)
+        for tier, n in cells
+    ]
     rows = []
-    for tier in ("ddr", "cxl"):
-        for n in threads:
-            wl = lat_test(tier, OpClass.LOAD, n)
-            res = _run(platform, [wl], 400_000.0, granularity=1)
-            st = res.stats[wl.name]
-            rows.append(
-                {
-                    "tier": tier,
-                    "threads": n,
-                    "avg_ns": st.mean_latency_ns(),
-                    "p50_ns": st.percentile_ns(0.50),
-                    "p99_ns": st.percentile_ns(0.99),
-                }
-            )
+    for (tier, n), job, res in zip(cells, jobs, run_sweep(jobs, processes)):
+        st = res.stats[job.workloads[0].name]
+        rows.append(
+            {
+                "tier": tier,
+                "threads": n,
+                "avg_ns": st.mean_latency_ns(),
+                "p50_ns": st.percentile_ns(0.50),
+                "p99_ns": st.percentile_ns(0.99),
+            }
+        )
     return rows
 
 
 # -- Fig. 2: tiered memory management schemes --------------------------------
 
 
-def tiering_schemes(platform: PlatformModel, op: OpClass) -> Dict[str, float]:
+def tiering_schemes(
+    platform: PlatformModel, op: OpClass, processes: Optional[int] = None
+) -> Dict[str, float]:
     """Aggregate bandwidth of two 16-thread copies under each scheme.
 
     * upper   — one copy, WSS fully in DDR (max achievable).
@@ -106,34 +123,20 @@ def tiering_schemes(platform: PlatformModel, op: OpClass) -> Dict[str, float]:
       "page migrations significantly degrade tiered memory performance".
     """
     out = {}
-    up = _run(platform, [bw_test("ddr", op, 16, name="a")], _BW_SIM_NS)
+    up, low = run_sweep(
+        [
+            _job(platform, [bw_test("ddr", op, 16, name="a")], _BW_SIM_NS),
+            _job(platform, [bw_test("cxl", op, 16, name="a")], _BW_SIM_NS),
+        ],
+        processes,
+    )
     out["upper_ddr_only"] = up.bandwidth("a")
-    low = _run(platform, [bw_test("cxl", op, 16, name="a")], _BW_SIM_NS)
     out["lower_cxl_only"] = low.bandwidth("a")
 
-    nat = _run(
-        platform,
-        [
-            bw_test("ddr", op, 16, name="a", miku_managed=False),
-            bw_test("cxl", op, 16, name="b"),
-        ],
-        _CORUN_SIM_NS,
-    )
-    out["native"] = nat.bandwidth("a") + nat.bandwidth("b")
-
+    # The remaining schemes depend on the measured upper/lower split.
     frac = out["upper_ddr_only"] / max(
         out["upper_ddr_only"] + out["lower_cxl_only"], 1e-9
     )
-    inter = _run(
-        platform,
-        [
-            bw_test("ddr", op, 16, name="a", ddr_fraction=frac, miku_managed=False),
-            bw_test("cxl", op, 16, name="b", ddr_fraction=frac, miku_managed=False),
-        ],
-        _CORUN_SIM_NS,
-    )
-    out["interleave"] = inter.bandwidth("a") + inter.bandwidth("b")
-
     migration = WorkloadSpec(
         name="kmigrated",
         op=OpClass.STORE,
@@ -143,15 +146,42 @@ def tiering_schemes(platform: PlatformModel, op: OpClass) -> Dict[str, float]:
         ddr_fraction=0.5,
         miku_managed=False,
     )
-    osm = _run(
-        platform,
+    nat, inter, osm = run_sweep(
         [
-            bw_test("ddr", op, 16, name="a", ddr_fraction=frac, miku_managed=False),
-            bw_test("cxl", op, 16, name="b", ddr_fraction=frac, miku_managed=False),
-            migration,
+            _job(
+                platform,
+                [
+                    bw_test("ddr", op, 16, name="a", miku_managed=False),
+                    bw_test("cxl", op, 16, name="b"),
+                ],
+                _CORUN_SIM_NS,
+            ),
+            _job(
+                platform,
+                [
+                    bw_test("ddr", op, 16, name="a", ddr_fraction=frac,
+                            miku_managed=False),
+                    bw_test("cxl", op, 16, name="b", ddr_fraction=frac,
+                            miku_managed=False),
+                ],
+                _CORUN_SIM_NS,
+            ),
+            _job(
+                platform,
+                [
+                    bw_test("ddr", op, 16, name="a", ddr_fraction=frac,
+                            miku_managed=False),
+                    bw_test("cxl", op, 16, name="b", ddr_fraction=frac,
+                            miku_managed=False),
+                    migration,
+                ],
+                _CORUN_SIM_NS,
+            ),
         ],
-        _CORUN_SIM_NS,
+        processes,
     )
+    out["native"] = nat.bandwidth("a") + nat.bandwidth("b")
+    out["interleave"] = inter.bandwidth("a") + inter.bandwidth("b")
     out["os_managed"] = osm.bandwidth("a") + osm.bandwidth("b")
     out["ideal_combined"] = out["upper_ddr_only"] + out["lower_cxl_only"]
     return out
@@ -161,15 +191,22 @@ def tiering_schemes(platform: PlatformModel, op: OpClass) -> Dict[str, float]:
 
 
 def corun_matrix(
-    platform: PlatformModel, n_threads: int = 16
+    platform: PlatformModel,
+    n_threads: int = 16,
+    processes: Optional[int] = None,
 ) -> List[dict]:
-    rows = []
-    for op in OpClass:
+    ops = list(OpClass)
+    jobs = []
+    for op in ops:
         a = bw_test("ddr", op, n_threads, name="ddr", miku_managed=False)
-        alone = _run(platform, [a], _BW_SIM_NS)
         c = bw_test("cxl", op, n_threads, name="cxl")
-        cxl_alone = _run(platform, [c], _BW_SIM_NS)
-        both = _run(platform, [a, c], _CORUN_SIM_NS)
+        jobs.append(_job(platform, [a], _BW_SIM_NS))
+        jobs.append(_job(platform, [c], _BW_SIM_NS))
+        jobs.append(_job(platform, [a, c], _CORUN_SIM_NS))
+    results = run_sweep(jobs, processes)
+    rows = []
+    for i, op in enumerate(ops):
+        alone, cxl_alone, both = results[3 * i : 3 * i + 3]
         ddr_alone_bw = alone.bandwidth("ddr")
         cxl_alone_bw = cxl_alone.bandwidth("cxl")
         rows.append(
@@ -192,10 +229,13 @@ def corun_matrix(
     return rows
 
 
-def tor_insert_bandwidth_correlation(platform: PlatformModel) -> float:
+def tor_insert_bandwidth_correlation(
+    platform: PlatformModel, processes: Optional[int] = None
+) -> float:
     """Pearson correlation between ToR insertion rate and delivered bandwidth
     across scenarios (paper: r = 0.998)."""
-    xs, ys = [], []
+    cells = []
+    jobs = []
     for op in OpClass:
         for scenario in ("ddr", "cxl", "both"):
             wls: List[WorkloadSpec] = []
@@ -203,9 +243,12 @@ def tor_insert_bandwidth_correlation(platform: PlatformModel) -> float:
                 wls.append(bw_test("ddr", op, 16, name="ddr", miku_managed=False))
             if scenario in ("cxl", "both"):
                 wls.append(bw_test("cxl", op, 16, name="cxl"))
-            res = _run(platform, wls, _BW_SIM_NS)
-            xs.append(res.tor_inserts / res.sim_ns)
-            ys.append(sum(res.bandwidth(w.name) for w in wls))
+            cells.append(wls)
+            jobs.append(_job(platform, wls, _BW_SIM_NS))
+    xs, ys = [], []
+    for wls, res in zip(cells, run_sweep(jobs, processes)):
+        xs.append(res.tor_inserts / res.sim_ns)
+        ys.append(sum(res.bandwidth(w.name) for w in wls))
     n = len(xs)
     mx, my = sum(xs) / n, sum(ys) / n
     cov = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
@@ -221,24 +264,25 @@ def llc_partition_sweep(
     platform: PlatformModel,
     wss_mb: float,
     allocs: Tuple[float, ...] = (0.95, 0.75, 0.5, 0.25, 0.05),
+    processes: Optional[int] = None,
 ) -> List[dict]:
     """Two store bw-tests with strong locality, DDR- vs CXL-backed; sweep the
     DDR workload's LLC share (CAT).  ``free competition`` approximated by the
     proportional 0.5 point for equal-WSS workloads."""
-    rows = []
     cap = platform.llc_capacity_mb
+    jobs = []
     for alloc in allocs:
-        ddr_alloc = alloc * cap
-        cxl_alloc = (1.0 - alloc) * cap
         a = bw_test(
             "ddr", OpClass.STORE, 16, name="ddr",
-            wss_mb=wss_mb, llc_alloc_mb=ddr_alloc, miku_managed=False,
+            wss_mb=wss_mb, llc_alloc_mb=alloc * cap, miku_managed=False,
         )
         b = bw_test(
             "cxl", OpClass.STORE, 16, name="cxl",
-            wss_mb=wss_mb, llc_alloc_mb=cxl_alloc, miku_managed=False,
+            wss_mb=wss_mb, llc_alloc_mb=(1.0 - alloc) * cap, miku_managed=False,
         )
-        res = _run(platform, [a, b], _CORUN_SIM_NS)
+        jobs.append(_job(platform, [a, b], _CORUN_SIM_NS))
+    rows = []
+    for alloc, res in zip(allocs, run_sweep(jobs, processes)):
         rows.append(
             {
                 "wss_mb": wss_mb,
@@ -255,24 +299,26 @@ def llc_partition_sweep(
 
 
 def sync_interference(
-    platform: PlatformModel, bg_threads: Tuple[int, ...] = (0, 4, 8, 16)
+    platform: PlatformModel,
+    bg_threads: Tuple[int, ...] = (0, 4, 8, 16),
+    processes: Optional[int] = None,
 ) -> List[dict]:
+    cells = [(tier, n) for tier in ("ddr", "cxl") for n in bg_threads]
+    jobs = []
+    for tier, n in cells:
+        wls = [lat_share()]
+        if n > 0:
+            wls.append(bw_test(tier, OpClass.LOAD, n, name="bg", miku_managed=False))
+        jobs.append(_job(platform, wls, 200_000.0, granularity=1))
     rows = []
-    for tier in ("ddr", "cxl"):
-        for n in bg_threads:
-            wls = [lat_share()]
-            if n > 0:
-                wls.append(
-                    bw_test(tier, OpClass.LOAD, n, name="bg", miku_managed=False)
-                )
-            res = _run(platform, wls, 200_000.0, granularity=1)
-            rows.append(
-                {
-                    "bg_tier": tier,
-                    "bg_threads": n,
-                    "cas_latency_ns": res.stats["lat-share"].mean_latency_ns(),
-                }
-            )
+    for (tier, n), res in zip(cells, run_sweep(jobs, processes)):
+        rows.append(
+            {
+                "bg_tier": tier,
+                "bg_threads": n,
+                "cas_latency_ns": res.stats["lat-share"].mean_latency_ns(),
+            }
+        )
     return rows
 
 
@@ -283,20 +329,22 @@ def service_time_curve(
     platform: PlatformModel,
     op: OpClass = OpClass.LOAD,
     threads: Tuple[int, ...] = (1, 2, 4, 8, 16, 32),
+    processes: Optional[int] = None,
 ) -> List[dict]:
+    cells = [(tier, n) for tier in ("ddr", "cxl") for n in threads]
+    jobs = [
+        _job(platform, [bw_test(tier, op, n)], _BW_SIM_NS) for tier, n in cells
+    ]
     rows = []
-    for tier in ("ddr", "cxl"):
-        for n in threads:
-            wl = bw_test(tier, op, n)
-            res = _run(platform, [wl], _BW_SIM_NS)
-            rows.append(
-                {
-                    "tier": tier,
-                    "threads": n,
-                    "service_time_ns": res.tier_counters[tier].mean_service_time,
-                    "bandwidth_gbps": res.bandwidth(wl.name),
-                }
-            )
+    for (tier, n), job, res in zip(cells, jobs, run_sweep(jobs, processes)):
+        rows.append(
+            {
+                "tier": tier,
+                "threads": n,
+                "service_time_ns": res.tier_counters[tier].mean_service_time,
+                "bandwidth_gbps": res.bandwidth(job.workloads[0].name),
+            }
+        )
     return rows
 
 
@@ -327,6 +375,7 @@ def miku_comparison(
     n_threads: int = 16,
     period_ns: float = 100_000.0,
     cycles: int = 3,
+    processes: Optional[int] = None,
 ) -> MikuComparison:
     """The paper's §6 micro-benchmark case study: two 16-thread groups
     alternating DDR/CXL every period.  Opt = each side alone (no
@@ -336,40 +385,34 @@ def miku_comparison(
     DESIGN.md)."""
     sim_ns = 2 * cycles * period_ns
 
-    opt_ddr = _run(
-        platform, [bw_test("ddr", op, n_threads, name="a")], _BW_SIM_NS
-    ).bandwidth("a")
-    opt_cxl = _run(
-        platform, [bw_test("cxl", op, n_threads, name="a")], _BW_SIM_NS
-    ).bandwidth("a")
+    alt = alternating_bw_pair(op, n_threads, period_ns)
+    opt_a, opt_c, racing, miku, mba = run_sweep(
+        [
+            _job(platform, [bw_test("ddr", op, n_threads, name="a")], _BW_SIM_NS),
+            _job(platform, [bw_test("cxl", op, n_threads, name="a")], _BW_SIM_NS),
+            _job(platform, alt, sim_ns, window_ns=5_000.0),
+            _job(platform, alt, sim_ns, window_ns=5_000.0, miku=True),
+            _job(platform, alt, sim_ns, window_ns=5_000.0, miku=True),
+        ],
+        processes,
+    )
 
-    def alternating_run(controller: Optional[MikuController]) -> Tuple[float, float]:
-        wls = alternating_bw_pair(op, n_threads, period_ns)
-        res = _run(platform, wls, sim_ns, controller=controller, window_ns=5_000.0)
+    def tier_split(res) -> Tuple[float, float]:
         # Each group spends half its time on each tier; attribute bandwidth
         # by the tier actually served per phase using the per-tier counters.
-        total = res.sim_ns
         g = 4  # granularity
-        ddr_bytes = (
-            res.tier_counters["ddr"].inserts
-            * platform.ddr.access_bytes
-            * g
-        )
-        cxl_bytes = (
-            res.tier_counters["cxl"].inserts
-            * platform.cxl.access_bytes
-            * g
-        )
-        return ddr_bytes / total, cxl_bytes / total
+        ddr_bytes = res.tier_counters["ddr"].inserts * platform.ddr.access_bytes * g
+        cxl_bytes = res.tier_counters["cxl"].inserts * platform.cxl.access_bytes * g
+        return ddr_bytes / res.sim_ns, cxl_bytes / res.sim_ns
 
-    racing_ddr, racing_cxl = alternating_run(None)
-    miku_ddr, miku_cxl = alternating_run(default_miku(platform))
-    mba_ddr, mba_cxl = alternating_run(default_miku(platform))
+    racing_ddr, racing_cxl = tier_split(racing)
+    miku_ddr, miku_cxl = tier_split(miku)
+    mba_ddr, mba_cxl = tier_split(mba)
 
     return MikuComparison(
         op=op.value,
-        opt_ddr=opt_ddr,
-        opt_cxl=opt_cxl,
+        opt_ddr=opt_a.bandwidth("a"),
+        opt_cxl=opt_c.bandwidth("a"),
         racing_ddr=racing_ddr,
         racing_cxl=racing_cxl,
         miku_ddr=miku_ddr,

@@ -1,0 +1,89 @@
+"""Parallel sweep runner: many independent DES configs, one process pool.
+
+Every figure in the paper is a *matrix* of independent simulations (ops x
+tiers x thread counts x platforms).  :class:`SimJob` is the picklable
+description of one cell; :func:`run_sweep` executes a batch — serially in
+process for small batches, or fanned out over a ``ProcessPoolExecutor`` for
+figure matrices (``processes`` argument, or the ``REPRO_SWEEP_PROCS``
+environment variable for the benchmark harness).  Results come back in job
+order regardless of scheduling, and each job is deterministic given its
+seed, so serial and parallel execution are bit-identical.
+
+MIKU controllers are *constructed inside the worker* (``miku=True``) rather
+than shipped across the pool: the controller is stateful, and a fresh,
+platform-calibrated instance per job is exactly what the figure runners
+want anyway.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from concurrent.futures import ProcessPoolExecutor
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.des import SimResult, TieredMemorySim, WorkloadSpec
+from repro.core.device_model import PlatformModel
+
+
+@dataclasses.dataclass
+class SimJob:
+    """One independent simulation: everything a worker needs, picklable."""
+
+    platform: PlatformModel
+    workloads: List[WorkloadSpec]
+    sim_ns: float
+    seed: int = 0
+    granularity: int = 4
+    window_ns: float = 10_000.0
+    #: Build a platform-calibrated MIKU controller in the worker.
+    miku: bool = False
+    miku_overrides: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def run_job(job: SimJob) -> SimResult:
+    """Execute one job (the worker entry point; also the serial path)."""
+    controller = None
+    if job.miku:
+        from repro.memsim.calibration import default_miku
+
+        controller = default_miku(
+            job.platform, job.granularity, **job.miku_overrides
+        )
+    sim = TieredMemorySim(
+        job.platform,
+        job.workloads,
+        seed=job.seed,
+        granularity=job.granularity,
+        controller=controller,
+        window_ns=job.window_ns,
+    )
+    return sim.run(job.sim_ns)
+
+
+def default_processes() -> int:
+    """Worker count from ``REPRO_SWEEP_PROCS`` (0/1 = serial)."""
+    try:
+        return int(os.environ.get("REPRO_SWEEP_PROCS", "0"))
+    except ValueError:
+        return 0
+
+
+def run_sweep(
+    jobs: Sequence[SimJob],
+    processes: Optional[int] = None,
+) -> List[SimResult]:
+    """Run ``jobs``, returning results in job order.
+
+    ``processes=None`` consults ``REPRO_SWEEP_PROCS``; <=1 runs serially in
+    process (no pool overhead — the right default under pytest and for
+    single-job calls).
+    """
+    if processes is None:
+        processes = default_processes()
+    jobs = list(jobs)
+    if processes <= 1 or len(jobs) <= 1:
+        return [run_job(j) for j in jobs]
+    workers = min(processes, len(jobs), os.cpu_count() or 1)
+    with ProcessPoolExecutor(max_workers=workers) as pool:
+        return list(pool.map(run_job, jobs))

@@ -251,6 +251,9 @@ class TieredServingCluster:
     ):
         self.engines = engines
         self.queue = TransferQueue(controller=controller, window_ns=window_ns)
+        #: The cluster's control plane is the transfer queue's ControlLoop —
+        #: same substrate interface as the DES and the launcher.
+        self.control = self.queue.control
         self.hbm_bw = hbm_bw
         self.timeline: List[Dict[str, float]] = []
         self._host_busy_until: Dict[str, float] = {

@@ -1,6 +1,9 @@
 """Data pipeline: determinism, packing invariants."""
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import HostDataLoader, SyntheticTokenDataset, pack_documents

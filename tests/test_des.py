@@ -42,7 +42,7 @@ def test_corun_collapse_in_paper_band():
     for op in (OpClass.LOAD, OpClass.NT_STORE):
         alone = run_bw_test(P, op=op, tier="ddr", n_threads=16,
                             sim_ns=80_000).bandwidth(f"bw-ddr-{op.value}")
-        both = run_corun(P, op=op, n_threads=16, sim_ns=200_000)
+        both = run_corun(P, op=op, n_threads=16, sim_ns=150_000)
         loss = 1 - both.bandwidth("ddr") / alone
         assert 0.6 < loss < 0.95, f"{op}: loss {loss}"
         cxl_alone = run_bw_test(P, op=op, tier="cxl", n_threads=16,
@@ -53,7 +53,7 @@ def test_corun_collapse_in_paper_band():
 def test_cxl_tor_latency_blows_up_under_load():
     """Paper §4.2: loaded CXL service time ~8-10x its unloaded latency."""
     r = run_bw_test(P, op=OpClass.LOAD, tier="cxl", n_threads=16,
-                    sim_ns=120_000)
+                    sim_ns=80_000)
     loaded = r.tier_counters["cxl"].mean_service_time
     unloaded = P.cxl.unloaded_latency_ns(OpClass.LOAD)
     assert loaded > 5 * unloaded
@@ -66,7 +66,7 @@ def test_miku_recovers_fast_tier():
                         sim_ns=80_000).bandwidth(f"bw-ddr-{op.value}")
     cxl_alone = run_bw_test(P, op=op, tier="cxl", n_threads=16,
                             sim_ns=80_000).bandwidth(f"bw-cxl-{op.value}")
-    miku = run_corun(P, op=op, n_threads=16, sim_ns=400_000,
+    miku = run_corun(P, op=op, n_threads=16, sim_ns=300_000,
                      controller=default_miku(P))
     assert miku.bandwidth("ddr") > 0.9 * alone
     assert miku.bandwidth("cxl") > 0.7 * cxl_alone

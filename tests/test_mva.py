@@ -2,6 +2,7 @@
 
 import jax.numpy as jnp
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.des import run_bw_test

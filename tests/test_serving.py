@@ -51,7 +51,10 @@ def test_host_instance_slower_than_device():
     assert a["d"]["tokens_per_s"] > 3 * b["h"]["tokens_per_s"]
 
 
+@pytest.mark.slow
 def test_racing_degrades_fast_instance():
+    """Full-length Fig. 12 analogue (slow lane; the quick MIKU-restriction
+    check below covers the control path in tier-1)."""
     solo = TieredServingCluster([mk("d", "device", 8)]).run(8000)
     both = TieredServingCluster(
         [mk("d", "device", 8), mk("h", "host", 4)]

@@ -1,0 +1,186 @@
+"""Control-plane substrate tests.
+
+The refactor contract: a ControlLoop driving a fake (replay) substrate must
+produce byte-identical Decision sequences to the pre-refactor DES and
+TransferQueue window plumbing.  ``tests/data/miku_trace_*.json`` are counter
+traces (per-window fast/slow deltas + the decision the seed code emitted)
+recorded from the seed implementation before the refactor.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core.controller import StragglerGovernor
+from repro.core.des import run_bw_test, run_corun
+from repro.core.device_model import platform_a
+from repro.core.littles_law import OpClass, TierCounters
+from repro.core.substrate import (
+    ControlLoop,
+    ReplaySubstrate,
+    StepTimingSubstrate,
+    WindowedCounters,
+)
+from repro.memsim.calibration import default_miku
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+P = platform_a()
+
+
+def _counters(d) -> TierCounters:
+    return TierCounters(
+        inserts=d["inserts"],
+        occupancy_time=d["occupancy_time"],
+        class_counts={OpClass(k): v for k, v in d["class_counts"].items()},
+    )
+
+
+def _load_trace(name):
+    with open(os.path.join(DATA, name)) as f:
+        windows = json.load(f)["windows"]
+    deltas = [(_counters(w["fast"]), _counters(w["slow"])) for w in windows]
+    golden = [w["decision"] for w in windows]
+    return deltas, golden
+
+
+def _assert_decisions_match(decisions, golden):
+    assert len(decisions) == len(golden)
+    for i, (d, g) in enumerate(zip(decisions, golden)):
+        assert d.max_concurrency == g["max_concurrency"], i
+        assert d.rate_factor == g["rate_factor"], i
+        assert d.phase.value == g["phase"], i
+
+
+@pytest.mark.parametrize("trace", ["miku_trace_des.json", "miku_trace_tq.json"])
+def test_replayed_trace_reproduces_seed_decisions(trace):
+    """ControlLoop + fake substrate == the seed's bespoke window plumbing."""
+    deltas, golden = _load_trace(trace)
+    sub = ReplaySubstrate(deltas)
+    loop = ControlLoop(sub, default_miku(P), window_ns=1.0)
+    while not sub.exhausted:
+        loop.fire()
+    _assert_decisions_match(loop.decisions, golden)
+    # apply() received every decision, in order.
+    assert sub.applied == loop.decisions
+
+
+def test_live_des_reproduces_recorded_decision_sequence():
+    """The ported DES end-to-end: same config as the recorded seed run →
+    identical decision sequence (and therefore identical throttling)."""
+    _, golden = _load_trace("miku_trace_des.json")
+    res = run_corun(
+        P, op=OpClass.STORE, n_threads=16, sim_ns=400_000,
+        controller=default_miku(P),
+    )
+    _assert_decisions_match(res.decisions, golden)
+
+
+def test_windowed_counters_consume_on_read():
+    wc = WindowedCounters()
+    wc.fast.record(OpClass.LOAD, 10.0)
+    wc.slow.record(OpClass.STORE, 50.0)
+    f, s = wc.delta()
+    assert f.inserts == 1 and s.inserts == 1
+    assert s.class_counts[OpClass.STORE] == 1
+    f, s = wc.delta()  # consumed: second read is empty
+    assert f.inserts == 0 and s.inserts == 0
+    wc.fast.record(OpClass.LOAD, 5.0)
+    f, _ = wc.delta()
+    assert f.inserts == 1 and f.occupancy_time == 5.0
+
+
+def test_control_loop_poll_catches_up_all_boundaries():
+    class Clocked:
+        now = 0.0
+        clock_ns = property(lambda self: self.now)
+        calls = 0
+
+        def counters_delta(self):
+            self.calls += 1
+            return (TierCounters(), TierCounters())
+
+        def apply(self, decision):
+            pass
+
+    class CountingLaw:
+        def __init__(self):
+            self.n = 0
+
+        def window(self, fast, slow):
+            self.n += 1
+            return self.n
+
+    sub = Clocked()
+    loop = ControlLoop(sub, CountingLaw(), window_ns=10.0)
+    sub.now = 35.0
+    fired = loop.poll()
+    assert fired == [1, 2, 3]
+    assert loop.next_window_ns == 40.0
+    assert not loop.due()
+
+
+def test_step_timing_substrate_drives_straggler_governor():
+    sub = StepTimingSubstrate(n_hosts=4)
+    loop = ControlLoop(sub, StragglerGovernor(n_hosts=4, patience=1),
+                       window_ns=1.0)
+    for _ in range(3):
+        for h, t in enumerate([1.0, 1.0, 1.0, 5.0]):
+            sub.record_step(h, t)
+        loop.fire()
+    assert sub.rate_factor(3) < 1.0
+    assert all(sub.rate_factor(h) == 1.0 for h in range(3))
+    assert loop.windows_run == 3
+
+
+def test_fig_goldens_unchanged_quick():
+    """Fast-path rewrite must not move the figure numbers (load column)."""
+    with open(os.path.join(DATA, "seed_fig_goldens.json")) as f:
+        gold = json.load(f)
+    for row in gold["fig3"]:
+        if row["op"] != "load":
+            continue
+        r = run_bw_test(P, op=OpClass.LOAD, tier=row["tier"], n_threads=16,
+                        sim_ns=120_000)
+        bw = r.bandwidth(f"bw-{row['tier']}-load")
+        assert bw == pytest.approx(row["bandwidth_gbps"], rel=0.01)
+    both = run_corun(P, op=OpClass.LOAD, n_threads=16, sim_ns=300_000)
+    g = gold["fig5"]["load"]
+    assert both.bandwidth("ddr") == pytest.approx(g["ddr_gbps"], rel=0.01)
+    assert both.bandwidth("cxl") == pytest.approx(g["cxl_gbps"], rel=0.01)
+    assert both.tor_inserts == g["tor_inserts"]
+
+
+@pytest.mark.slow
+def test_fig_goldens_unchanged_full_matrix():
+    with open(os.path.join(DATA, "seed_fig_goldens.json")) as f:
+        gold = json.load(f)
+    for row in gold["fig3"]:
+        op = OpClass(row["op"])
+        r = run_bw_test(P, op=op, tier=row["tier"], n_threads=16,
+                        sim_ns=120_000)
+        bw = r.bandwidth(f"bw-{row['tier']}-{op.value}")
+        assert bw == pytest.approx(row["bandwidth_gbps"], rel=0.01)
+    for opv, g in gold["fig5"].items():
+        both = run_corun(P, op=OpClass(opv), n_threads=16, sim_ns=300_000)
+        assert both.bandwidth("ddr") == pytest.approx(g["ddr_gbps"], rel=0.01)
+        assert both.bandwidth("cxl") == pytest.approx(g["cxl_gbps"], rel=0.01)
+        assert both.tor_inserts == g["tor_inserts"]
+        assert both.tor_peak == g["tor_peak"]
+
+
+def test_reservoir_percentiles_within_tolerance():
+    """Bounded reservoir vs full-capture percentiles on the same sim."""
+    from repro.core.des import TieredMemorySim, WorkloadSpec
+
+    wl = WorkloadSpec(name="w", op=OpClass.LOAD, tier="cxl", n_cores=16)
+    full = TieredMemorySim(P, [wl], seed=3, latency_reservoir=10**9)
+    rf = full.run(120_000.0).stats["w"]
+    assert rf.latency_count == len(rf.latency_samples)  # captured everything
+
+    bounded = TieredMemorySim(P, [wl], seed=3, latency_reservoir=2048)
+    rb = bounded.run(120_000.0).stats["w"]
+    assert len(rb.latency_samples) == 2048
+    for q in (0.5, 0.9, 0.99):
+        assert rb.percentile_ns(q) == pytest.approx(rf.percentile_ns(q),
+                                                    rel=0.05)
