@@ -10,9 +10,11 @@ Row = Tuple[str, float, str]
 
 
 def timed(name: str, fn: Callable[[], str]) -> Row:
-    t0 = time.time()
+    # perf_counter: monotonic and high-resolution — time.time() can step
+    # under NTP and quantizes coarsely on some platforms.
+    t0 = time.perf_counter()
     derived = fn()
-    us = (time.time() - t0) * 1e6
+    us = (time.perf_counter() - t0) * 1e6
     return (name, us, derived)
 
 

@@ -1,23 +1,22 @@
-"""Fig. 10 — MIKU vs DataRacing vs Opt on alternating micro-benchmarks."""
+"""Fig. 10 — shim over the ``fig10_miku`` scenario."""
 
-from repro.core.device_model import platform_a
-from repro.core.littles_law import OpClass
-from repro.memsim.runner import miku_comparison
+from repro.scenarios import run_scenario
 
 from benchmarks.common import Row, timed
 
 
 def run() -> list:
-    p = platform_a()
     rows: list[Row] = []
-    for op in OpClass:
+    for op in ("load", "store", "nt_store"):
         def one(op=op):
-            r = miku_comparison(p, op)
+            (r,) = run_scenario("fig10_miku",
+                                {"platform": "A", "op": op}).rows
             return (
-                f"racing_ddr={r.racing_ddr:.0f}GBps;miku_ddr={r.miku_ddr:.0f}"
-                f"({100*r.miku_ddr/max(r.opt_ddr,1e-9):.0f}%of_opt);"
-                f"miku_cxl={r.miku_cxl:.0f}"
-                f"({100*r.miku_cxl/max(r.opt_cxl,1e-9):.0f}%of_opt)"
+                f"racing_ddr={r['racing_ddr']:.0f}GBps;"
+                f"miku_ddr={r['miku_ddr']:.0f}"
+                f"({100*r['miku_ddr']/max(r['opt_ddr'],1e-9):.0f}%of_opt);"
+                f"miku_cxl={r['miku_cxl']:.0f}"
+                f"({100*r['miku_cxl']/max(r['opt_cxl'],1e-9):.0f}%of_opt)"
             )
-        rows.append(timed(f"fig10_miku_{op.value}", one))
+        rows.append(timed(f"fig10_miku_{op}", one))
     return rows

@@ -1,93 +1,34 @@
-"""Fig. 11/12 — co-located LLM serving: HBM-resident vs host-tier-resident
-instance, DataRacing vs MIKU vs Opt.  Real jitted decode steps (reduced
-llama31 config), tier timing from the transfer-path model (DESIGN.md §2)."""
+"""Fig. 11/12 — shim over the ``fig11_llm`` scenario (real jitted decode
+steps on the serving engine; the one non-DES figure)."""
 
-import jax
-
-from repro.configs import get_arch
-from repro.core.controller import MikuConfig, MikuController
-from repro.core.littles_law import EstimatorConfig
-from repro.models.transformer import TransformerLM
-from repro.serving.engine import (
-    EngineConfig,
-    Request,
-    ServingEngine,
-    TieredServingCluster,
-)
+from repro.scenarios import run_scenario
 
 from benchmarks.common import Row, timed
 
-_N_REQ_FAST = 48
-_N_REQ_SLOW = 16
-_NEW_TOKENS = 24
-_CHUNKS = 64
-
-
-def _mk(name, placement, cfg, params, n_req):
-    e = ServingEngine(
-        EngineConfig(name=name, model=cfg, max_slots=4, max_len=96,
-                     placement=placement, stream_chunks=_CHUNKS),
-        params,
-    )
-    for i in range(n_req):
-        e.submit(Request(rid=i, prompt=list(range(1, 9)),
-                         max_new_tokens=_NEW_TOKENS))
-    return e
-
-
-def _controller(chunk_service_ns: float) -> MikuController:
-    est = EstimatorConfig(
-        t_fast=1.2e3,
-        slow_read_threshold=8 * chunk_service_ns,
-        ewma=0.5,
-        min_window_inserts=4,
-        min_slow_inserts=1,
-    )
-    return MikuController(MikuConfig(levels=(1, 2, 4, 8)), est)
-
 
 def run() -> list:
-    cfg = get_arch("llama31-8b").smoke
-    model = TransformerLM(cfg)
-    params, _ = model.init(jax.random.PRNGKey(0))
-    probe = _mk("probe", "host", cfg, params, 0)
-    chunk_service = probe.param_bytes / _CHUNKS / 16.0  # host link B/ns
+    rows = {}
 
-    results = {}
+    def compute():
+        for r in run_scenario("fig11_llm").rows:
+            rows[r["variant"]] = r
 
     def opt():
-        a = TieredServingCluster(
-            [_mk("hbm", "device", cfg, params, _N_REQ_FAST)]).run(20000)
-        b = TieredServingCluster(
-            [_mk("host", "host", cfg, params, _N_REQ_SLOW)]).run(20000)
-        results["opt"] = (a["hbm"]["tokens_per_s"], b["host"]["tokens_per_s"])
-        return (f"hbm={results['opt'][0]:.0f}tok/s;"
-                f"host={results['opt'][1]:.0f}tok/s")
+        compute()  # one scenario run covers all three variants
+        r = rows["opt"]
+        return (f"hbm={r['hbm_tokens_per_s']:.0f}tok/s;"
+                f"host={r['host_tokens_per_s']:.0f}tok/s")
 
     def racing():
-        r = TieredServingCluster(
-            [_mk("hbm", "device", cfg, params, _N_REQ_FAST),
-             _mk("host", "host", cfg, params, _N_REQ_SLOW)]
-        ).run(40000)
-        results["racing"] = (r["hbm"]["tokens_per_s"],
-                             r["host"]["tokens_per_s"])
-        o = results["opt"]
-        return (f"hbm={100*r['hbm']['tokens_per_s']/o[0]:.0f}%of_opt;"
-                f"host={100*r['host']['tokens_per_s']/o[1]:.0f}%of_opt")
+        r = rows["racing"]
+        return (f"hbm={r['hbm_pct_of_opt']:.0f}%of_opt;"
+                f"host={r['host_pct_of_opt']:.0f}%of_opt")
 
     def miku():
-        ctl = _controller(chunk_service)
-        r = TieredServingCluster(
-            [_mk("hbm", "device", cfg, params, _N_REQ_FAST),
-             _mk("host", "host", cfg, params, _N_REQ_SLOW)],
-            controller=ctl, window_ns=3e4,
-        ).run(40000)
-        results["miku"] = (r["hbm"]["tokens_per_s"], r["host"]["tokens_per_s"])
-        o = results["opt"]
-        restricted = sum(1 for d in ctl.decisions if d.restricted)
-        return (f"hbm={100*r['hbm']['tokens_per_s']/o[0]:.0f}%of_opt;"
-                f"host={100*r['host']['tokens_per_s']/o[1]:.0f}%of_opt;"
-                f"restricted_windows={restricted}/{len(ctl.decisions)}")
+        r = rows["miku"]
+        return (f"hbm={r['hbm_pct_of_opt']:.0f}%of_opt;"
+                f"host={r['host_pct_of_opt']:.0f}%of_opt;"
+                f"restricted_windows={r['restricted_windows']}/{r['windows']}")
 
     return [timed("fig11_llm_opt", opt),
             timed("fig11_llm_dataracing", racing),

@@ -1,52 +1,31 @@
-"""Fig. 13 — big-data (Spark/TPC-H) analog: shuffle-heavy mixed read/write
-phases co-running on DDR and CXL, racing vs MIKU vs opt."""
+"""Fig. 13 — shim over the ``fig13_spark`` scenario."""
 
-from repro.core.des import TieredMemorySim, WorkloadSpec
-from repro.core.device_model import platform_a
-from repro.core.littles_law import OpClass
-from repro.memsim.calibration import default_miku
+from repro.scenarios import run_scenario
 
 from benchmarks.common import Row, timed
 
-_SIM_NS = 400_000.0
-
-
-def _spark_workload(name, tier, miku_managed=True):
-    # Query pipeline: scan (loads) -> shuffle write (stores) -> reduce
-    # (loads), cycled; phases model per-query behaviour.
-    # 16 executor threads with deep prefetched scan/shuffle streams — the
-    # memory pressure that makes the paper's Spark runs collapse to 30%.
-    return WorkloadSpec(
-        name=name, op=OpClass.STORE, tier=tier, n_cores=16, mlp=160,
-        phases=[(60_000.0, tier)] * 1, miku_managed=miku_managed,
-    )
-
 
 def run() -> list:
-    p = platform_a()
+    rows = {}
+
+    def compute():
+        for r in run_scenario("fig13_spark", {"platform": "A"}).rows:
+            rows[r["variant"]] = r
 
     def opt():
-        a = TieredMemorySim(p, [_spark_workload("ddr", "ddr", False)]).run(_SIM_NS)
-        b = TieredMemorySim(p, [_spark_workload("cxl", "cxl")]).run(_SIM_NS)
-        run.opt = (a.bandwidth("ddr"), b.bandwidth("cxl"))  # type: ignore
-        return f"ddr={run.opt[0]:.0f}GBps;cxl={run.opt[1]:.0f}GBps"
+        compute()  # one scenario run covers all three variants
+        r = rows["opt"]
+        return f"ddr={r['ddr_gbps']:.0f}GBps;cxl={r['cxl_gbps']:.0f}GBps"
 
     def racing():
-        r = TieredMemorySim(
-            p, [_spark_workload("ddr", "ddr", False), _spark_workload("cxl", "cxl")]
-        ).run(_SIM_NS)
-        o = run.opt
-        return (f"ddr={100*r.bandwidth('ddr')/o[0]:.0f}%of_opt;"
-                f"cxl={100*r.bandwidth('cxl')/o[1]:.0f}%of_opt")
+        r = rows["racing"]
+        return (f"ddr={r['ddr_pct_of_opt']:.0f}%of_opt;"
+                f"cxl={r['cxl_pct_of_opt']:.0f}%of_opt")
 
     def miku():
-        r = TieredMemorySim(
-            p, [_spark_workload("ddr", "ddr", False), _spark_workload("cxl", "cxl")],
-            controller=default_miku(p), window_ns=10_000.0,
-        ).run(_SIM_NS)
-        o = run.opt
-        return (f"ddr={100*r.bandwidth('ddr')/o[0]:.0f}%of_opt(paper:>=81%);"
-                f"cxl={100*r.bandwidth('cxl')/o[1]:.0f}%of_opt")
+        r = rows["miku"]
+        return (f"ddr={r['ddr_pct_of_opt']:.0f}%of_opt(paper:>=81%);"
+                f"cxl={r['cxl_pct_of_opt']:.0f}%of_opt")
 
     return [timed("fig13_spark_opt", opt),
             timed("fig13_spark_dataracing", racing),

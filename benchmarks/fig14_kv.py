@@ -1,51 +1,20 @@
-"""Fig. 14 — concurrent-hashmap (YCSB) analog: read:write ratio sweep.
-Random accesses with modest MLP (pointer-chasing-ish), racing vs MIKU."""
+"""Fig. 14 — shim over the ``fig14_kv`` scenario."""
 
-from repro.core.des import TieredMemorySim, WorkloadSpec
-from repro.core.device_model import platform_a
-from repro.core.littles_law import OpClass
-from repro.memsim.calibration import default_miku
+from repro.scenarios import run_scenario
 
 from benchmarks.common import Row, timed
 
-_SIM_NS = 300_000.0
-
-
-def _kv(name, tier, ratio, managed):
-    # ratio r reads per write: split cores between get (load) and insert
-    # (store) streams; hash probing limits MLP.
-    total = 16
-    readers = round(total * ratio / (ratio + 1))
-    wls = []
-    # gets probe hash chains (shallow MLP); inserts are RMW bursts with
-    # deeper outstanding writes — the paper: "a higher ratio of inserts ...
-    # results in a greater memory workload, allowing MIKU to demonstrate
-    # its effectiveness more".
-    if readers:
-        wls.append(WorkloadSpec(name=f"{name}-get", op=OpClass.LOAD, tier=tier,
-                                n_cores=readers, mlp=32, miku_managed=managed))
-    if total - readers:
-        wls.append(WorkloadSpec(name=f"{name}-ins", op=OpClass.STORE, tier=tier,
-                                n_cores=total - readers, mlp=128,
-                                miku_managed=managed))
-    return wls
-
 
 def run() -> list:
-    p = platform_a()
     rows: list[Row] = []
     for ratio in (0, 1, 4):
         def one(ratio=ratio):
-            ddr = _kv("ddr", "ddr", ratio, False)
-            cxl = _kv("cxl", "cxl", ratio, True)
-            race = TieredMemorySim(p, ddr + cxl).run(_SIM_NS)
-            miku = TieredMemorySim(p, ddr + cxl, controller=default_miku(p),
-                                   window_ns=10_000.0).run(_SIM_NS)
-            race_ddr = sum(race.bandwidth(w.name) for w in ddr)
-            miku_ddr = sum(miku.bandwidth(w.name) for w in ddr)
-            miku_cxl = sum(miku.bandwidth(w.name) for w in cxl)
-            gain = miku_ddr / max(race_ddr, 1e-9)
-            return (f"racing_ddr={race_ddr:.0f}GBps;miku_ddr={miku_ddr:.0f}"
-                    f"(x{gain:.2f});miku_cxl={miku_cxl:.0f}")
+            (r,) = run_scenario(
+                "fig14_kv", {"platform": "A", "ratio": (ratio,)}
+            ).rows
+            return (f"racing_ddr={r['racing_ddr_gbps']:.0f}GBps;"
+                    f"miku_ddr={r['miku_ddr_gbps']:.0f}"
+                    f"(x{r['miku_gain']:.2f});"
+                    f"miku_cxl={r['miku_cxl_gbps']:.0f}")
         rows.append(timed(f"fig14_kv_r{ratio}w1", one))
     return rows

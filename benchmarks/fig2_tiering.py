@@ -1,22 +1,20 @@
-"""Fig. 2 — aggregated bandwidth of tiered-memory management schemes."""
+"""Fig. 2 — shim over the ``fig2_tiering`` scenario."""
 
-from repro.core.device_model import platform_a
-from repro.core.littles_law import OpClass
-from repro.memsim.runner import tiering_schemes
+from repro.scenarios import run_scenario
 
 from benchmarks.common import Row, timed
 
 
 def run() -> list:
     rows: list[Row] = []
-    p = platform_a()
-    for op in OpClass:
+    for op in ("load", "store", "nt_store"):
         def one(op=op):
-            r = tiering_schemes(p, op)
+            (r,) = run_scenario("fig2_tiering",
+                                {"platform": "A", "op": op}).rows
             return (
                 f"ideal={r['ideal_combined']:.0f}GBps;"
                 f"native={r['native']:.0f};interleave={r['interleave']:.0f};"
                 f"os_managed={r['os_managed']:.0f}"
             )
-        rows.append(timed(f"fig2_tiering_{op.value}", one))
+        rows.append(timed(f"fig2_tiering_{op}", one))
     return rows

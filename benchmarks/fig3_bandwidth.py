@@ -1,19 +1,15 @@
-"""Fig. 3 — DDR vs CXL single/multi-thread bandwidth, default and 1:1."""
+"""Fig. 3 — shim over the ``fig3_bandwidth`` scenario."""
 
-from repro.core.device_model import platform_a, platform_b
-from repro.memsim.runner import bandwidth_matrix
+from repro.scenarios import run_scenario
 
 from benchmarks.common import Row, timed
 
 
 def run() -> list:
     rows: list[Row] = []
-    for label, p in (
-        ("A", platform_a()), ("A-1to1", platform_a(1, 1)),
-        ("B", platform_b()), ("B-1to1", platform_b(1, 1)),
-    ):
-        def one(p=p):
-            out = bandwidth_matrix(p)
+    for label in ("A", "A-1to1", "B", "B-1to1"):
+        def one(label=label):
+            out = run_scenario("fig3_bandwidth", {"platform": label}).rows
             parts = [
                 f"{r['op']}/{r['tier']}/{r['threads']}t={r['bandwidth_gbps']:.1f}"
                 for r in out

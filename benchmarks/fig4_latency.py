@@ -1,16 +1,13 @@
-"""Fig. 4 — average and tail (p99) latency, DDR vs CXL, thread sweep."""
+"""Fig. 4 — shim over the ``fig4_latency`` scenario."""
 
-from repro.core.device_model import platform_a
-from repro.memsim.runner import latency_matrix
+from repro.scenarios import run_scenario
 
 from benchmarks.common import Row, timed
 
 
 def run() -> list:
-    p = platform_a()
-
     def one():
-        out = latency_matrix(p)
+        out = run_scenario("fig4_latency", {"platform": "A"}).rows
         return ";".join(
             f"{r['tier']}/{r['threads']}t:avg={r['avg_ns']:.0f}ns,p99={r['p99_ns']:.0f}"
             for r in out

@@ -1,17 +1,17 @@
-"""Fig. 5 + 6 — co-run bandwidth collapse and ToR accounting (the paper's
-headline: up to 81-89% DDR loss; ToR-insert/bandwidth Pearson r=0.998)."""
+"""Fig. 5 + 6 — shim over the ``fig5_corun`` + ``fig6_tor_correlation``
+scenarios (the paper's headline: up to 81-89% DDR loss; ToR-insert /
+bandwidth Pearson r=0.998)."""
 
-from repro.core.device_model import platform_a, platform_b
-from repro.memsim.runner import corun_matrix, tor_insert_bandwidth_correlation
+from repro.scenarios import run_scenario
 
 from benchmarks.common import Row, timed
 
 
 def run() -> list:
     rows: list[Row] = []
-    for label, p in (("A", platform_a()), ("B", platform_b())):
-        def one(p=p):
-            out = corun_matrix(p)
+    for label in ("A", "B"):
+        def one(label=label):
+            out = run_scenario("fig5_corun", {"platform": label}).rows
             return ";".join(
                 f"{r['op']}:ddr_loss={r['ddr_loss_pct']:.1f}%"
                 f",t_cxl={r['t_cxl_corun_ns']:.0f}ns"
@@ -20,8 +20,8 @@ def run() -> list:
         rows.append(timed(f"fig5_corun_platform{label}", one))
 
     def corr():
-        r = tor_insert_bandwidth_correlation(platform_a())
-        return f"pearson_r={r:.4f}(paper:0.998)"
+        (r,) = run_scenario("fig6_tor_correlation", {"platform": "A"}).rows
+        return f"pearson_r={r['pearson_r']:.4f}(paper:0.998)"
 
     rows.append(timed("fig6_tor_insert_bw_correlation", corr))
     return rows

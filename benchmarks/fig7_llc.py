@@ -1,17 +1,17 @@
-"""Fig. 7 — LLC partition sweep (CAT analogue) under tiered co-run."""
+"""Fig. 7 — shim over the ``fig7_llc`` scenario."""
 
-from repro.core.device_model import platform_a
-from repro.memsim.runner import llc_partition_sweep
+from repro.scenarios import run_scenario
 
 from benchmarks.common import Row, timed
 
 
 def run() -> list:
-    p = platform_a()
     rows: list[Row] = []
     for wss in (60.0, 120.0):
         def one(wss=wss):
-            out = llc_partition_sweep(p, wss)
+            out = run_scenario(
+                "fig7_llc", {"platform": "A", "wss_mb": (wss,)}
+            ).rows
             return ";".join(
                 f"ddr_share={r['ddr_llc_share']:.2f}:ddr={r['ddr_gbps']:.0f}"
                 f",cxl={r['cxl_gbps']:.0f}" for r in out

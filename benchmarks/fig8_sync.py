@@ -1,16 +1,13 @@
-"""Fig. 8 — cross-core CAS latency under DDR vs CXL background traffic."""
+"""Fig. 8 — shim over the ``fig8_sync`` scenario."""
 
-from repro.core.device_model import platform_a
-from repro.memsim.runner import sync_interference
+from repro.scenarios import run_scenario
 
 from benchmarks.common import Row, timed
 
 
 def run() -> list:
-    p = platform_a()
-
     def one():
-        out = sync_interference(p)
+        out = run_scenario("fig8_sync", {"platform": "A"}).rows
         return ";".join(
             f"{r['bg_tier']}/{r['bg_threads']}bg={r['cas_latency_ns']:.0f}ns"
             for r in out

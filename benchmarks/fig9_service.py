@@ -1,25 +1,24 @@
-"""Fig. 9 — memory service time vs thread count (MIKU's detection signal),
-cross-validated against the JAX MVA solver."""
+"""Fig. 9 — shim over the ``fig9_service`` scenario, cross-validated
+against the JAX MVA solver."""
 
 from repro.core.device_model import platform_a
 from repro.core.littles_law import OpClass
 from repro.core.mva import analyze
-from repro.memsim.runner import service_time_curve
+from repro.scenarios import run_scenario
 
 from benchmarks.common import Row, timed
 
 
 def run() -> list:
-    p = platform_a()
-
     def one():
-        out = service_time_curve(p)
+        out = run_scenario("fig9_service", {"platform": "A"}).rows
         return ";".join(
             f"{r['tier']}/{r['threads']}t={r['service_time_ns']:.0f}ns"
             for r in out
         )
 
     def mva():
+        p = platform_a()
         parts = []
         for n in (1, 4, 16):
             r = analyze(p, OpClass.LOAD, fast_threads=0, slow_threads=n)

@@ -1,12 +1,25 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# The benchmark/experiment harness, two modes:
 #
-# Usage:
-#   PYTHONPATH=src python benchmarks/run.py [filter] [--jobs N]
+#   1. Scenario mode — run any registry-declared scenario as a result table:
+#        PYTHONPATH=src python benchmarks/run.py --list
+#        PYTHONPATH=src python benchmarks/run.py --scenario fig3_bandwidth \
+#            --set platform=A --set threads=1,16 --format csv
+#        PYTHONPATH=src python benchmarks/run.py --scenario corun3_switch \
+#            --set op=load --format json
+#
+#   2. Figure mode (legacy) — run the paper-figure modules, printing
+#      ``name,us_per_call,derived`` CSV:
+#        PYTHONPATH=src python benchmarks/run.py [filter] [--jobs N]
 #
 # ``--jobs N`` runs the figure modules concurrently in a process pool (each
 # module's sweep is itself a batch of independent sims; figure-level
 # parallelism composes with REPRO_SWEEP_PROCS for the in-module sweeps).
 # Output order is deterministic (module order) either way.
+#
+# The figure-module list is *derived from the scenario registry* (each
+# scenario names the benchmarks module that presents it), so the registry
+# and the module list cannot drift; roofline_table is the one non-scenario
+# module and is appended explicitly.
 
 from __future__ import annotations
 
@@ -19,21 +32,23 @@ from concurrent.futures import ProcessPoolExecutor
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _REPO_ROOT not in sys.path:
     sys.path.insert(0, _REPO_ROOT)
+_SRC = os.path.join(_REPO_ROOT, "src")
+if os.path.isdir(_SRC) and _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
-_MODULE_NAMES = [
-    "fig2_tiering",
-    "fig3_bandwidth",
-    "fig4_latency",
-    "fig5_corun",
-    "fig7_llc",
-    "fig8_sync",
-    "fig9_service",
-    "fig10_miku",
-    "fig11_llm",
-    "fig13_spark",
-    "fig14_kv",
-    "roofline_table",
-]
+_EXTRA_MODULES = ["roofline_table"]  # presentation-only, not a scenario
+
+
+def _module_names() -> list:
+    """Figure modules in registry declaration order + non-scenario extras."""
+    from repro.scenarios import all_scenarios
+
+    mods = []
+    for sc in all_scenarios():
+        if sc.module and sc.module not in mods:
+            mods.append(sc.module)
+    mods.extend(_EXTRA_MODULES)
+    return mods
 
 
 def _run_module(name: str) -> list:
@@ -47,17 +62,79 @@ def _run_module(name: str) -> list:
         return [(name, 0.0, f"ERROR:{type(ex).__name__}:{ex}")]
 
 
+def _fmt_default(v) -> str:
+    import enum
+
+    if isinstance(v, enum.Enum):
+        return str(v.value)
+    if isinstance(v, (tuple, list)):
+        return ",".join(_fmt_default(x) for x in v)
+    return str(v)
+
+
+def _list_scenarios() -> None:
+    from repro.scenarios import all_scenarios
+
+    for sc in all_scenarios():
+        grid = []
+        for a in sc.axes:
+            mark = "*" if a.is_grid else ""
+            grid.append(f"{a.name}{mark}={_fmt_default(a.default)}")
+        figure = f" [{sc.figure}]" if sc.figure else ""
+        slow = " (slow)" if sc.slow else ""
+        print(f"{sc.name}{figure}{slow} — {sc.title}")
+        if grid:
+            print(f"    axes: {', '.join(grid)}")
+        if sc.metrics:
+            print(f"    metrics: {', '.join(m.name for m in sc.metrics)}")
+
+
+def _run_scenario(name: str, set_args: list, fmt: str, jobs: int) -> None:
+    from repro.scenarios import get, parse_set_args, run_scenario
+
+    sc = get(name)
+    overrides = parse_set_args(sc, set_args)
+    table = run_scenario(sc, overrides, processes=jobs if jobs > 1 else None)
+    if fmt == "json":
+        print(table.to_json())
+    else:
+        print(table.to_csv(), end="")
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Run registry scenarios or paper-figure modules."
+    )
     ap.add_argument("only", nargs="?", default=None,
                     help="substring filter on figure module names")
     ap.add_argument("--jobs", type=int, default=1,
-                    help="process-pool width for running figure modules")
+                    help="process-pool width (figure modules, or the "
+                         "scenario's sweep)")
+    ap.add_argument("--list", action="store_true", dest="list_scenarios",
+                    help="list registered scenarios and exit")
+    ap.add_argument("--scenario", default=None, metavar="NAME",
+                    help="run one registered scenario as a result table")
+    ap.add_argument("--set", action="append", default=[], metavar="AXIS=VAL",
+                    dest="set_args",
+                    help="override a scenario axis (repeatable; comma "
+                         "lists make grids)")
+    ap.add_argument("--format", choices=("csv", "json"), default="csv",
+                    help="scenario result-table format")
     args = ap.parse_args()
+
+    if args.list_scenarios:
+        _list_scenarios()
+        return
+    if args.scenario:
+        _run_scenario(args.scenario, args.set_args, args.format, args.jobs)
+        return
+    if args.set_args:
+        ap.error("--set requires --scenario")
 
     from benchmarks.common import emit
 
-    names = [n for n in _MODULE_NAMES if not args.only or args.only in n]
+    names = [n for n in _module_names()
+             if not args.only or args.only in n]
     print("name,us_per_call,derived")
     if args.jobs > 1 and len(names) > 1:
         with ProcessPoolExecutor(max_workers=min(args.jobs, len(names))) as pool:

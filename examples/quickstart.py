@@ -1,7 +1,10 @@
-"""Quickstart: the paper in 60 lines.
+"""Quickstart: the paper in 80 lines.
 
 1. Characterize the tiered-memory testbed (bw-test co-run -> unfair queuing).
 2. Turn on MIKU -> fast tier recovers, slow tier stays near its ceiling.
+3. The declarative scenario API: run a registered paper figure and an
+   N-tier scenario (three tiers — DDR + CXL + CXL-over-switch) that the
+   two-tier surface could not express.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,6 +13,34 @@ from repro.core.des import run_bw_test, run_corun
 from repro.core.device_model import platform_a
 from repro.core.littles_law import OpClass
 from repro.memsim.calibration import default_miku
+from repro.scenarios import run_scenario
+
+
+def scenarios() -> None:
+    # Any registered scenario is one call: overrides are axis=value pairs
+    # (the same surface as `benchmarks/run.py --scenario ... --set ...`).
+    table = run_scenario(
+        "fig3_bandwidth",
+        {"platform": "A", "op": "load", "threads": (16,)},
+    )
+    print("\nfig3_bandwidth (registry scenario):")
+    print(table.to_csv(), end="")
+
+    # Three tiers co-running — DDR + local CXL + CXL behind a switch —
+    # with MIKU protecting the fast tier; no engine or controller changes.
+    table = run_scenario(
+        "corun3_switch",
+        {"op": "load", "miku": (True,), "sim_ns": 300_000.0},
+    )
+    (row,) = table.rows
+    print("\ncorun3_switch (three tiers, MIKU on):")
+    print(
+        f"DDR {row['ddr_corun_gbps']:6.1f} GB/s "
+        f"(loss {row['ddr_loss_pct']:.0f}%)   "
+        f"CXL {row['cxl_corun_gbps']:5.1f} GB/s   "
+        f"CXL-over-switch {row['cxl_sw_corun_gbps']:5.1f} GB/s "
+        f"(residency {row['t_cxl_sw_corun_ns']:.0f} ns)"
+    )
 
 
 def main() -> None:
@@ -39,6 +70,8 @@ def main() -> None:
         f"CXL {miku.bandwidth('cxl'):5.1f} GB/s "
         f"({100 * miku.bandwidth('cxl') / opt_cxl:.0f}% of its ceiling)"
     )
+
+    scenarios()
 
 
 if __name__ == "__main__":

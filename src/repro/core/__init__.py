@@ -11,13 +11,19 @@ from repro.core.controller import (
     StragglerGovernor,
 )
 from repro.core.des import SimResult, TieredMemorySim, WorkloadSpec
+from repro.core.des import validate_workloads
 from repro.core.device_model import (
     CXL_DEVICE,
+    CXL_SWITCH_DEVICE,
     DDR5_DIMM,
+    DDR_REMOTE_DIMM,
     DeviceModel,
     PlatformModel,
     PLATFORMS,
+    UnknownTierError,
     platform_a,
+    platform_a_numa,
+    platform_a_switch,
     platform_b,
     tpu_host_platform,
 )
@@ -34,6 +40,7 @@ from repro.core.substrate import (
     MemorySubstrate,
     ReplaySubstrate,
     StepTimingSubstrate,
+    TierSetWindowedCounters,
     WindowedCounters,
     WindowRecord,
 )
@@ -54,12 +61,18 @@ __all__ = [
     "SimResult",
     "TieredMemorySim",
     "WorkloadSpec",
+    "validate_workloads",
     "CXL_DEVICE",
+    "CXL_SWITCH_DEVICE",
     "DDR5_DIMM",
+    "DDR_REMOTE_DIMM",
     "DeviceModel",
     "PlatformModel",
     "PLATFORMS",
+    "UnknownTierError",
     "platform_a",
+    "platform_a_numa",
+    "platform_a_switch",
     "platform_b",
     "tpu_host_platform",
     "EstimatorConfig",
@@ -73,6 +86,7 @@ __all__ = [
     "MemorySubstrate",
     "ReplaySubstrate",
     "StepTimingSubstrate",
+    "TierSetWindowedCounters",
     "WindowedCounters",
     "WindowRecord",
     "HBM_TIER",

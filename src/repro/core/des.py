@@ -18,9 +18,11 @@ analysis identifies (§4.2):
     entry residency *is* the memory service time (queue wait at the device +
     service + bus flight).  Slow-tier requests with 8-10x residency
     monopolize the pool — the unfair-queuing mechanism.
-  * **Devices** — DDR group / CXL group per :mod:`repro.core.device_model`:
-    ``c`` deterministic servers + unbounded internal queue (requests wait
-    *while holding ToR entries*).
+  * **Devices** — one station per platform tier (the DDR group, the CXL
+    group, and any extra tiers — CXL-over-switch, NUMA-remote DDR — in
+    :attr:`~repro.core.device_model.PlatformModel.tiers` order), each per
+    :mod:`repro.core.device_model`: ``c`` deterministic servers + unbounded
+    internal queue (requests wait *while holding ToR entries*).
   * **LLC** — an optional station in front of the devices; hits are serviced
     fast but still consume ToR entries (paper §4.3), so LLC effectiveness
     degrades under slow-tier backlog.  Capacity partitioning (Intel CAT
@@ -52,9 +54,13 @@ from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.controller import Decision, MikuController
-from repro.core.device_model import DeviceModel, PlatformModel
+from repro.core.device_model import (
+    DeviceModel,
+    PlatformModel,
+    UnknownTierError,
+)
 from repro.core.littles_law import OpClass, TierCounters
-from repro.core.substrate import ControlLoop, WindowedCounters
+from repro.core.substrate import ControlLoop, TierSetWindowedCounters
 
 # Event kinds.  Heap payloads are (time, packed) with
 # packed = (seq << _SEQ_SHIFT) | (kind << _KIND_SHIFT) | arg — seq in the
@@ -69,9 +75,10 @@ _KIND_SHIFT = 32
 _SEQ_SHIFT = 36
 _ARG_MASK = 0xFFFFFFFF
 
-# Station / tier integer codes (tiers are the first two).
-_DDR, _CXL, _LLC = 0, 1, 2
-_TIER_NAMES = ("ddr", "cxl")
+# Tier integer codes for the canonical two-tier platform: tier codes are
+# positions in PlatformModel.tiers (fast tier first), stations are the tier
+# codes plus one trailing LLC station (code ``n_tiers``, per sim instance).
+_DDR, _CXL = 0, 1
 _OPS = tuple(OpClass)
 
 #: Default bound on per-workload latency reservoirs (satellite: keep
@@ -94,7 +101,7 @@ class WorkloadSpec:
 
     name: str
     op: OpClass
-    tier: str  # "ddr" | "cxl"
+    tier: str  # any tier name of the platform ("ddr", "cxl", "cxl_sw", ...)
     n_cores: int
     #: Outstanding cachelines per core, *including* L2-prefetcher stream
     #: depth — bw-test's sequential streams keep the prefetchers saturated,
@@ -107,16 +114,63 @@ class WorkloadSpec:
     llc_alloc_mb: float = 0.0
     phases: Optional[Sequence[Tuple[float, str]]] = None
     miku_managed: bool = True  # slow-tier workloads MIKU may throttle
-    #: Software page-interleaving across tiers: fraction of requests sent to
-    #: DDR (the rest go to CXL).  Overrides ``tier`` when set (Fig. 1/2
-    #: "Interleaving" scheme; Linux weighted interleaving).
+    #: Software page-interleaving across the canonical pair: fraction of
+    #: requests sent to the fast tier (the rest go to the second tier).
+    #: Overrides ``tier`` when set (Fig. 1/2 "Interleaving" scheme; Linux
+    #: weighted interleaving).  Shorthand for ``placement={"ddr": f,
+    #: "cxl": 1 - f}`` that stays on the two-tier fast path.
     ddr_fraction: Optional[float] = None
+    #: General tier-placement vector: tier name -> fraction of requests,
+    #: over *any* of the platform's tiers (must sum to 1).  Overrides
+    #: ``tier`` when set; mutually exclusive with ``ddr_fraction``.  This is
+    #: weighted interleaving over an N-tier platform — e.g. NUMA striping
+    #: ``{"ddr": 0.5, "ddr_remote": 0.5}``.
+    placement: Optional[Dict[str, float]] = None
 
     def effective_mlp(self, granularity: int = 1) -> int:
         """Outstanding *simulated requests* per core (macro-request units)."""
         if self.dependent or self.sync:
             return 1
         return max(1, self.mlp // granularity)
+
+
+def validate_workloads(
+    platform: PlatformModel, workloads: Sequence["WorkloadSpec"]
+) -> None:
+    """Check every workload's tier references against ``platform``.
+
+    Raises :class:`~repro.core.device_model.UnknownTierError` naming the
+    platform's tier list for any unknown tier, and ``ValueError`` for a
+    malformed placement vector.  Runs at :class:`TieredMemorySim` (and
+    ``SimJob``) construction so misconfigured scenarios fail loudly instead
+    of silently landing on the CXL device.
+    """
+    known = platform.tier_names
+    for w in workloads:
+        if w.placement is not None and w.ddr_fraction is not None:
+            raise ValueError(
+                f"workload {w.name!r}: placement and ddr_fraction are "
+                "mutually exclusive"
+            )
+        refs = [w.tier]
+        if w.phases:
+            refs.extend(t for _, t in w.phases)
+        if w.placement is not None:
+            refs.extend(w.placement)
+        for t in refs:
+            if t not in known:
+                raise UnknownTierError(t, known)
+        if w.placement is not None:
+            if any(f < 0.0 for f in w.placement.values()):
+                raise ValueError(
+                    f"workload {w.name!r}: negative placement fraction"
+                )
+            total = sum(w.placement.values())
+            if abs(total - 1.0) > 1e-6:
+                raise ValueError(
+                    f"workload {w.name!r}: placement fractions sum to "
+                    f"{total}, expected 1.0"
+                )
 
 
 @dataclasses.dataclass
@@ -189,6 +243,14 @@ class TieredMemorySim:
     ):
         self.platform = platform
         self.workloads = list(workloads)
+        validate_workloads(platform, self.workloads)
+        # Ordered tier table: tier code == position in platform.tiers (fast
+        # tier first); the LLC is one extra station after the tiers.
+        tiers = platform.tiers
+        self._tier_names = platform.tier_names
+        self._n_tiers = len(tiers)
+        self._tier_idx = {t: i for i, t in enumerate(self._tier_names)}
+        self._llc = self._n_tiers  # LLC station code
         self.rng = random.Random(seed)
         # Reservoir sampling draws from its own stream so enabling/resizing
         # it can never perturb the simulated system.
@@ -210,15 +272,11 @@ class TieredMemorySim:
         self._seq = 0
         self._heap: List[Tuple[float, int]] = []
 
-        # Stations: [ddr, cxl, llc] slot counts, busy counts, FIFO queues of
-        # request ids.  Queue entries hold ToR slots.
-        self._st_slots = [
-            platform.ddr.total_slots,
-            platform.cxl.total_slots,
-            platform.llc_slots,
-        ]
-        self._st_busy = [0, 0, 0]
-        self._st_q: List[deque] = [deque(), deque(), deque()]
+        # Stations: [tier 0, ..., tier n-1, llc] slot counts, busy counts,
+        # FIFO queues of request ids.  Queue entries hold ToR slots.
+        self._st_slots = [d.total_slots for d in tiers] + [platform.llc_slots]
+        self._st_busy = [0] * (self._n_tiers + 1)
+        self._st_q: List[deque] = [deque() for _ in range(self._n_tiers + 1)]
 
         # Shared queues.  Platform capacities are in cachelines; one simulated
         # macro-request covers `granularity` cachelines, so scale down.
@@ -254,11 +312,14 @@ class TieredMemorySim:
 
         # Per-workload precomputed constants (indexed by wi).
         self._w_g: List[int] = []  # cachelines per macro-request
-        self._w_svc: List[Tuple[float, float]] = []  # device service by tier
-        self._w_bytes: List[Tuple[float, float]] = []  # retired bytes by tier
+        self._w_svc: List[Tuple[float, ...]] = []  # device service by tier
+        self._w_bytes: List[Tuple[float, ...]] = []  # retired bytes by tier
         self._w_llc_svc: List[float] = []
         self._w_phit: List[float] = []  # <0 disables the LLC lottery
         self._w_frac: List[Optional[float]] = []
+        #: General placement: cumulative tier-probability vector (or None).
+        #: The last entry is +inf so the routing scan always terminates.
+        self._w_cum: List[Optional[Tuple[float, ...]]] = []
         self._w_managed: List[bool] = []
         self._w_op: List[int] = []  # index into _OPS
         self._w_effmlp: List[int] = []
@@ -266,6 +327,8 @@ class TieredMemorySim:
 
         # Phase / throttle state per workload.
         self._phase_tier: List[int] = []
+        #: Per-workload (duration_ns, tier_code) schedule (None = static).
+        self._phase_seq: List[Optional[List[Tuple[float, int]]]] = []
         self._phase_idx: List[int] = [0] * n
         self._max_cores: List[Optional[int]] = [None] * n
         self._rate: List[float] = [1.0] * n
@@ -282,16 +345,10 @@ class TieredMemorySim:
             ge = 1 if (w.dependent or w.sync) else g
             self._w_g.append(ge)
             self._w_svc.append(
-                (
-                    platform.ddr.service_ns(w.op) * ge,
-                    platform.cxl.service_ns(w.op) * ge,
-                )
+                tuple(d.service_ns(w.op) * ge for d in tiers)
             )
             self._w_bytes.append(
-                (
-                    float(platform.ddr.access_bytes * ge),
-                    float(platform.cxl.access_bytes * ge),
-                )
+                tuple(float(d.access_bytes * ge) for d in tiers)
             )
             self._w_llc_svc.append(
                 platform.llc_service_ns * 2.0
@@ -306,12 +363,29 @@ class TieredMemorySim:
                 self._w_phit.append(min(1.0, w.llc_alloc_mb / max(w.wss_mb, 1e-9)))
             else:
                 self._w_phit.append(-1.0)
-            self._w_frac.append(w.ddr_fraction)
+            if w.placement is not None:
+                cum: List[float] = []
+                acc = 0.0
+                for t in self._tier_names:
+                    acc += w.placement.get(t, 0.0)
+                    cum.append(acc)
+                cum[-1] = float("inf")  # absorb rounding; scan terminates
+                self._w_frac.append(None)
+                self._w_cum.append(tuple(cum))
+            else:
+                self._w_frac.append(w.ddr_fraction)
+                self._w_cum.append(None)
             self._w_managed.append(w.miku_managed)
             self._w_op.append(_OPS.index(w.op))
             self._w_effmlp.append(w.effective_mlp(g))
+            if w.phases:
+                self._phase_seq.append(
+                    [(dur, self._tier_idx[t]) for dur, t in w.phases]
+                )
+            else:
+                self._phase_seq.append(None)
             tier0 = w.phases[0][1] if w.phases else w.tier
-            self._phase_tier.append(_TIER_NAMES.index(tier0))
+            self._phase_tier.append(self._tier_idx[tier0])
             self._gi0.append(len(self._rr_wi))
             for core in range(w.n_cores):
                 self._rr_wi.append(wi)
@@ -319,7 +393,7 @@ class TieredMemorySim:
                 self._out.append(0)
 
         # Device pipeline (return-flight) latency per tier.
-        self._pipe = (platform.ddr.pipeline_ns, platform.cxl.pipeline_ns)
+        self._pipe = tuple(d.pipeline_ns for d in tiers)
 
         # Accounting: per-workload flat accumulators, materialized into
         # WorkloadStats at the end of the run.
@@ -332,16 +406,16 @@ class TieredMemorySim:
         self._stat_latcnt = [0] * n
         self._stat_res: List[List[float]] = [[] for _ in range(n)]
 
-        # Tier counters: flat accumulators + a WindowedCounters pair the
-        # control loop reads deltas from (fast=ddr, slow=cxl).
-        self._counters = WindowedCounters()
+        # Tier counters: flat accumulators + a TierSetWindowedCounters the
+        # control loop reads (fast, merged-slow) deltas from.
+        self._counters = TierSetWindowedCounters(self._n_tiers)
         self.tier_counters = {
-            "ddr": self._counters.fast,
-            "cxl": self._counters.slow,
+            t: self._counters.tiers[i]
+            for i, t in enumerate(self._tier_names)
         }
-        self._tc_ins = [0, 0]
-        self._tc_occ = [0.0, 0.0]
-        self._tc_cls = [[0] * len(_OPS), [0] * len(_OPS)]
+        self._tc_ins = [0] * self._n_tiers
+        self._tc_occ = [0.0] * self._n_tiers
+        self._tc_cls = [[0] * len(_OPS) for _ in range(self._n_tiers)]
 
         # Occupancy integrals are accumulated as per-request residencies at
         # retire time (Σ residency == ∫ occupancy dt); requests still in
@@ -350,9 +424,9 @@ class TieredMemorySim:
         # (LLC hits still hold ToR entries and count toward their tier,
         # paper §4.3); the total integral is their sum.
         self.tor_occupancy_integral = 0.0
-        self._occ_tier = [0.0, 0.0]
+        self._occ_tier = [0.0] * self._n_tiers
         self.tor_inserts = 0
-        self._tier_inflight = [0, 0]
+        self._tier_inflight = [0] * self._n_tiers
         self._timeline_bucket_ns = window_ns
         self._timeline_acc = [0.0] * n
         self._timeline_next = self._timeline_bucket_ns
@@ -363,7 +437,7 @@ class TieredMemorySim:
         return self.now
 
     def _materialize_counters(self) -> None:
-        for code, tc in ((_DDR, self._counters.fast), (_CXL, self._counters.slow)):
+        for code, tc in enumerate(self._counters.tiers):
             tc.inserts = self._tc_ins[code]
             tc.occupancy_time = self._tc_occ[code]
             cls = self._tc_cls[code]
@@ -392,12 +466,16 @@ class TieredMemorySim:
     # -- throttle cache -------------------------------------------------------
     def _touches_slow(self, wi: int) -> bool:
         """Does this workload currently generate slow-tier traffic?  (MIKU
-        identifies CXL-accessing threads via sampled physical addresses; the
-        simulator knows placement exactly — DESIGN.md §2.)"""
+        identifies slow-tier-accessing threads via sampled physical
+        addresses; the simulator knows placement exactly — DESIGN.md §2.)
+        Every tier after the first counts as slow."""
         frac = self._w_frac[wi]
         if frac is not None:
             return frac < 1.0
-        return self._phase_tier[wi] == _CXL
+        cum = self._w_cum[wi]
+        if cum is not None:
+            return cum[0] < 1.0  # probability mass beyond the fast tier
+        return self._phase_tier[wi] != _DDR
 
     def _recompute_throttle(self, wi: int) -> None:
         throttleable = self._w_managed[wi] and self._touches_slow(wi)
@@ -442,6 +520,7 @@ class TieredMemorySim:
         out = self._out
         effmlp, limit = self._w_effmlp, self._limit
         frac_of, cur_tier = self._w_frac, self._phase_tier
+        cum_of = self._w_cum
         unthrottled, svc = self._unthrottled, self._w_svc
         rnd = self.rng.random
         free = self._r_free
@@ -461,7 +540,14 @@ class TieredMemorySim:
                 continue
             frac = frac_of[wi]
             if frac is None:
-                tier = cur_tier[wi]
+                cum = cum_of[wi]
+                if cum is None:
+                    tier = cur_tier[wi]
+                else:  # general placement lottery (one draw, like frac)
+                    r = rnd()
+                    tier = 0
+                    while r >= cum[tier]:
+                        tier += 1
             else:
                 tier = _DDR if rnd() < frac else _CXL
             if not unthrottled[wi] and not self._take_token(wi, svc[wi][tier]):
@@ -517,9 +603,11 @@ class TieredMemorySim:
         out = self._out
         effmlp, limit = self._w_effmlp, self._limit
         frac_of, cur_tier = self._w_frac, self._phase_tier
+        cum_of = self._w_cum
         unthrottled = self._unthrottled
         free = self._r_free
         tier_inflight = self._tier_inflight
+        llc = self._llc
         while irq and self.tor_used < cap:
             rid = irq.popleft()
             self.tor_used += 1
@@ -534,10 +622,10 @@ class TieredMemorySim:
             wi = r_wl[rid]
             p = phit[wi]
             if p == 2.0:  # sync workloads: coherence ops at the LLC
-                station = _LLC
+                station = llc
                 service = llc_svc[wi]
             elif p >= 0.0 and rnd() < p:
-                station = _LLC
+                station = llc
                 service = llc_svc[wi]
             else:
                 station = tier
@@ -578,7 +666,14 @@ class TieredMemorySim:
                         continue
                     frac = frac_of[iwi]
                     if frac is None:
-                        itier = cur_tier[iwi]
+                        icum = cum_of[iwi]
+                        if icum is None:
+                            itier = cur_tier[iwi]
+                        else:
+                            r = rnd()
+                            itier = 0
+                            while r >= icum[itier]:
+                                itier += 1
                     else:
                         itier = _DDR if rnd() < frac else _CXL
                     if not unthrottled[iwi] and not self._take_token(
@@ -618,7 +713,7 @@ class TieredMemorySim:
         wi = self._r_wl[rid]
         residency = now - self._r_ttor[rid]
         self._occ_tier[tier] += residency
-        if self._r_station[rid] != _LLC:
+        if self._r_station[rid] != self._llc:
             self._tc_ins[tier] += 1
             self._tc_occ[tier] += residency
             self._tc_cls[tier][self._w_op[wi]] += 1
@@ -656,11 +751,11 @@ class TieredMemorySim:
                 self._push(dur, _EV_PHASE, wi)
 
     def _phase_flip(self, wi: int) -> None:
-        w = self.workloads[wi]
-        assert w.phases is not None
-        self._phase_idx[wi] = (self._phase_idx[wi] + 1) % len(w.phases)
-        dur, tier = w.phases[self._phase_idx[wi]]
-        self._phase_tier[wi] = _TIER_NAMES.index(tier)
+        seq = self._phase_seq[wi]
+        assert seq is not None
+        self._phase_idx[wi] = (self._phase_idx[wi] + 1) % len(seq)
+        dur, tier_code = seq[self._phase_idx[wi]]
+        self._phase_tier[wi] = tier_code
         self._recompute_throttle(wi)
         self._push(self.now + dur, _EV_PHASE, wi)
         self._refill_issue(wi)
@@ -722,7 +817,9 @@ class TieredMemorySim:
         n_rr = len(rr_wi)
         effmlp, limit = self._w_effmlp, self._limit
         frac_of, cur_tier = self._w_frac, self._phase_tier
+        cum_of = self._w_cum
         unthrottled = self._unthrottled
+        llc = self._llc
         while heap:
             t, packed = pop(heap)
             if t > sim_ns:
@@ -738,7 +835,7 @@ class TieredMemorySim:
                 wi = r_wl[rid]
                 residency = t - r_ttor[rid]
                 occ_tier[tier] += residency
-                if r_station[rid] != _LLC:
+                if r_station[rid] != llc:
                     tc_ins[tier] += 1
                     tc_occ[tier] += residency
                     tc_cls[tier][w_op[wi]] += 1
@@ -776,10 +873,10 @@ class TieredMemorySim:
                     awi = r_wl[arid]
                     p = phit[awi]
                     if p == 2.0:
-                        station = _LLC
+                        station = llc
                         service = llc_svc[awi]
                     elif p >= 0.0 and rnd() < p:
-                        station = _LLC
+                        station = llc
                         service = llc_svc[awi]
                     else:
                         station = atier
@@ -812,7 +909,14 @@ class TieredMemorySim:
                                 continue
                             frac = frac_of[iwi]
                             if frac is None:
-                                itier = cur_tier[iwi]
+                                icum = cum_of[iwi]
+                                if icum is None:
+                                    itier = cur_tier[iwi]
+                                else:
+                                    r = rnd()
+                                    itier = 0
+                                    while r >= icum[itier]:
+                                        itier += 1
                             else:
                                 itier = _DDR if rnd() < frac else _CXL
                             if not unthrottled[iwi] and not self._take_token(
@@ -854,7 +958,7 @@ class TieredMemorySim:
                                 (seq << _SEQ_SHIFT) | complete_bits | nxt))
                 else:
                     st_busy[station] -= 1
-                if station == _LLC:
+                if station == llc:
                     retire(rid)  # LLC: no return flight, retire in place
                 else:
                     pipeline = pipe[r_tier[rid]]
@@ -882,7 +986,7 @@ class TieredMemorySim:
         for rid in range(len(r_wl)):
             if rid not in dead:
                 occ_tier[r_tier[rid]] += sim_ns - r_ttor[rid]
-        self.tor_occupancy_integral = occ_tier[_DDR] + occ_tier[_CXL]
+        self.tor_occupancy_integral = sum(occ_tier)
         self._materialize_counters()
         # Materialize flat accumulators into the public WorkloadStats.
         for wi, w in enumerate(self.workloads):
@@ -901,8 +1005,8 @@ class TieredMemorySim:
             tor_inserts=self.tor_inserts,
             decisions=self.control.decisions,
             per_tier_occupancy_integral={
-                "ddr": self._occ_tier[_DDR],
-                "cxl": self._occ_tier[_CXL],
+                t: self._occ_tier[i]
+                for i, t in enumerate(self._tier_names)
             },
         )
 

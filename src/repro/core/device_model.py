@@ -32,11 +32,23 @@ These reproduce the paper's observed ratios; they are inputs, not claims.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Tuple
 
 from repro.core.littles_law import ACCESS_MIX, OpClass
 
 CACHELINE = 64  # bytes
+
+
+class UnknownTierError(ValueError):
+    """A workload or lookup named a tier the platform does not have."""
+
+    def __init__(self, tier: str, known: Tuple[str, ...]):
+        super().__init__(
+            f"unknown memory tier {tier!r}; platform tiers are "
+            f"{', '.join(known)}"
+        )
+        self.tier = tier
+        self.known = known
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,7 +65,7 @@ class DeviceModel:
     """
 
     name: str
-    tier: str  # "ddr" | "cxl"
+    tier: str  # tier name this device backs ("ddr", "cxl", "cxl_sw", ...)
     parallelism: int
     read_service_ns: float
     write_service_ns: float
@@ -113,11 +125,42 @@ CXL_DEVICE = DeviceModel(
     pipeline_ns=255.0,  # ~290ns unloaded load latency
 )
 
+#: The same expander reached through a CXL switch: identical device
+#: parallelism/service, plus the switch's store-and-forward hop each way
+#: (~90 ns per direction — the CXL-over-switch topologies of
+#: "Demystifying CXL Memory", arXiv 2303.15375).
+CXL_SWITCH_DEVICE = DeviceModel(
+    name="cxl-sw-exp",
+    tier="cxl_sw",
+    parallelism=14,
+    read_service_ns=36.0,
+    write_service_ns=72.0,
+    pipeline_ns=435.0,  # cxl pipeline + ~180ns round-trip switch hop
+)
+
+#: A DDR5 DIMM on the *other* socket: same DIMM-level service, plus the
+#: cross-socket interconnect (UPI/xGMI) flight — the paper's Table 1 lists
+#: NUMA-remote DDR latency between local DDR and CXL.
+DDR_REMOTE_DIMM = DeviceModel(
+    name="ddr5-remote-dimm",
+    tier="ddr_remote",
+    parallelism=16,
+    read_service_ns=32.0,
+    write_service_ns=44.0,
+    pipeline_ns=165.0,  # local 78ns + ~87ns UPI round trip: ~197ns unloaded
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class PlatformModel:
-    """A host platform: an interleaved DDR pool + an interleaved CXL pool
-    behind one shared request-tracking structure (CHA ToR / CCX equivalent).
+    """A host platform: an *ordered list of memory tiers* behind one shared
+    request-tracking structure (CHA ToR / CCX equivalent).
+
+    The first tier (``ddr``) is the fast tier the control plane protects;
+    every later tier is a slow tier it may throttle.  The classic paper
+    platform is the two-tier (DDR, CXL) pair; ``extra_tiers`` appends further
+    devices — CXL behind a switch, NUMA-remote DDR pools, heterogeneous
+    expanders — each keyed by its :attr:`DeviceModel.tier` name.
 
     ``tor_entries`` bounds simultaneously-tracked requests (dispatched but not
     completed); ``irq_entries`` bounds staged requests awaiting a ToR entry;
@@ -136,9 +179,48 @@ class PlatformModel:
     llc_service_ns: float
     llc_slots: int
     llc_capacity_mb: float
+    extra_tiers: Tuple[DeviceModel, ...] = ()
+
+    def __post_init__(self):
+        # Frozen dataclass: cache the tier lookup tables once (device_for
+        # sits on per-request hot paths; eq/repr/pickle see only the
+        # declared fields).
+        tiers = (self.ddr, self.cxl) + self.extra_tiers
+        names = tuple(d.tier for d in tiers)
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names in platform: {names}")
+        object.__setattr__(self, "_tiers", tiers)
+        object.__setattr__(self, "_tier_names", names)
+        object.__setattr__(
+            self, "_tier_idx", {t: i for i, t in enumerate(names)}
+        )
+
+    @property
+    def tiers(self) -> Tuple[DeviceModel, ...]:
+        """Ordered tier devices, fast tier first."""
+        return self._tiers
+
+    @property
+    def tier_names(self) -> Tuple[str, ...]:
+        return self._tier_names
+
+    def tier_index(self, tier: str) -> int:
+        try:
+            return self._tier_idx[tier]
+        except KeyError:
+            raise UnknownTierError(tier, self._tier_names) from None
 
     def device_for(self, tier: str) -> DeviceModel:
-        return self.ddr if tier == "ddr" else self.cxl
+        try:
+            return self._tiers[self._tier_idx[tier]]
+        except KeyError:
+            raise UnknownTierError(tier, self._tier_names) from None
+
+    def with_extra_tiers(self, *devices: DeviceModel) -> "PlatformModel":
+        """A copy of this platform with ``devices`` appended as slow tiers."""
+        return dataclasses.replace(
+            self, extra_tiers=self.extra_tiers + tuple(devices)
+        )
 
 
 def platform_a(ddr_dimms: int = 8, cxl_devices: int = 2) -> PlatformModel:
@@ -170,6 +252,41 @@ def platform_b(ddr_dimms: int = 12, cxl_devices: int = 4) -> PlatformModel:
         llc_service_ns=16.0,
         llc_slots=128,
         llc_capacity_mb=384.0,
+    )
+
+
+def platform_a_switch(
+    ddr_dimms: int = 8, cxl_devices: int = 2, switch_devices: int = 2
+) -> PlatformModel:
+    """Platform A with a third tier: CXL expanders behind a switch.
+
+    The tier set (ddr, cxl, cxl_sw) is the three-tier co-run topology the
+    two-tier API could not express — same control plane, one more station.
+    """
+    base = platform_a(ddr_dimms, cxl_devices)
+    return dataclasses.replace(
+        base,
+        name=f"{base.name}-{switch_devices}sw",
+        extra_tiers=(
+            CXL_SWITCH_DEVICE.scaled(switch_devices,
+                                     name=f"cxlswx{switch_devices}"),
+        ),
+    )
+
+
+def platform_a_numa(
+    ddr_dimms: int = 8, cxl_devices: int = 2, remote_dimms: int = 8
+) -> PlatformModel:
+    """Platform A with the remote socket's DDR pool as a third tier
+    (ddr, cxl, ddr_remote) — the NUMA-remote-DDR variant."""
+    base = platform_a(ddr_dimms, cxl_devices)
+    return dataclasses.replace(
+        base,
+        name=f"{base.name}-{remote_dimms}rddr",
+        extra_tiers=(
+            DDR_REMOTE_DIMM.scaled(remote_dimms,
+                                   name=f"rddr5x{remote_dimms}"),
+        ),
     )
 
 
@@ -232,5 +349,7 @@ PLATFORMS: Dict[str, PlatformModel] = {
     "B": platform_b(),
     "A-1to1": platform_a(ddr_dimms=1, cxl_devices=1),
     "B-1to1": platform_b(ddr_dimms=1, cxl_devices=1),
+    "A-switch": platform_a_switch(),
+    "A-numa": platform_a_numa(),
     "TPU": tpu_host_platform(),
 }

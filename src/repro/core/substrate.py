@@ -83,6 +83,39 @@ class WindowedCounters:
         self._slow_mark = self.slow.snapshot()
 
 
+class TierSetWindowedCounters:
+    """N-tier generalization of :class:`WindowedCounters`.
+
+    One cumulative :class:`TierCounters` per tier (fast tier first, in
+    platform order).  ``delta()`` still returns the canonical
+    ``(fast, slow)`` pair the two-input decision laws consume: tier 0 is
+    the fast delta and tiers 1..n-1 merge into one slow-tier delta — an
+    N-tier substrate looks to any existing controller exactly like the
+    two-tier pair, so the control plane needs no changes when tiers are
+    added.  For ``n_tiers=2`` the deltas are bit-identical to
+    :class:`WindowedCounters`.
+    """
+
+    __slots__ = ("tiers", "_marks")
+
+    def __init__(self, n_tiers: int = 2) -> None:
+        self.tiers = [TierCounters() for _ in range(n_tiers)]
+        self._marks = [t.snapshot() for t in self.tiers]
+
+    def delta(self) -> Tuple[TierCounters, TierCounters]:
+        """(fast, merged-slow) accumulated since the previous call."""
+        ds = [t.delta(m) for t, m in zip(self.tiers, self._marks)]
+        self._marks = [t.snapshot() for t in self.tiers]
+        slow = ds[1]
+        for extra in ds[2:]:
+            slow.merge(extra)
+        return ds[0], slow
+
+    def reset(self) -> None:
+        self.tiers = [TierCounters() for _ in self.tiers]
+        self._marks = [t.snapshot() for t in self.tiers]
+
+
 @dataclasses.dataclass
 class WindowRecord:
     """Telemetry for one control window."""

@@ -1,13 +1,18 @@
-"""Figure-level experiment runners (one per paper table/figure).
+"""Figure-level experiment runners — thin wrappers over the scenario API.
 
-Every function returns plain dict/list results; :mod:`benchmarks` formats
-them as CSV.  All bandwidths are GB/s, latencies ns, times simulator-ns.
+Every function here used to hand-build its :class:`~repro.memsim.sweep.SimJob`
+matrix imperatively; the matrices now live as declarative, registry-named
+scenarios in :mod:`repro.scenarios.library` and these wrappers only preserve
+the original call signatures and return shapes (plain dicts/lists, all
+bandwidths GB/s, latencies ns, times simulator-ns).  New experiments should
+target the scenario registry directly::
 
-Execution goes through :mod:`repro.memsim.sweep`: each figure builds its
-matrix of independent :class:`~repro.memsim.sweep.SimJob` cells and hands
-the whole batch to :func:`~repro.memsim.sweep.run_sweep`, which fans out
-over a process pool when ``REPRO_SWEEP_PROCS`` (or an explicit
-``processes=``) asks for it — serial and parallel runs are bit-identical.
+    from repro.scenarios import run_scenario
+    rows = run_scenario("fig3_bandwidth", {"platform": "A"}).rows
+
+``tests/test_scenarios.py`` pins each registered scenario's job matrix and
+result rows against the legacy imperative construction, so wrapper and
+scenario cannot drift apart.
 """
 
 from __future__ import annotations
@@ -15,35 +20,17 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.des import WorkloadSpec
 from repro.core.device_model import PlatformModel
 from repro.core.littles_law import OpClass
-from repro.memsim.sweep import SimJob, run_sweep
-from repro.memsim.workloads import alternating_bw_pair, bw_test, lat_share, lat_test
-
-_BW_SIM_NS = 120_000.0
-_CORUN_SIM_NS = 300_000.0
 
 
-def _job(
-    platform: PlatformModel,
-    workloads: List[WorkloadSpec],
-    sim_ns: float,
-    *,
-    miku: bool = False,
-    seed: int = 0,
-    granularity: int = 4,
-    window_ns: float = 10_000.0,
-) -> SimJob:
-    return SimJob(
-        platform=platform,
-        workloads=workloads,
-        sim_ns=sim_ns,
-        seed=seed,
-        granularity=granularity,
-        window_ns=window_ns,
-        miku=miku,
-    )
+def _rows(name: str, overrides: dict, processes: Optional[int],
+          drop: Tuple[str, ...] = ("platform",)) -> List[dict]:
+    from repro.scenarios import run_scenario  # local: avoids import cycle
+
+    table = run_scenario(name, overrides, processes)
+    return [{k: v for k, v in r.items() if k not in drop}
+            for r in table.rows]
 
 
 # -- Fig. 3: single-threaded and peak bandwidth, DDR vs CXL -----------------
@@ -54,28 +41,8 @@ def bandwidth_matrix(
     threads: Tuple[int, ...] = (1, 16),
     processes: Optional[int] = None,
 ) -> List[dict]:
-    cells = [
-        (op, n, tier)
-        for op in OpClass
-        for n in threads
-        for tier in ("ddr", "cxl")
-    ]
-    jobs = [
-        _job(platform, [bw_test(tier, op, n)], _BW_SIM_NS)
-        for op, n, tier in cells
-    ]
-    rows = []
-    for (op, n, tier), job, res in zip(cells, jobs, run_sweep(jobs, processes)):
-        rows.append(
-            {
-                "op": op.value,
-                "tier": tier,
-                "threads": n,
-                "bandwidth_gbps": res.bandwidth(job.workloads[0].name),
-                "peak_model_gbps": platform.device_for(tier).peak_bandwidth_gbps(op),
-            }
-        )
-    return rows
+    return _rows("fig3_bandwidth",
+                 {"platform": platform, "threads": threads}, processes)
 
 
 # -- Fig. 4: average and tail latency ----------------------------------------
@@ -86,24 +53,8 @@ def latency_matrix(
     threads: Tuple[int, ...] = (1, 2, 4, 8, 16),
     processes: Optional[int] = None,
 ) -> List[dict]:
-    cells = [(tier, n) for tier in ("ddr", "cxl") for n in threads]
-    jobs = [
-        _job(platform, [lat_test(tier, OpClass.LOAD, n)], 400_000.0, granularity=1)
-        for tier, n in cells
-    ]
-    rows = []
-    for (tier, n), job, res in zip(cells, jobs, run_sweep(jobs, processes)):
-        st = res.stats[job.workloads[0].name]
-        rows.append(
-            {
-                "tier": tier,
-                "threads": n,
-                "avg_ns": st.mean_latency_ns(),
-                "p50_ns": st.percentile_ns(0.50),
-                "p99_ns": st.percentile_ns(0.99),
-            }
-        )
-    return rows
+    return _rows("fig4_latency",
+                 {"platform": platform, "threads": threads}, processes)
 
 
 # -- Fig. 2: tiered memory management schemes --------------------------------
@@ -112,79 +63,12 @@ def latency_matrix(
 def tiering_schemes(
     platform: PlatformModel, op: OpClass, processes: Optional[int] = None
 ) -> Dict[str, float]:
-    """Aggregate bandwidth of two 16-thread copies under each scheme.
-
-    * upper   — one copy, WSS fully in DDR (max achievable).
-    * lower   — one copy, WSS fully in CXL (baseline).
-    * native  — copy A on DDR, copy B on CXL (application-directed).
-    * interleave — both copies page-interleaved at the tier bandwidth ratio.
-    * os_managed — interleaved placement plus migration tax: a background
-      kernel thread moving pages (load+store on both tiers), the paper's
-      "page migrations significantly degrade tiered memory performance".
-    """
-    out = {}
-    up, low = run_sweep(
-        [
-            _job(platform, [bw_test("ddr", op, 16, name="a")], _BW_SIM_NS),
-            _job(platform, [bw_test("cxl", op, 16, name="a")], _BW_SIM_NS),
-        ],
-        processes,
-    )
-    out["upper_ddr_only"] = up.bandwidth("a")
-    out["lower_cxl_only"] = low.bandwidth("a")
-
-    # The remaining schemes depend on the measured upper/lower split.
-    frac = out["upper_ddr_only"] / max(
-        out["upper_ddr_only"] + out["lower_cxl_only"], 1e-9
-    )
-    migration = WorkloadSpec(
-        name="kmigrated",
-        op=OpClass.STORE,
-        tier="cxl",
-        n_cores=2,
-        mlp=64,
-        ddr_fraction=0.5,
-        miku_managed=False,
-    )
-    nat, inter, osm = run_sweep(
-        [
-            _job(
-                platform,
-                [
-                    bw_test("ddr", op, 16, name="a", miku_managed=False),
-                    bw_test("cxl", op, 16, name="b"),
-                ],
-                _CORUN_SIM_NS,
-            ),
-            _job(
-                platform,
-                [
-                    bw_test("ddr", op, 16, name="a", ddr_fraction=frac,
-                            miku_managed=False),
-                    bw_test("cxl", op, 16, name="b", ddr_fraction=frac,
-                            miku_managed=False),
-                ],
-                _CORUN_SIM_NS,
-            ),
-            _job(
-                platform,
-                [
-                    bw_test("ddr", op, 16, name="a", ddr_fraction=frac,
-                            miku_managed=False),
-                    bw_test("cxl", op, 16, name="b", ddr_fraction=frac,
-                            miku_managed=False),
-                    migration,
-                ],
-                _CORUN_SIM_NS,
-            ),
-        ],
-        processes,
-    )
-    out["native"] = nat.bandwidth("a") + nat.bandwidth("b")
-    out["interleave"] = inter.bandwidth("a") + inter.bandwidth("b")
-    out["os_managed"] = osm.bandwidth("a") + osm.bandwidth("b")
-    out["ideal_combined"] = out["upper_ddr_only"] + out["lower_cxl_only"]
-    return out
+    """Aggregate bandwidth of two 16-thread copies under each scheme
+    (upper / lower / native / interleave / os_managed / ideal_combined)."""
+    (row,) = _rows("fig2_tiering",
+                   {"platform": platform, "op": (op,)}, processes,
+                   drop=("platform", "op"))
+    return row
 
 
 # -- Fig. 5 + 6: co-run collapse and ToR accounting ---------------------------
@@ -195,38 +79,8 @@ def corun_matrix(
     n_threads: int = 16,
     processes: Optional[int] = None,
 ) -> List[dict]:
-    ops = list(OpClass)
-    jobs = []
-    for op in ops:
-        a = bw_test("ddr", op, n_threads, name="ddr", miku_managed=False)
-        c = bw_test("cxl", op, n_threads, name="cxl")
-        jobs.append(_job(platform, [a], _BW_SIM_NS))
-        jobs.append(_job(platform, [c], _BW_SIM_NS))
-        jobs.append(_job(platform, [a, c], _CORUN_SIM_NS))
-    results = run_sweep(jobs, processes)
-    rows = []
-    for i, op in enumerate(ops):
-        alone, cxl_alone, both = results[3 * i : 3 * i + 3]
-        ddr_alone_bw = alone.bandwidth("ddr")
-        cxl_alone_bw = cxl_alone.bandwidth("cxl")
-        rows.append(
-            {
-                "op": op.value,
-                "ddr_alone_gbps": ddr_alone_bw,
-                "cxl_alone_gbps": cxl_alone_bw,
-                "ddr_corun_gbps": both.bandwidth("ddr"),
-                "cxl_corun_gbps": both.bandwidth("cxl"),
-                "ddr_loss_pct": 100.0 * (1 - both.bandwidth("ddr") / ddr_alone_bw),
-                # Fig. 6 quantities:
-                "tor_insert_rate_alone_per_ns": alone.tor_inserts / alone.sim_ns,
-                "tor_insert_rate_corun_per_ns": both.tor_inserts / both.sim_ns,
-                "tor_avg_latency_alone_ns": alone.tor_avg_latency_ns,
-                "tor_avg_latency_corun_ns": both.tor_avg_latency_ns,
-                "t_ddr_corun_ns": both.tier_counters["ddr"].mean_service_time,
-                "t_cxl_corun_ns": both.tier_counters["cxl"].mean_service_time,
-            }
-        )
-    return rows
+    return _rows("fig5_corun",
+                 {"platform": platform, "n_threads": n_threads}, processes)
 
 
 def tor_insert_bandwidth_correlation(
@@ -234,27 +88,8 @@ def tor_insert_bandwidth_correlation(
 ) -> float:
     """Pearson correlation between ToR insertion rate and delivered bandwidth
     across scenarios (paper: r = 0.998)."""
-    cells = []
-    jobs = []
-    for op in OpClass:
-        for scenario in ("ddr", "cxl", "both"):
-            wls: List[WorkloadSpec] = []
-            if scenario in ("ddr", "both"):
-                wls.append(bw_test("ddr", op, 16, name="ddr", miku_managed=False))
-            if scenario in ("cxl", "both"):
-                wls.append(bw_test("cxl", op, 16, name="cxl"))
-            cells.append(wls)
-            jobs.append(_job(platform, wls, _BW_SIM_NS))
-    xs, ys = [], []
-    for wls, res in zip(cells, run_sweep(jobs, processes)):
-        xs.append(res.tor_inserts / res.sim_ns)
-        ys.append(sum(res.bandwidth(w.name) for w in wls))
-    n = len(xs)
-    mx, my = sum(xs) / n, sum(ys) / n
-    cov = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
-    vx = sum((x - mx) ** 2 for x in xs) ** 0.5
-    vy = sum((y - my) ** 2 for y in ys) ** 0.5
-    return cov / max(vx * vy, 1e-12)
+    (row,) = _rows("fig6_tor_correlation", {"platform": platform}, processes)
+    return row["pearson_r"]
 
 
 # -- Fig. 7: LLC partitioning (Intel CAT analogue) ----------------------------
@@ -266,33 +101,11 @@ def llc_partition_sweep(
     allocs: Tuple[float, ...] = (0.95, 0.75, 0.5, 0.25, 0.05),
     processes: Optional[int] = None,
 ) -> List[dict]:
-    """Two store bw-tests with strong locality, DDR- vs CXL-backed; sweep the
-    DDR workload's LLC share (CAT).  ``free competition`` approximated by the
-    proportional 0.5 point for equal-WSS workloads."""
-    cap = platform.llc_capacity_mb
-    jobs = []
-    for alloc in allocs:
-        a = bw_test(
-            "ddr", OpClass.STORE, 16, name="ddr",
-            wss_mb=wss_mb, llc_alloc_mb=alloc * cap, miku_managed=False,
-        )
-        b = bw_test(
-            "cxl", OpClass.STORE, 16, name="cxl",
-            wss_mb=wss_mb, llc_alloc_mb=(1.0 - alloc) * cap, miku_managed=False,
-        )
-        jobs.append(_job(platform, [a, b], _CORUN_SIM_NS))
-    rows = []
-    for alloc, res in zip(allocs, run_sweep(jobs, processes)):
-        rows.append(
-            {
-                "wss_mb": wss_mb,
-                "ddr_llc_share": alloc,
-                "ddr_gbps": res.bandwidth("ddr"),
-                "cxl_gbps": res.bandwidth("cxl"),
-                "total_gbps": res.bandwidth("ddr") + res.bandwidth("cxl"),
-            }
-        )
-    return rows
+    return _rows(
+        "fig7_llc",
+        {"platform": platform, "wss_mb": (wss_mb,), "ddr_share": allocs},
+        processes,
+    )
 
 
 # -- Fig. 8: inter-core synchronization ---------------------------------------
@@ -303,23 +116,8 @@ def sync_interference(
     bg_threads: Tuple[int, ...] = (0, 4, 8, 16),
     processes: Optional[int] = None,
 ) -> List[dict]:
-    cells = [(tier, n) for tier in ("ddr", "cxl") for n in bg_threads]
-    jobs = []
-    for tier, n in cells:
-        wls = [lat_share()]
-        if n > 0:
-            wls.append(bw_test(tier, OpClass.LOAD, n, name="bg", miku_managed=False))
-        jobs.append(_job(platform, wls, 200_000.0, granularity=1))
-    rows = []
-    for (tier, n), res in zip(cells, run_sweep(jobs, processes)):
-        rows.append(
-            {
-                "bg_tier": tier,
-                "bg_threads": n,
-                "cas_latency_ns": res.stats["lat-share"].mean_latency_ns(),
-            }
-        )
-    return rows
+    return _rows("fig8_sync",
+                 {"platform": platform, "bg_threads": bg_threads}, processes)
 
 
 # -- Fig. 9: service time vs concurrency --------------------------------------
@@ -331,21 +129,11 @@ def service_time_curve(
     threads: Tuple[int, ...] = (1, 2, 4, 8, 16, 32),
     processes: Optional[int] = None,
 ) -> List[dict]:
-    cells = [(tier, n) for tier in ("ddr", "cxl") for n in threads]
-    jobs = [
-        _job(platform, [bw_test(tier, op, n)], _BW_SIM_NS) for tier, n in cells
-    ]
-    rows = []
-    for (tier, n), job, res in zip(cells, jobs, run_sweep(jobs, processes)):
-        rows.append(
-            {
-                "tier": tier,
-                "threads": n,
-                "service_time_ns": res.tier_counters[tier].mean_service_time,
-                "bandwidth_gbps": res.bandwidth(job.workloads[0].name),
-            }
-        )
-    return rows
+    return _rows(
+        "fig9_service",
+        {"platform": platform, "op": op, "threads": threads},
+        processes,
+    )
 
 
 # -- Fig. 10: MIKU vs DataRacing vs Opt ---------------------------------------
@@ -378,45 +166,16 @@ def miku_comparison(
     processes: Optional[int] = None,
 ) -> MikuComparison:
     """The paper's §6 micro-benchmark case study: two 16-thread groups
-    alternating DDR/CXL every period.  Opt = each side alone (no
-    interference); DataRacing = no control; MIKU = CPU-quota-style dynamic
-    control; MIKU-MBA = same controller driving the MBA-style token bucket
-    (identical mechanics in simulation — both regulate issue rate; noted in
-    DESIGN.md)."""
-    sim_ns = 2 * cycles * period_ns
-
-    alt = alternating_bw_pair(op, n_threads, period_ns)
-    opt_a, opt_c, racing, miku, mba = run_sweep(
-        [
-            _job(platform, [bw_test("ddr", op, n_threads, name="a")], _BW_SIM_NS),
-            _job(platform, [bw_test("cxl", op, n_threads, name="a")], _BW_SIM_NS),
-            _job(platform, alt, sim_ns, window_ns=5_000.0),
-            _job(platform, alt, sim_ns, window_ns=5_000.0, miku=True),
-            _job(platform, alt, sim_ns, window_ns=5_000.0, miku=True),
-        ],
+    alternating DDR/CXL every period (Opt / DataRacing / MIKU / MIKU-MBA)."""
+    (row,) = _rows(
+        "fig10_miku",
+        {
+            "platform": platform,
+            "op": (op,),
+            "n_threads": n_threads,
+            "period_ns": period_ns,
+            "cycles": cycles,
+        },
         processes,
     )
-
-    def tier_split(res) -> Tuple[float, float]:
-        # Each group spends half its time on each tier; attribute bandwidth
-        # by the tier actually served per phase using the per-tier counters.
-        g = 4  # granularity
-        ddr_bytes = res.tier_counters["ddr"].inserts * platform.ddr.access_bytes * g
-        cxl_bytes = res.tier_counters["cxl"].inserts * platform.cxl.access_bytes * g
-        return ddr_bytes / res.sim_ns, cxl_bytes / res.sim_ns
-
-    racing_ddr, racing_cxl = tier_split(racing)
-    miku_ddr, miku_cxl = tier_split(miku)
-    mba_ddr, mba_cxl = tier_split(mba)
-
-    return MikuComparison(
-        op=op.value,
-        opt_ddr=opt_a.bandwidth("a"),
-        opt_cxl=opt_c.bandwidth("a"),
-        racing_ddr=racing_ddr,
-        racing_cxl=racing_cxl,
-        miku_ddr=miku_ddr,
-        miku_cxl=miku_cxl,
-        miku_mba_ddr=mba_ddr,
-        miku_mba_cxl=mba_cxl,
-    )
+    return MikuComparison(**row)

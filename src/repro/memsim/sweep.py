@@ -22,7 +22,12 @@ import os
 from concurrent.futures import ProcessPoolExecutor
 from typing import Dict, List, Optional, Sequence
 
-from repro.core.des import SimResult, TieredMemorySim, WorkloadSpec
+from repro.core.des import (
+    SimResult,
+    TieredMemorySim,
+    WorkloadSpec,
+    validate_workloads,
+)
 from repro.core.device_model import PlatformModel
 
 
@@ -39,6 +44,12 @@ class SimJob:
     #: Build a platform-calibrated MIKU controller in the worker.
     miku: bool = False
     miku_overrides: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        # Fail at job construction (with the platform's tier list) rather
+        # than deep inside a pool worker: unknown tier names raise
+        # UnknownTierError here.
+        validate_workloads(self.platform, self.workloads)
 
 
 def run_job(job: SimJob) -> SimResult:

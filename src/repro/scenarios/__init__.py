@@ -1,0 +1,50 @@
+"""Declarative scenario API over the N-tier platform model.
+
+The experiment-definition surface of the reproduction: a
+:class:`~repro.scenarios.spec.Scenario` declares parameter axes and
+metrics; the planner expands the axis grid into
+:class:`~repro.memsim.sweep.SimJob` batches, executes them through
+:func:`~repro.memsim.sweep.run_sweep`, and collects a uniform
+:class:`~repro.scenarios.spec.ResultTable` with CSV/JSON emission.
+
+    from repro.scenarios import run_scenario
+    table = run_scenario("fig3_bandwidth", {"platform": "A"})
+    print(table.to_csv())
+
+All paper figures are registered in :mod:`repro.scenarios.library`
+(imported here so the registry is populated on package import), plus
+N-tier scenarios (``corun3_switch``, ``numa_remote``) the legacy
+two-tier API could not express.  ``benchmarks/run.py --list`` shows
+everything; ``--scenario NAME --set axis=value`` runs one.
+"""
+
+from repro.scenarios import library as _library  # populate the registry
+from repro.scenarios.planner import (
+    expand_cells,
+    parse_set_args,
+    plan,
+    resolve_axes,
+    resolve_platform,
+    run_scenario,
+)
+from repro.scenarios.registry import all_scenarios, get, names, register
+from repro.scenarios.spec import Axis, Metric, ResultTable, Scenario
+
+del _library
+
+__all__ = [
+    "Axis",
+    "Metric",
+    "ResultTable",
+    "Scenario",
+    "all_scenarios",
+    "expand_cells",
+    "get",
+    "names",
+    "parse_set_args",
+    "plan",
+    "register",
+    "resolve_axes",
+    "resolve_platform",
+    "run_scenario",
+]

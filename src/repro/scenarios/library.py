@@ -1,0 +1,871 @@
+"""The registered scenario library.
+
+Every paper figure is declared here as a named :class:`Scenario` over the
+N-tier platform model, replacing the imperative figure functions that used
+to live in :mod:`repro.memsim.runner` (which is now a thin compatibility
+wrapper over this registry).  Declaration order is presentation order —
+``benchmarks/run.py`` derives its module list from it.
+
+Two scenarios exercise tier sets the legacy two-tier API could not
+express: ``corun3_switch`` (DDR + local CXL + CXL-over-switch) and
+``numa_remote`` (weighted interleave across local and NUMA-remote DDR
+while CXL traffic co-runs).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.des import WorkloadSpec
+from repro.core.device_model import PlatformModel
+from repro.core.littles_law import OpClass
+from repro.memsim.sweep import SimJob, run_sweep
+from repro.memsim.workloads import (
+    alternating_bw_pair,
+    bw_test,
+    lat_share,
+    lat_test,
+)
+from repro.scenarios.registry import register
+from repro.scenarios.spec import Axis, Metric, Scenario
+
+_BW_SIM_NS = 120_000.0
+_CORUN_SIM_NS = 300_000.0
+
+_OPS = tuple(OpClass)
+_TWO_TIERS = ("ddr", "cxl")
+
+
+def _job(
+    platform: PlatformModel,
+    workloads: List[WorkloadSpec],
+    sim_ns: float,
+    *,
+    miku: bool = False,
+    seed: int = 0,
+    granularity: int = 4,
+    window_ns: float = 10_000.0,
+) -> SimJob:
+    return SimJob(
+        platform=platform,
+        workloads=workloads,
+        sim_ns=sim_ns,
+        seed=seed,
+        granularity=granularity,
+        window_ns=window_ns,
+        miku=miku,
+    )
+
+
+def _platform_axis(default="A") -> Axis:
+    return Axis("platform", default,
+                help="platform name (repro.core.device_model.PLATFORMS)")
+
+
+def _op_axis(default=_OPS) -> Axis:
+    return Axis("op", default, help="memory instruction class",
+                parse=OpClass)
+
+
+# -- Fig. 2: tiered memory management schemes --------------------------------
+
+
+def _fig2_run_cell(platform, cell, processes) -> List[dict]:
+    """Two-stage cell: measure the upper/lower split first, then run the
+    placement schemes at the measured interleave fraction (the reason this
+    figure is a ``run_cell`` scenario, not a static grid)."""
+    op = cell["op"]
+    out: Dict[str, float] = {}
+    up, low = run_sweep(
+        [
+            _job(platform, [bw_test("ddr", op, 16, name="a")], _BW_SIM_NS),
+            _job(platform, [bw_test("cxl", op, 16, name="a")], _BW_SIM_NS),
+        ],
+        processes,
+    )
+    out["upper_ddr_only"] = up.bandwidth("a")
+    out["lower_cxl_only"] = low.bandwidth("a")
+
+    frac = out["upper_ddr_only"] / max(
+        out["upper_ddr_only"] + out["lower_cxl_only"], 1e-9
+    )
+    migration = WorkloadSpec(
+        name="kmigrated",
+        op=OpClass.STORE,
+        tier="cxl",
+        n_cores=2,
+        mlp=64,
+        ddr_fraction=0.5,
+        miku_managed=False,
+    )
+    nat, inter, osm = run_sweep(
+        [
+            _job(
+                platform,
+                [
+                    bw_test("ddr", op, 16, name="a", miku_managed=False),
+                    bw_test("cxl", op, 16, name="b"),
+                ],
+                _CORUN_SIM_NS,
+            ),
+            _job(
+                platform,
+                [
+                    bw_test("ddr", op, 16, name="a", ddr_fraction=frac,
+                            miku_managed=False),
+                    bw_test("cxl", op, 16, name="b", ddr_fraction=frac,
+                            miku_managed=False),
+                ],
+                _CORUN_SIM_NS,
+            ),
+            _job(
+                platform,
+                [
+                    bw_test("ddr", op, 16, name="a", ddr_fraction=frac,
+                            miku_managed=False),
+                    bw_test("cxl", op, 16, name="b", ddr_fraction=frac,
+                            miku_managed=False),
+                    migration,
+                ],
+                _CORUN_SIM_NS,
+            ),
+        ],
+        processes,
+    )
+    out["native"] = nat.bandwidth("a") + nat.bandwidth("b")
+    out["interleave"] = inter.bandwidth("a") + inter.bandwidth("b")
+    out["os_managed"] = osm.bandwidth("a") + osm.bandwidth("b")
+    out["ideal_combined"] = out["upper_ddr_only"] + out["lower_cxl_only"]
+    return [{"platform": cell["platform"], "op": op.value, **out}]
+
+
+register(Scenario(
+    name="fig2_tiering",
+    title="Aggregated bandwidth of tiered-memory management schemes",
+    figure="Fig. 2",
+    module="fig2_tiering",
+    axes=(_platform_axis(), _op_axis()),
+    metrics=(
+        Metric("upper_ddr_only", "GB/s", "one copy, WSS fully in DDR"),
+        Metric("lower_cxl_only", "GB/s", "one copy, WSS fully in CXL"),
+        Metric("native", "GB/s", "application-directed placement"),
+        Metric("interleave", "GB/s", "page-interleaved at the bw ratio"),
+        Metric("os_managed", "GB/s", "interleaved + page-migration tax"),
+        Metric("ideal_combined", "GB/s", "upper + lower"),
+    ),
+    run_cell=_fig2_run_cell,
+))
+
+
+# -- Fig. 3: single-threaded and peak bandwidth per tier ----------------------
+
+
+def _fig3_build(platform, cell) -> List[SimJob]:
+    wl = bw_test(cell["tier"], cell["op"], cell["threads"])
+    return [_job(platform, [wl], _BW_SIM_NS)]
+
+
+def _fig3_reduce(platform, cell, jobs, results) -> List[dict]:
+    (job,), (res,) = jobs, results
+    return [{
+        "platform": cell["platform"],
+        "op": cell["op"].value,
+        "tier": cell["tier"],
+        "threads": cell["threads"],
+        "bandwidth_gbps": res.bandwidth(job.workloads[0].name),
+        "peak_model_gbps":
+            platform.device_for(cell["tier"]).peak_bandwidth_gbps(cell["op"]),
+    }]
+
+
+register(Scenario(
+    name="fig3_bandwidth",
+    title="DDR vs CXL single/multi-thread bandwidth",
+    figure="Fig. 3",
+    module="fig3_bandwidth",
+    axes=(
+        _platform_axis(("A", "A-1to1", "B", "B-1to1")),
+        _op_axis(),
+        Axis("threads", (1, 16), help="bw-test thread count"),
+        Axis("tier", _TWO_TIERS, help="tier under test"),
+    ),
+    metrics=(
+        Metric("bandwidth_gbps", "GB/s", "delivered bandwidth"),
+        Metric("peak_model_gbps", "GB/s", "device-model peak"),
+    ),
+    build=_fig3_build,
+    reduce=_fig3_reduce,
+))
+
+
+# -- Fig. 4: average and tail latency ----------------------------------------
+
+
+def _fig4_build(platform, cell) -> List[SimJob]:
+    wl = lat_test(cell["tier"], OpClass.LOAD, cell["threads"])
+    return [_job(platform, [wl], 400_000.0, granularity=1)]
+
+
+def _fig4_reduce(platform, cell, jobs, results) -> List[dict]:
+    (job,), (res,) = jobs, results
+    st = res.stats[job.workloads[0].name]
+    return [{
+        "platform": cell["platform"],
+        "tier": cell["tier"],
+        "threads": cell["threads"],
+        "avg_ns": st.mean_latency_ns(),
+        "p50_ns": st.percentile_ns(0.50),
+        "p99_ns": st.percentile_ns(0.99),
+    }]
+
+
+register(Scenario(
+    name="fig4_latency",
+    title="Average and tail (p99) loaded latency per tier",
+    figure="Fig. 4",
+    module="fig4_latency",
+    axes=(
+        _platform_axis(),
+        Axis("tier", _TWO_TIERS, help="tier under test"),
+        Axis("threads", (1, 2, 4, 8, 16), help="lat-test thread count"),
+    ),
+    metrics=(
+        Metric("avg_ns", "ns"), Metric("p50_ns", "ns"), Metric("p99_ns", "ns"),
+    ),
+    build=_fig4_build,
+    reduce=_fig4_reduce,
+))
+
+
+# -- Fig. 5 + 6: co-run collapse and ToR accounting ---------------------------
+
+
+def _fig5_build(platform, cell) -> List[SimJob]:
+    op, n = cell["op"], cell["n_threads"]
+    a = bw_test("ddr", op, n, name="ddr", miku_managed=False)
+    c = bw_test("cxl", op, n, name="cxl")
+    return [
+        _job(platform, [a], _BW_SIM_NS),
+        _job(platform, [c], _BW_SIM_NS),
+        _job(platform, [a, c], _CORUN_SIM_NS),
+    ]
+
+
+def _fig5_reduce(platform, cell, jobs, results) -> List[dict]:
+    alone, cxl_alone, both = results
+    ddr_alone_bw = alone.bandwidth("ddr")
+    cxl_alone_bw = cxl_alone.bandwidth("cxl")
+    return [{
+        "platform": cell["platform"],
+        "op": cell["op"].value,
+        "ddr_alone_gbps": ddr_alone_bw,
+        "cxl_alone_gbps": cxl_alone_bw,
+        "ddr_corun_gbps": both.bandwidth("ddr"),
+        "cxl_corun_gbps": both.bandwidth("cxl"),
+        "ddr_loss_pct": 100.0 * (1 - both.bandwidth("ddr") / ddr_alone_bw),
+        # Fig. 6 quantities:
+        "tor_insert_rate_alone_per_ns": alone.tor_inserts / alone.sim_ns,
+        "tor_insert_rate_corun_per_ns": both.tor_inserts / both.sim_ns,
+        "tor_avg_latency_alone_ns": alone.tor_avg_latency_ns,
+        "tor_avg_latency_corun_ns": both.tor_avg_latency_ns,
+        "t_ddr_corun_ns": both.tier_counters["ddr"].mean_service_time,
+        "t_cxl_corun_ns": both.tier_counters["cxl"].mean_service_time,
+    }]
+
+
+register(Scenario(
+    name="fig5_corun",
+    title="Co-run bandwidth collapse and ToR accounting",
+    figure="Fig. 5-6",
+    module="fig5_corun",
+    axes=(
+        _platform_axis(("A", "B")),
+        _op_axis(),
+        Axis("n_threads", 16, help="threads per co-running group"),
+    ),
+    metrics=(
+        Metric("ddr_loss_pct", "%", "fast-tier loss under co-run"),
+        Metric("t_cxl_corun_ns", "ns", "loaded slow-tier ToR residency"),
+    ),
+    build=_fig5_build,
+    reduce=_fig5_reduce,
+))
+
+
+def _fig6_build(platform, cell) -> List[SimJob]:
+    jobs = []
+    for op in OpClass:
+        for scenario in ("ddr", "cxl", "both"):
+            wls: List[WorkloadSpec] = []
+            if scenario in ("ddr", "both"):
+                wls.append(bw_test("ddr", op, 16, name="ddr",
+                                   miku_managed=False))
+            if scenario in ("cxl", "both"):
+                wls.append(bw_test("cxl", op, 16, name="cxl"))
+            jobs.append(_job(platform, wls, _BW_SIM_NS))
+    return jobs
+
+
+def _fig6_reduce(platform, cell, jobs, results) -> List[dict]:
+    xs, ys = [], []
+    for job, res in zip(jobs, results):
+        xs.append(res.tor_inserts / res.sim_ns)
+        ys.append(sum(res.bandwidth(w.name) for w in job.workloads))
+    n = len(xs)
+    mx, my = sum(xs) / n, sum(ys) / n
+    cov = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
+    vx = sum((x - mx) ** 2 for x in xs) ** 0.5
+    vy = sum((y - my) ** 2 for y in ys) ** 0.5
+    return [{"platform": cell["platform"],
+             "pearson_r": cov / max(vx * vy, 1e-12)}]
+
+
+register(Scenario(
+    name="fig6_tor_correlation",
+    title="ToR insertion rate vs delivered bandwidth (Pearson r)",
+    figure="Fig. 6",
+    module="fig5_corun",
+    axes=(_platform_axis(),),
+    metrics=(Metric("pearson_r", "", "paper reports r = 0.998"),),
+    build=_fig6_build,
+    reduce=_fig6_reduce,
+))
+
+
+# -- Fig. 7: LLC partitioning (Intel CAT analogue) ----------------------------
+
+
+def _fig7_build(platform, cell) -> List[SimJob]:
+    cap = platform.llc_capacity_mb
+    alloc, wss_mb = cell["ddr_share"], cell["wss_mb"]
+    a = bw_test(
+        "ddr", OpClass.STORE, 16, name="ddr",
+        wss_mb=wss_mb, llc_alloc_mb=alloc * cap, miku_managed=False,
+    )
+    b = bw_test(
+        "cxl", OpClass.STORE, 16, name="cxl",
+        wss_mb=wss_mb, llc_alloc_mb=(1.0 - alloc) * cap, miku_managed=False,
+    )
+    return [_job(platform, [a, b], _CORUN_SIM_NS)]
+
+
+def _fig7_reduce(platform, cell, jobs, results) -> List[dict]:
+    (res,) = results
+    return [{
+        "platform": cell["platform"],
+        "wss_mb": cell["wss_mb"],
+        "ddr_llc_share": cell["ddr_share"],
+        "ddr_gbps": res.bandwidth("ddr"),
+        "cxl_gbps": res.bandwidth("cxl"),
+        "total_gbps": res.bandwidth("ddr") + res.bandwidth("cxl"),
+    }]
+
+
+register(Scenario(
+    name="fig7_llc",
+    title="LLC partition (CAT) sweep under tiered co-run",
+    figure="Fig. 7",
+    module="fig7_llc",
+    axes=(
+        _platform_axis(),
+        Axis("wss_mb", (60.0, 120.0), help="per-workload working-set size"),
+        Axis("ddr_share", (0.95, 0.75, 0.5, 0.25, 0.05),
+             help="DDR workload's LLC allocation fraction"),
+    ),
+    metrics=(
+        Metric("ddr_gbps", "GB/s"), Metric("cxl_gbps", "GB/s"),
+        Metric("total_gbps", "GB/s"),
+    ),
+    build=_fig7_build,
+    reduce=_fig7_reduce,
+))
+
+
+# -- Fig. 8: inter-core synchronization ---------------------------------------
+
+
+def _fig8_build(platform, cell) -> List[SimJob]:
+    wls = [lat_share()]
+    if cell["bg_threads"] > 0:
+        wls.append(bw_test(cell["bg_tier"], OpClass.LOAD, cell["bg_threads"],
+                           name="bg", miku_managed=False))
+    return [_job(platform, wls, 200_000.0, granularity=1)]
+
+
+def _fig8_reduce(platform, cell, jobs, results) -> List[dict]:
+    (res,) = results
+    return [{
+        "platform": cell["platform"],
+        "bg_tier": cell["bg_tier"],
+        "bg_threads": cell["bg_threads"],
+        "cas_latency_ns": res.stats["lat-share"].mean_latency_ns(),
+    }]
+
+
+register(Scenario(
+    name="fig8_sync",
+    title="Cross-core CAS latency under tier background traffic",
+    figure="Fig. 8",
+    module="fig8_sync",
+    axes=(
+        _platform_axis(),
+        Axis("bg_tier", _TWO_TIERS, help="background bw-test tier"),
+        Axis("bg_threads", (0, 4, 8, 16), help="background thread count"),
+    ),
+    metrics=(Metric("cas_latency_ns", "ns"),),
+    build=_fig8_build,
+    reduce=_fig8_reduce,
+))
+
+
+# -- Fig. 9: service time vs concurrency --------------------------------------
+
+
+def _fig9_build(platform, cell) -> List[SimJob]:
+    wl = bw_test(cell["tier"], cell["op"], cell["threads"])
+    return [_job(platform, [wl], _BW_SIM_NS)]
+
+
+def _fig9_reduce(platform, cell, jobs, results) -> List[dict]:
+    (job,), (res,) = jobs, results
+    return [{
+        "platform": cell["platform"],
+        "tier": cell["tier"],
+        "threads": cell["threads"],
+        "service_time_ns": res.tier_counters[cell["tier"]].mean_service_time,
+        "bandwidth_gbps": res.bandwidth(job.workloads[0].name),
+    }]
+
+
+register(Scenario(
+    name="fig9_service",
+    title="Memory service time vs thread count (MIKU's signal)",
+    figure="Fig. 9",
+    module="fig9_service",
+    axes=(
+        _platform_axis(),
+        _op_axis(OpClass.LOAD),
+        Axis("tier", _TWO_TIERS, help="tier under test"),
+        Axis("threads", (1, 2, 4, 8, 16, 32), help="bw-test thread count"),
+    ),
+    metrics=(
+        Metric("service_time_ns", "ns", "ToR-derived mean service time"),
+        Metric("bandwidth_gbps", "GB/s"),
+    ),
+    build=_fig9_build,
+    reduce=_fig9_reduce,
+))
+
+
+# -- Fig. 10: MIKU vs DataRacing vs Opt ---------------------------------------
+
+
+def _fig10_build(platform, cell) -> List[SimJob]:
+    op, n = cell["op"], cell["n_threads"]
+    period_ns, cycles = cell["period_ns"], cell["cycles"]
+    sim_ns = 2 * cycles * period_ns
+    alt = alternating_bw_pair(op, n, period_ns)
+    return [
+        _job(platform, [bw_test("ddr", op, n, name="a")], _BW_SIM_NS),
+        _job(platform, [bw_test("cxl", op, n, name="a")], _BW_SIM_NS),
+        _job(platform, alt, sim_ns, window_ns=5_000.0),
+        _job(platform, alt, sim_ns, window_ns=5_000.0, miku=True),
+        _job(platform, alt, sim_ns, window_ns=5_000.0, miku=True),
+    ]
+
+
+def _fig10_reduce(platform, cell, jobs, results) -> List[dict]:
+    opt_a, opt_c, racing, miku, mba = results
+
+    def tier_split(res):
+        # Each group spends half its time on each tier; attribute bandwidth
+        # by the tier actually served per phase using the per-tier counters.
+        g = 4  # granularity
+        ddr_bytes = (res.tier_counters["ddr"].inserts
+                     * platform.ddr.access_bytes * g)
+        cxl_bytes = (res.tier_counters["cxl"].inserts
+                     * platform.cxl.access_bytes * g)
+        return ddr_bytes / res.sim_ns, cxl_bytes / res.sim_ns
+
+    racing_ddr, racing_cxl = tier_split(racing)
+    miku_ddr, miku_cxl = tier_split(miku)
+    mba_ddr, mba_cxl = tier_split(mba)
+    return [{
+        "platform": cell["platform"],
+        "op": cell["op"].value,
+        "opt_ddr": opt_a.bandwidth("a"),
+        "opt_cxl": opt_c.bandwidth("a"),
+        "racing_ddr": racing_ddr,
+        "racing_cxl": racing_cxl,
+        "miku_ddr": miku_ddr,
+        "miku_cxl": miku_cxl,
+        "miku_mba_ddr": mba_ddr,
+        "miku_mba_cxl": mba_cxl,
+    }]
+
+
+register(Scenario(
+    name="fig10_miku",
+    title="MIKU vs DataRacing vs Opt on alternating micro-benchmarks",
+    figure="Fig. 10",
+    module="fig10_miku",
+    axes=(
+        _platform_axis(),
+        _op_axis(),
+        Axis("n_threads", 16, help="threads per alternating group"),
+        Axis("period_ns", 100_000.0, help="tier-alternation period"),
+        Axis("cycles", 3, help="alternation cycles simulated"),
+    ),
+    metrics=(
+        Metric("racing_ddr", "GB/s"), Metric("miku_ddr", "GB/s"),
+        Metric("miku_cxl", "GB/s"), Metric("opt_ddr", "GB/s"),
+    ),
+    build=_fig10_build,
+    reduce=_fig10_reduce,
+))
+
+
+# -- Fig. 11/12: co-located LLM serving (real jitted decode steps) ------------
+
+
+def _fig11_run_cell(platform, cell, processes) -> List[dict]:
+    """Serving-engine scenario (no DES): HBM-resident vs host-tier-resident
+    instance, DataRacing vs MIKU vs Opt.  Heavy imports stay local so the
+    registry imports fast."""
+    del platform, processes
+    import jax
+
+    from repro.configs import get_arch
+    from repro.core.controller import MikuConfig, MikuController
+    from repro.core.littles_law import EstimatorConfig
+    from repro.models.transformer import TransformerLM
+    from repro.serving.engine import (
+        EngineConfig,
+        Request,
+        ServingEngine,
+        TieredServingCluster,
+    )
+
+    n_fast, n_slow = cell["n_req_fast"], cell["n_req_slow"]
+    new_tokens, chunks = cell["new_tokens"], cell["chunks"]
+
+    cfg = get_arch(cell["arch"]).smoke
+    model = TransformerLM(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    def mk(name, placement, n_req):
+        e = ServingEngine(
+            EngineConfig(name=name, model=cfg, max_slots=4, max_len=96,
+                         placement=placement, stream_chunks=chunks),
+            params,
+        )
+        for i in range(n_req):
+            e.submit(Request(rid=i, prompt=list(range(1, 9)),
+                             max_new_tokens=new_tokens))
+        return e
+
+    probe = mk("probe", "host", 0)
+    chunk_service = probe.param_bytes / chunks / 16.0  # host link B/ns
+    est = EstimatorConfig(
+        t_fast=1.2e3,
+        slow_read_threshold=8 * chunk_service,
+        ewma=0.5,
+        min_window_inserts=4,
+        min_slow_inserts=1,
+    )
+
+    a = TieredServingCluster([mk("hbm", "device", n_fast)]).run(20000)
+    b = TieredServingCluster([mk("host", "host", n_slow)]).run(20000)
+    opt = (a["hbm"]["tokens_per_s"], b["host"]["tokens_per_s"])
+
+    racing = TieredServingCluster(
+        [mk("hbm", "device", n_fast), mk("host", "host", n_slow)]
+    ).run(40000)
+
+    ctl = MikuController(MikuConfig(levels=(1, 2, 4, 8)), est)
+    miku = TieredServingCluster(
+        [mk("hbm", "device", n_fast), mk("host", "host", n_slow)],
+        controller=ctl, window_ns=3e4,
+    ).run(40000)
+    restricted = sum(1 for d in ctl.decisions if d.restricted)
+
+    def row(variant, fast_tps, slow_tps, **extra):
+        return {
+            "variant": variant,
+            "hbm_tokens_per_s": fast_tps,
+            "host_tokens_per_s": slow_tps,
+            "hbm_pct_of_opt": 100.0 * fast_tps / max(opt[0], 1e-9),
+            "host_pct_of_opt": 100.0 * slow_tps / max(opt[1], 1e-9),
+            **extra,
+        }
+
+    return [
+        row("opt", *opt),
+        row("racing", racing["hbm"]["tokens_per_s"],
+            racing["host"]["tokens_per_s"]),
+        row("miku", miku["hbm"]["tokens_per_s"],
+            miku["host"]["tokens_per_s"],
+            restricted_windows=restricted, windows=len(ctl.decisions)),
+    ]
+
+
+register(Scenario(
+    name="fig11_llm",
+    title="Co-located LLM serving: HBM vs host tier, racing vs MIKU",
+    figure="Fig. 11-12",
+    module="fig11_llm",
+    axes=(
+        Axis("arch", "llama31-8b", help="model architecture (smoke config)"),
+        Axis("n_req_fast", 48), Axis("n_req_slow", 16),
+        Axis("new_tokens", 24), Axis("chunks", 64),
+    ),
+    metrics=(
+        Metric("hbm_tokens_per_s", "tok/s"),
+        Metric("host_tokens_per_s", "tok/s"),
+        Metric("hbm_pct_of_opt", "%"),
+    ),
+    run_cell=_fig11_run_cell,
+    slow=True,
+))
+
+
+# -- Fig. 13: big-data (Spark/TPC-H) analog -----------------------------------
+
+
+def _spark_workload(name, tier, miku_managed=True):
+    # 16 executor threads with deep prefetched scan/shuffle streams — the
+    # memory pressure that makes the paper's Spark runs collapse to 30%.
+    return WorkloadSpec(
+        name=name, op=OpClass.STORE, tier=tier, n_cores=16, mlp=160,
+        phases=[(60_000.0, tier)] * 1, miku_managed=miku_managed,
+    )
+
+
+def _fig13_build(platform, cell) -> List[SimJob]:
+    sim_ns = cell["sim_ns"]
+    ddr = _spark_workload("ddr", "ddr", False)
+    cxl = _spark_workload("cxl", "cxl")
+    return [
+        _job(platform, [ddr], sim_ns, window_ns=20_000.0),
+        _job(platform, [cxl], sim_ns, window_ns=20_000.0),
+        _job(platform, [ddr, cxl], sim_ns, window_ns=20_000.0),
+        _job(platform, [ddr, cxl], sim_ns, window_ns=10_000.0, miku=True),
+    ]
+
+
+def _fig13_reduce(platform, cell, jobs, results) -> List[dict]:
+    opt_a, opt_b, racing, miku = results
+    opt = (opt_a.bandwidth("ddr"), opt_b.bandwidth("cxl"))
+
+    def row(variant, res):
+        return {
+            "platform": cell["platform"],
+            "variant": variant,
+            "ddr_gbps": res.bandwidth("ddr"),
+            "cxl_gbps": res.bandwidth("cxl"),
+            "ddr_pct_of_opt": 100.0 * res.bandwidth("ddr") / max(opt[0], 1e-9),
+            "cxl_pct_of_opt": 100.0 * res.bandwidth("cxl") / max(opt[1], 1e-9),
+        }
+
+    return [
+        {"platform": cell["platform"], "variant": "opt",
+         "ddr_gbps": opt[0], "cxl_gbps": opt[1],
+         "ddr_pct_of_opt": 100.0, "cxl_pct_of_opt": 100.0},
+        row("racing", racing),
+        row("miku", miku),
+    ]
+
+
+register(Scenario(
+    name="fig13_spark",
+    title="Shuffle-heavy big-data phases co-running, racing vs MIKU",
+    figure="Fig. 13",
+    module="fig13_spark",
+    axes=(
+        _platform_axis(),
+        Axis("sim_ns", 400_000.0, help="simulated horizon"),
+    ),
+    metrics=(
+        Metric("ddr_pct_of_opt", "%", "paper: MIKU >= 81%"),
+        Metric("cxl_pct_of_opt", "%"),
+    ),
+    build=_fig13_build,
+    reduce=_fig13_reduce,
+))
+
+
+# -- Fig. 14: concurrent-hashmap (YCSB) analog --------------------------------
+
+
+def _kv_workloads(name, tier, ratio, managed) -> List[WorkloadSpec]:
+    # ratio r reads per write: split cores between get (load) and insert
+    # (store) streams; hash probing limits MLP.
+    total = 16
+    readers = round(total * ratio / (ratio + 1))
+    wls = []
+    if readers:
+        wls.append(WorkloadSpec(name=f"{name}-get", op=OpClass.LOAD,
+                                tier=tier, n_cores=readers, mlp=32,
+                                miku_managed=managed))
+    if total - readers:
+        wls.append(WorkloadSpec(name=f"{name}-ins", op=OpClass.STORE,
+                                tier=tier, n_cores=total - readers, mlp=128,
+                                miku_managed=managed))
+    return wls
+
+
+def _fig14_build(platform, cell) -> List[SimJob]:
+    sim_ns = cell["sim_ns"]
+    wls = (_kv_workloads("ddr", "ddr", cell["ratio"], False)
+           + _kv_workloads("cxl", "cxl", cell["ratio"], True))
+    return [
+        _job(platform, wls, sim_ns, window_ns=20_000.0),
+        _job(platform, wls, sim_ns, window_ns=10_000.0, miku=True),
+    ]
+
+
+def _fig14_reduce(platform, cell, jobs, results) -> List[dict]:
+    race, miku = results
+    ddr = [w for w in jobs[0].workloads if w.name.startswith("ddr")]
+    cxl = [w for w in jobs[0].workloads if w.name.startswith("cxl")]
+    race_ddr = sum(race.bandwidth(w.name) for w in ddr)
+    miku_ddr = sum(miku.bandwidth(w.name) for w in ddr)
+    miku_cxl = sum(miku.bandwidth(w.name) for w in cxl)
+    return [{
+        "platform": cell["platform"],
+        "ratio": cell["ratio"],
+        "racing_ddr_gbps": race_ddr,
+        "miku_ddr_gbps": miku_ddr,
+        "miku_cxl_gbps": miku_cxl,
+        "miku_gain": miku_ddr / max(race_ddr, 1e-9),
+    }]
+
+
+register(Scenario(
+    name="fig14_kv",
+    title="Concurrent hashmap (YCSB) read:write sweep, racing vs MIKU",
+    figure="Fig. 14",
+    module="fig14_kv",
+    axes=(
+        _platform_axis(),
+        Axis("ratio", (0, 1, 4), help="reads per write"),
+        Axis("sim_ns", 300_000.0, help="simulated horizon"),
+    ),
+    metrics=(
+        Metric("racing_ddr_gbps", "GB/s"), Metric("miku_ddr_gbps", "GB/s"),
+        Metric("miku_gain", "x", "MIKU / racing fast-tier bandwidth"),
+    ),
+    build=_fig14_build,
+    reduce=_fig14_reduce,
+))
+
+
+# -- N-tier scenarios the two-tier API could not express ----------------------
+
+
+def _corun3_build(platform, cell) -> List[SimJob]:
+    op, n, sim_ns = cell["op"], cell["n_threads"], cell["sim_ns"]
+    a = bw_test("ddr", op, n, name="ddr", miku_managed=False)
+    b = bw_test("cxl", op, n, name="cxl")
+    c = bw_test("cxl_sw", op, n, name="cxl_sw")
+    return [
+        _job(platform, [a], _BW_SIM_NS),
+        _job(platform, [b], _BW_SIM_NS),
+        _job(platform, [c], _BW_SIM_NS),
+        _job(platform, [a, b, c], sim_ns, miku=cell["miku"]),
+    ]
+
+
+def _corun3_reduce(platform, cell, jobs, results) -> List[dict]:
+    a, b, c, corun = results
+    alone = {
+        "ddr": a.bandwidth("ddr"),
+        "cxl": b.bandwidth("cxl"),
+        "cxl_sw": c.bandwidth("cxl_sw"),
+    }
+    row = {
+        "platform": cell["platform"],
+        "op": cell["op"].value,
+        "miku": cell["miku"],
+    }
+    for tier in ("ddr", "cxl", "cxl_sw"):
+        row[f"{tier}_alone_gbps"] = alone[tier]
+        row[f"{tier}_corun_gbps"] = corun.bandwidth(tier)
+        row[f"t_{tier}_corun_ns"] = corun.tier_counters[tier].mean_service_time
+    row["ddr_loss_pct"] = 100.0 * (
+        1 - corun.bandwidth("ddr") / max(alone["ddr"], 1e-9)
+    )
+    return [row]
+
+
+register(Scenario(
+    name="corun3_switch",
+    title="Three-tier co-run: DDR + local CXL + CXL-over-switch",
+    module="",  # no legacy figure module — registry/CLI native
+    axes=(
+        _platform_axis("A-switch"),
+        _op_axis(),
+        Axis("n_threads", 16, help="threads per co-running group"),
+        Axis("miku", (False, True), help="enable the MIKU controller"),
+        Axis("sim_ns", 300_000.0, help="co-run simulated horizon"),
+    ),
+    metrics=(
+        Metric("ddr_loss_pct", "%", "fast-tier loss under 3-tier co-run"),
+        Metric("cxl_sw_corun_gbps", "GB/s", "switched-CXL bandwidth"),
+        Metric("t_cxl_sw_corun_ns", "ns", "switched-CXL ToR residency"),
+    ),
+    build=_corun3_build,
+    reduce=_corun3_reduce,
+))
+
+
+def _numa_build(platform, cell) -> List[SimJob]:
+    op, n, f = cell["op"], cell["n_threads"], cell["remote_fraction"]
+    striped = WorkloadSpec(
+        name="striped", op=op, tier="ddr", n_cores=n, mlp=160,
+        miku_managed=False,
+        placement={"ddr": 1.0 - f, "ddr_remote": f},
+    )
+    cxl_bg = bw_test("cxl", op, n, name="cxl")
+    return [
+        _job(platform, [striped], cell["sim_ns"]),
+        _job(platform, [striped, cxl_bg], cell["sim_ns"]),
+    ]
+
+
+def _numa_reduce(platform, cell, jobs, results) -> List[dict]:
+    alone, corun = results
+    return [{
+        "platform": cell["platform"],
+        "op": cell["op"].value,
+        "remote_fraction": cell["remote_fraction"],
+        "striped_alone_gbps": alone.bandwidth("striped"),
+        "striped_corun_gbps": corun.bandwidth("striped"),
+        "cxl_corun_gbps": corun.bandwidth("cxl"),
+        "striped_avg_lat_ns": alone.stats["striped"].mean_latency_ns(),
+        "local_inserts": alone.tier_counters["ddr"].inserts,
+        "remote_inserts": alone.tier_counters["ddr_remote"].inserts,
+    }]
+
+
+register(Scenario(
+    name="numa_remote",
+    title="NUMA-remote DDR striping (placement vector) under CXL co-run",
+    module="",  # registry/CLI native
+    axes=(
+        _platform_axis("A-numa"),
+        _op_axis(OpClass.LOAD),
+        Axis("remote_fraction", (0.0, 0.25, 0.5),
+             help="request fraction striped to the remote socket's DDR"),
+        Axis("n_threads", 16, help="striped-workload thread count"),
+        Axis("sim_ns", 200_000.0, help="simulated horizon"),
+    ),
+    metrics=(
+        Metric("striped_alone_gbps", "GB/s",
+               "NUMA striping adds DIMM parallelism"),
+        Metric("striped_avg_lat_ns", "ns"),
+        Metric("remote_inserts", "", "requests served by the remote pool"),
+    ),
+    build=_numa_build,
+    reduce=_numa_reduce,
+))

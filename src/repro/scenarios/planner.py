@@ -1,0 +1,147 @@
+"""The scenario planner: axis grid → cells → SimJob batches → result table.
+
+``plan()`` expands a grid scenario into ``(cell, platform, jobs)`` triples
+without running anything — the unit the equivalence tests pin against the
+legacy imperative runners.  ``run_scenario()`` executes: every cell's jobs
+go through one :func:`~repro.memsim.sweep.run_sweep` batch (so figure-wide
+matrices fan out over the process pool exactly like the legacy runners),
+then each cell's ``reduce`` collects rows into a :class:`ResultTable`.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.device_model import PLATFORMS, PlatformModel
+from repro.memsim.sweep import SimJob, run_sweep
+from repro.scenarios import registry
+from repro.scenarios.spec import ResultTable, Scenario
+
+ScenarioRef = Union[str, Scenario]
+
+
+def _scenario(ref: ScenarioRef) -> Scenario:
+    return registry.get(ref) if isinstance(ref, str) else ref
+
+
+def resolve_platform(value: Any) -> Tuple[str, PlatformModel]:
+    """(label, model) for a platform axis value (name or model instance)."""
+    if isinstance(value, PlatformModel):
+        return value.name, value
+    if value in PLATFORMS:
+        return value, PLATFORMS[value]
+    raise KeyError(
+        f"unknown platform {value!r}; known platforms: "
+        f"{', '.join(PLATFORMS)}"
+    )
+
+
+def resolve_axes(
+    scenario: ScenarioRef, overrides: Optional[Dict[str, Any]] = None
+) -> Dict[str, Any]:
+    """Axis values for a run: defaults overlaid with ``overrides``.
+
+    String overrides are parsed via the axis (the ``--set`` path);
+    non-string overrides pass through.  A scalar override on a grid axis
+    becomes a one-point grid.
+    """
+    sc = _scenario(scenario)
+    values: Dict[str, Any] = {a.name: a.default for a in sc.axes}
+    for k, v in (overrides or {}).items():
+        axis = sc.axis(k)  # raises with the axis list on unknown names
+        if isinstance(v, str):
+            v = axis.parse_text(v)
+        if axis.is_grid and not isinstance(v, (tuple, list)):
+            v = (v,)
+        elif axis.is_grid:
+            v = tuple(v)
+        values[k] = v
+    return values
+
+
+def expand_cells(
+    scenario: ScenarioRef, values: Dict[str, Any]
+) -> List[Dict[str, Any]]:
+    """Cartesian product of the grid axes (declaration order, row-major),
+    with scalar axes constant in every cell."""
+    sc = _scenario(scenario)
+    grid = [a for a in sc.axes if a.is_grid]
+    scalars = {a.name: values[a.name] for a in sc.axes if not a.is_grid}
+    cells = []
+    for combo in itertools.product(*[values[a.name] for a in grid]):
+        cell = dict(scalars)
+        cell.update({a.name: v for a, v in zip(grid, combo)})
+        cells.append(cell)
+    return cells
+
+
+def _resolved_cells(
+    sc: Scenario, values: Dict[str, Any]
+) -> List[Tuple[Dict[str, Any], Optional[PlatformModel]]]:
+    out = []
+    for cell in expand_cells(sc, values):
+        pm: Optional[PlatformModel] = None
+        if "platform" in cell:
+            label, pm = resolve_platform(cell["platform"])
+            cell = {**cell, "platform": label}
+        out.append((cell, pm))
+    return out
+
+
+def plan(
+    scenario: ScenarioRef, overrides: Optional[Dict[str, Any]] = None
+) -> List[Tuple[Dict[str, Any], Optional[PlatformModel], List[SimJob]]]:
+    """Expand a grid scenario into (cell, platform, jobs) without running."""
+    sc = _scenario(scenario)
+    if sc.build is None:
+        raise ValueError(
+            f"scenario {sc.name!r} is multi-stage (run_cell); it has no "
+            "static job plan"
+        )
+    values = resolve_axes(sc, overrides)
+    return [
+        (cell, pm, sc.build(pm, cell))
+        for cell, pm in _resolved_cells(sc, values)
+    ]
+
+
+def run_scenario(
+    scenario: ScenarioRef,
+    overrides: Optional[Dict[str, Any]] = None,
+    processes: Optional[int] = None,
+) -> ResultTable:
+    """Execute a scenario and collect its uniform result table."""
+    sc = _scenario(scenario)
+    values = resolve_axes(sc, overrides)
+    rows: List[Dict[str, Any]] = []
+    if sc.run_cell is not None:
+        for cell, pm in _resolved_cells(sc, values):
+            rows.extend(sc.run_cell(pm, cell, processes))
+    else:
+        planned = [
+            (cell, pm, sc.build(pm, cell))
+            for cell, pm in _resolved_cells(sc, values)
+        ]
+        all_jobs: List[SimJob] = [j for _, _, jobs in planned for j in jobs]
+        results = run_sweep(all_jobs, processes)
+        i = 0
+        for cell, pm, jobs in planned:
+            chunk = results[i: i + len(jobs)]
+            i += len(jobs)
+            rows.extend(sc.reduce(pm, cell, jobs, chunk))
+    return ResultTable(scenario=sc.name, rows=rows, params=values)
+
+
+def parse_set_args(
+    scenario: ScenarioRef, pairs: Sequence[str]
+) -> Dict[str, Any]:
+    """``--set axis=value`` tokens → an overrides dict (parsed per axis)."""
+    sc = _scenario(scenario)
+    overrides: Dict[str, Any] = {}
+    for pair in pairs:
+        if "=" not in pair:
+            raise ValueError(f"--set expects axis=value, got {pair!r}")
+        k, v = pair.split("=", 1)
+        overrides[k.strip()] = sc.axis(k.strip()).parse_text(v)
+    return overrides

@@ -1,0 +1,41 @@
+"""The named-scenario registry.
+
+Scenarios register at import time (``repro.scenarios.library``) in
+declaration order; that order is the public presentation order — the
+benchmark harness derives its figure-module list from it, so the registry
+and the module list cannot drift.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.scenarios.spec import Scenario
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    """Register ``scenario`` under its name (duplicate names are a bug)."""
+    if scenario.name in _REGISTRY:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    _REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def get(name: str) -> Scenario:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered scenarios: "
+            f"{', '.join(names())}"
+        ) from None
+
+
+def names() -> List[str]:
+    return list(_REGISTRY)
+
+
+def all_scenarios() -> List[Scenario]:
+    return list(_REGISTRY.values())

@@ -1,0 +1,377 @@
+"""Scenario-API tests.
+
+Three contracts:
+
+1. **Legacy equivalence** — each registered grid scenario expands to the
+   same SimJob matrix (and produces the same result rows on a small grid)
+   as the seed's imperative ``memsim/runner.py`` construction, replicated
+   inline here as the frozen reference.
+2. **N-tier** — the new platforms/scenarios the two-tier API could not
+   express work, and adding tiers never perturbs two-tier results
+   (bit-identity).
+3. **Plumbing** — axis-grid expansion, ``--set`` parsing, unknown-tier
+   validation, CSV/JSON emission.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core.des import TieredMemorySim, WorkloadSpec
+from repro.core.device_model import (
+    PLATFORMS,
+    UnknownTierError,
+    platform_a,
+    platform_a_numa,
+    platform_a_switch,
+)
+from repro.core.littles_law import OpClass
+from repro.memsim.sweep import SimJob, run_sweep
+from repro.memsim.workloads import alternating_bw_pair, bw_test, lat_test
+from repro.scenarios import (
+    expand_cells,
+    get,
+    names,
+    parse_set_args,
+    plan,
+    resolve_axes,
+    run_scenario,
+)
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+P = platform_a()
+
+
+def _legacy_job(platform, workloads, sim_ns, *, miku=False, seed=0,
+                granularity=4, window_ns=10_000.0):
+    """The seed runner's ``_job`` helper, frozen as the reference."""
+    return SimJob(platform=platform, workloads=workloads, sim_ns=sim_ns,
+                  seed=seed, granularity=granularity, window_ns=window_ns,
+                  miku=miku)
+
+
+# -- registry coverage --------------------------------------------------------
+
+
+def test_registry_covers_all_eleven_figures_and_ntier():
+    have = set(names())
+    for expected in (
+        "fig2_tiering", "fig3_bandwidth", "fig4_latency", "fig5_corun",
+        "fig6_tor_correlation", "fig7_llc", "fig8_sync", "fig9_service",
+        "fig10_miku", "fig11_llm", "fig13_spark", "fig14_kv",
+        "corun3_switch", "numa_remote",
+    ):
+        assert expected in have
+
+
+def test_module_list_derived_from_registry():
+    import benchmarks.run as harness
+
+    mods = harness._module_names()
+    # every scenario-declared module appears, in declaration order, and the
+    # only non-registry module is the explicit extras list
+    assert mods[0] == "fig2_tiering"
+    assert mods[-1] == "roofline_table"
+    assert "fig5_corun" in mods
+    assert mods.count("fig5_corun") == 1  # fig5+fig6 share one module
+    from repro.scenarios import all_scenarios
+
+    declared = {sc.module for sc in all_scenarios() if sc.module}
+    assert declared == set(mods) - set(harness._EXTRA_MODULES)
+
+
+# -- legacy SimJob-matrix equivalence ----------------------------------------
+
+
+def test_fig3_plan_matches_legacy_matrix():
+    planned = plan("fig3_bandwidth", {"platform": "A"})
+    got = [j for _, _, jobs in planned for j in jobs]
+    legacy = [
+        _legacy_job(P, [bw_test(tier, op, n)], 120_000.0)
+        for op in OpClass
+        for n in (1, 16)
+        for tier in ("ddr", "cxl")
+    ]
+    assert got == legacy
+
+
+def test_fig4_plan_matches_legacy_matrix():
+    planned = plan("fig4_latency", {"platform": "A"})
+    got = [j for _, _, jobs in planned for j in jobs]
+    legacy = [
+        _legacy_job(P, [lat_test(tier, OpClass.LOAD, n)], 400_000.0,
+                    granularity=1)
+        for tier in ("ddr", "cxl")
+        for n in (1, 2, 4, 8, 16)
+    ]
+    assert got == legacy
+
+
+def test_fig5_plan_matches_legacy_matrix():
+    planned = plan("fig5_corun", {"platform": "A"})
+    got = [j for _, _, jobs in planned for j in jobs]
+    legacy = []
+    for op in OpClass:
+        a = bw_test("ddr", op, 16, name="ddr", miku_managed=False)
+        c = bw_test("cxl", op, 16, name="cxl")
+        legacy.append(_legacy_job(P, [a], 120_000.0))
+        legacy.append(_legacy_job(P, [c], 120_000.0))
+        legacy.append(_legacy_job(P, [a, c], 300_000.0))
+    assert got == legacy
+
+
+def test_fig10_plan_matches_legacy_matrix():
+    planned = plan("fig10_miku", {"platform": "A", "op": (OpClass.STORE,)})
+    got = [j for _, _, jobs in planned for j in jobs]
+    op, n, period = OpClass.STORE, 16, 100_000.0
+    alt = alternating_bw_pair(op, n, period)
+    legacy = [
+        _legacy_job(P, [bw_test("ddr", op, n, name="a")], 120_000.0),
+        _legacy_job(P, [bw_test("cxl", op, n, name="a")], 120_000.0),
+        _legacy_job(P, alt, 600_000.0, window_ns=5_000.0),
+        _legacy_job(P, alt, 600_000.0, window_ns=5_000.0, miku=True),
+        _legacy_job(P, alt, 600_000.0, window_ns=5_000.0, miku=True),
+    ]
+    assert got == legacy
+
+
+def test_fig3_rows_match_legacy_small_grid():
+    """Same rows (not just jobs) as the seed's imperative loop, 1:1."""
+    over = {"platform": "A-1to1", "op": (OpClass.LOAD,), "threads": (16,)}
+    got = run_scenario("fig3_bandwidth", over).rows
+
+    p = PLATFORMS["A-1to1"]
+    cells = [(OpClass.LOAD, 16, tier) for tier in ("ddr", "cxl")]
+    jobs = [_legacy_job(p, [bw_test(tier, op, n)], 120_000.0)
+            for op, n, tier in cells]
+    legacy = []
+    for (op, n, tier), job, res in zip(cells, jobs, run_sweep(jobs)):
+        legacy.append({
+            "op": op.value,
+            "tier": tier,
+            "threads": n,
+            "bandwidth_gbps": res.bandwidth(job.workloads[0].name),
+            "peak_model_gbps": p.device_for(tier).peak_bandwidth_gbps(op),
+        })
+    assert [{k: r[k] for k in legacy[0]} for r in got] == legacy
+    assert all(r["platform"] == "A-1to1" for r in got)
+
+
+def test_scenario_rows_reproduce_seed_goldens_quick():
+    """The acceptance pin: registry-driven figures == the seed goldens."""
+    with open(os.path.join(DATA, "seed_fig_goldens.json")) as f:
+        gold = json.load(f)
+    rows = run_scenario(
+        "fig3_bandwidth",
+        {"platform": "A", "op": (OpClass.LOAD,), "threads": (16,)},
+    ).rows
+    by_tier = {r["tier"]: r for r in rows}
+    for g in gold["fig3"]:
+        if g["op"] != "load":
+            continue
+        assert by_tier[g["tier"]]["bandwidth_gbps"] == pytest.approx(
+            g["bandwidth_gbps"], rel=0.01)
+
+    (corun,) = run_scenario(
+        "fig5_corun", {"platform": "A", "op": (OpClass.LOAD,)}
+    ).rows
+    g5 = gold["fig5"]["load"]
+    assert corun["ddr_corun_gbps"] == pytest.approx(g5["ddr_gbps"], rel=0.01)
+    assert corun["cxl_corun_gbps"] == pytest.approx(g5["cxl_gbps"], rel=0.01)
+
+
+@pytest.mark.slow
+def test_scenario_goldens_full_matrix():
+    with open(os.path.join(DATA, "seed_fig_goldens.json")) as f:
+        gold = json.load(f)
+    rows = run_scenario("fig3_bandwidth",
+                        {"platform": "A", "threads": (16,)}).rows
+    by_key = {(r["op"], r["tier"]): r for r in rows}
+    for g in gold["fig3"]:
+        assert by_key[(g["op"], g["tier"])]["bandwidth_gbps"] == \
+            pytest.approx(g["bandwidth_gbps"], rel=0.01)
+    rows5 = run_scenario("fig5_corun", {"platform": "A"}).rows
+    for r in rows5:
+        g = gold["fig5"][r["op"]]
+        assert r["ddr_corun_gbps"] == pytest.approx(g["ddr_gbps"], rel=0.01)
+        assert r["cxl_corun_gbps"] == pytest.approx(g["cxl_gbps"], rel=0.01)
+
+
+# -- N-tier: the scenarios the two-tier API could not express ----------------
+
+
+def test_three_tier_platform_preserves_two_tier_results_bit_identical():
+    """Adding a tier nobody touches must not move a single number."""
+    wls = [
+        WorkloadSpec(name="ddr", op=OpClass.LOAD, tier="ddr", n_cores=16,
+                     miku_managed=False),
+        WorkloadSpec(name="cxl", op=OpClass.LOAD, tier="cxl", n_cores=16),
+    ]
+    base = TieredMemorySim(platform_a(), [w for w in wls], seed=0)
+    r2 = base.run(150_000.0)
+    p3 = platform_a_switch()
+    r3 = TieredMemorySim(p3, [w for w in wls], seed=0).run(150_000.0)
+    assert r3.bandwidth("ddr") == r2.bandwidth("ddr")
+    assert r3.bandwidth("cxl") == r2.bandwidth("cxl")
+    assert r3.tor_inserts == r2.tor_inserts
+    assert r3.tor_peak == r2.tor_peak
+    assert r3.tier_counters["cxl_sw"].inserts == 0
+
+
+def test_placement_vector_matches_ddr_fraction_bit_identical():
+    """{"ddr": f, "cxl": 1-f} must replay ddr_fraction=f exactly (same RNG
+    draw count, same routing decisions)."""
+    f = 0.3
+
+    def mk(**kw):
+        return WorkloadSpec(name="w", op=OpClass.LOAD, tier="ddr",
+                            n_cores=8, miku_managed=False, **kw)
+
+    ra = TieredMemorySim(P, [mk(ddr_fraction=f)], seed=7).run(100_000.0)
+    rb = TieredMemorySim(P, [mk(placement={"ddr": f, "cxl": 1 - f})],
+                         seed=7).run(100_000.0)
+    assert ra.bandwidth("w") == rb.bandwidth("w")
+    assert ra.tor_inserts == rb.tor_inserts
+    assert ra.tier_counters["ddr"].inserts == rb.tier_counters["ddr"].inserts
+
+
+def test_corun3_switch_scenario_nontrivial():
+    t = run_scenario(
+        "corun3_switch",
+        {"op": (OpClass.LOAD,), "miku": (False,), "sim_ns": 150_000.0},
+    )
+    (row,) = t.rows
+    assert row["platform"] == "A-switch"
+    for tier in ("ddr", "cxl", "cxl_sw"):
+        assert row[f"{tier}_corun_gbps"] > 0
+    # the third tier behaves like CXL-plus-a-switch: comparable bandwidth,
+    # strictly higher residency than local CXL
+    assert row["t_cxl_sw_corun_ns"] > row["t_cxl_corun_ns"]
+    # and the paper's collapse now comes from *two* slow tiers
+    assert row["ddr_loss_pct"] > 50.0
+
+
+def test_numa_remote_scenario_nontrivial():
+    t = run_scenario(
+        "numa_remote",
+        {"remote_fraction": (0.0, 0.5), "sim_ns": 120_000.0},
+    )
+    rows = {r["remote_fraction"]: r for r in t.rows}
+    assert rows[0.0]["remote_inserts"] == 0
+    assert rows[0.5]["remote_inserts"] > 0
+    # NUMA striping adds DIMM parallelism: more deliverable bandwidth
+    assert (rows[0.5]["striped_alone_gbps"]
+            > 1.3 * rows[0.0]["striped_alone_gbps"])
+
+
+def test_miku_controls_three_tier_corun():
+    """The control plane generalizes: MIKU recovers the fast tier with two
+    slow tiers co-running (no controller changes)."""
+    racing = run_scenario(
+        "corun3_switch",
+        {"op": (OpClass.STORE,), "miku": (False,), "sim_ns": 200_000.0},
+    ).rows[0]
+    miku = run_scenario(
+        "corun3_switch",
+        {"op": (OpClass.STORE,), "miku": (True,), "sim_ns": 200_000.0},
+    ).rows[0]
+    assert miku["ddr_corun_gbps"] > 2 * racing["ddr_corun_gbps"]
+    assert miku["ddr_loss_pct"] < 20.0
+
+
+# -- validation ---------------------------------------------------------------
+
+
+def test_device_for_unknown_tier_raises_with_tier_list():
+    with pytest.raises(UnknownTierError, match="ddr, cxl"):
+        P.device_for("hbm3")
+    # known names still resolve on an extended platform
+    p3 = platform_a_numa()
+    assert p3.device_for("ddr_remote").tier == "ddr_remote"
+    with pytest.raises(UnknownTierError, match="ddr_remote"):
+        p3.device_for("cxl_sw")
+
+
+def test_simjob_construction_rejects_unknown_tier():
+    wl = WorkloadSpec(name="w", op=OpClass.LOAD, tier="optane", n_cores=1)
+    with pytest.raises(UnknownTierError, match="optane"):
+        SimJob(platform=P, workloads=[wl], sim_ns=1000.0)
+
+
+def test_sim_construction_rejects_unknown_phase_and_placement_tiers():
+    phased = WorkloadSpec(name="w", op=OpClass.LOAD, tier="ddr", n_cores=1,
+                          phases=[(10.0, "ddr"), (10.0, "cxl_sw")])
+    with pytest.raises(UnknownTierError, match="cxl_sw"):
+        TieredMemorySim(P, [phased])
+    placed = WorkloadSpec(name="w", op=OpClass.LOAD, tier="ddr", n_cores=1,
+                          placement={"ddr": 0.5, "pmem": 0.5})
+    with pytest.raises(UnknownTierError, match="pmem"):
+        TieredMemorySim(P, [placed])
+
+
+def test_malformed_placement_rejected():
+    bad_sum = WorkloadSpec(name="w", op=OpClass.LOAD, tier="ddr", n_cores=1,
+                           placement={"ddr": 0.5, "cxl": 0.2})
+    with pytest.raises(ValueError, match="sum"):
+        TieredMemorySim(P, [bad_sum])
+    both = WorkloadSpec(name="w", op=OpClass.LOAD, tier="ddr", n_cores=1,
+                        placement={"ddr": 1.0}, ddr_fraction=0.5)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        TieredMemorySim(P, [both])
+
+
+# -- planner plumbing ---------------------------------------------------------
+
+
+def test_axis_grid_expansion_order_and_scalars():
+    sc = get("fig3_bandwidth")
+    values = resolve_axes(sc, {"platform": "A", "op": (OpClass.LOAD,)})
+    cells = expand_cells(sc, values)
+    # row-major product in axis declaration order: platform, op, threads, tier
+    assert len(cells) == 1 * 1 * 2 * 2
+    assert [(c["threads"], c["tier"]) for c in cells] == [
+        (1, "ddr"), (1, "cxl"), (16, "ddr"), (16, "cxl")
+    ]
+    assert all(c["op"] is OpClass.LOAD for c in cells)
+
+
+def test_set_override_parsing():
+    sc = get("fig3_bandwidth")
+    over = parse_set_args(sc, ["threads=4,8", "op=store", "platform=B"])
+    assert over["threads"] == (4, 8)
+    assert over["op"] == (OpClass.STORE,)
+    assert over["platform"] == ("B",)
+    sc10 = get("fig10_miku")
+    over10 = parse_set_args(sc10, ["period_ns=5e4", "cycles=2"])
+    assert over10["period_ns"] == 5e4
+    assert over10["cycles"] == 2
+    sc3t = get("corun3_switch")
+    assert parse_set_args(sc3t, ["miku=true"])["miku"] == (True,)
+    with pytest.raises(KeyError, match="no axis"):
+        parse_set_args(sc, ["bogus=1"])
+    with pytest.raises(ValueError, match="axis=value"):
+        parse_set_args(sc, ["threads"])
+
+
+def test_unknown_scenario_and_platform_errors():
+    with pytest.raises(KeyError, match="registered scenarios"):
+        get("fig99_nope")
+    with pytest.raises(KeyError, match="known platforms"):
+        run_scenario("fig3_bandwidth", {"platform": "Z9"})
+
+
+def test_result_table_csv_json_emission():
+    t = run_scenario(
+        "fig3_bandwidth",
+        {"platform": "A-1to1", "op": (OpClass.LOAD,), "threads": (1,),
+         "tier": ("ddr",)},
+    )
+    csv_text = t.to_csv()
+    header, line = csv_text.strip().split("\n")
+    assert header.split(",")[:4] == ["platform", "op", "tier", "threads"]
+    assert line.startswith("A-1to1,load,ddr,1,")
+    blob = json.loads(t.to_json())
+    assert blob["scenario"] == "fig3_bandwidth"
+    assert blob["rows"][0]["op"] == "load"
+    assert blob["params"]["op"] == ["load"]
