@@ -88,19 +88,58 @@ def check_goldens() -> dict:
     }
 
 
+def check_fast_path_overhead(out: dict, snapshot_path: str) -> dict:
+    """Two-tier fast-path overhead gate for the per-tier contract.
+
+    Compares this run's interleaved A/B speedup-vs-seed against the
+    committed BENCH_des.json snapshot's.  The speedup ratio is
+    machine-robust (both sides of each A/B pair ran on the same box), so a
+    drop > 5% means the control-plane change itself slowed the two-tier
+    hot path."""
+    try:
+        with open(snapshot_path) as f:
+            snap = json.load(f)
+        snap_speedup = float(snap["speedup_vs_seed"])
+    except (OSError, KeyError, ValueError):
+        return {"fast_path_overhead_pct": None, "fast_path_within_5pct": True}
+    overhead = (snap_speedup / max(out["speedup_vs_seed"], 1e-9) - 1.0) * 100.0
+    return {
+        "snapshot_speedup_vs_seed": snap_speedup,
+        "fast_path_overhead_pct": round(overhead, 2),
+        "fast_path_within_5pct": overhead < 5.0,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--reps", type=int, default=6)
     ap.add_argument("--out", default=os.path.join(_REPO_ROOT, "BENCH_des.json"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick 2-rep timing print (no file write) — the CI "
+                         "gating-lane smoke")
     args = ap.parse_args()
+    snapshot = os.path.join(_REPO_ROOT, "BENCH_des.json")
+    if args.smoke:
+        out = {"bench": "des_fast_path_smoke", **bench_ab(2)}
+        out.update(check_fast_path_overhead(out, snapshot))
+        print(json.dumps(out, indent=2))
+        return
     out = {"bench": "des_fast_path", **bench_ab(args.reps), **check_goldens()}
-    with open(args.out, "w") as f:
-        json.dump(out, f, indent=2)
-        f.write("\n")
+    out.update(check_fast_path_overhead(out, snapshot))
     print(json.dumps(out, indent=2))
     if out["speedup_vs_seed"] < 2.0:
         print("WARNING: speedup below the 2x acceptance bar "
               "(noisy machine, or a fast-path regression)")
+    # Gate BEFORE writing: a failing run must not replace the snapshot it
+    # was compared against (the baseline would self-ratchet downward).
+    assert out["fast_path_within_5pct"], (
+        f"per-tier contract added {out['fast_path_overhead_pct']}% on the "
+        "two-tier fast path vs the BENCH_des.json snapshot (>5% budget); "
+        "snapshot left untouched"
+    )
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,11 @@
 #            --set platform=A --set threads=1,16 --format csv
 #        PYTHONPATH=src python benchmarks/run.py --scenario corun3_switch \
 #            --set op=load --format json
+#      --trace NAME additionally records the ControlLoop's per-window,
+#      per-tier decision telemetry and writes NAME.csv (or .json, per
+#      --format) plus NAME.trace.json next to each other:
+#        PYTHONPATH=src python benchmarks/run.py --scenario corun3_pertier \
+#            --set law=pertier --trace corun3_pertier
 #
 #   2. Figure mode (legacy) — run the paper-figure modules, printing
 #      ``name,us_per_call,derived`` CSV:
@@ -89,16 +94,32 @@ def _list_scenarios() -> None:
             print(f"    metrics: {', '.join(m.name for m in sc.metrics)}")
 
 
-def _run_scenario(name: str, set_args: list, fmt: str, jobs: int) -> None:
+def _run_scenario(name: str, set_args: list, fmt: str, jobs: int,
+                  trace: str = "") -> None:
+    import json
+
     from repro.scenarios import get, parse_set_args, run_scenario
 
     sc = get(name)
     overrides = parse_set_args(sc, set_args)
-    table = run_scenario(sc, overrides, processes=jobs if jobs > 1 else None)
+    table = run_scenario(sc, overrides, processes=jobs if jobs > 1 else None,
+                         trace=bool(trace))
     if fmt == "json":
-        print(table.to_json())
+        out = table.to_json()
     else:
-        print(table.to_csv(), end="")
+        out = table.to_csv()
+    if trace:
+        # Result table and per-window decision telemetry side by side.
+        table_path = f"{trace}.{'json' if fmt == 'json' else 'csv'}"
+        trace_path = f"{trace}.trace.json"
+        with open(table_path, "w") as f:
+            f.write(out if out.endswith("\n") else out + "\n")
+        with open(trace_path, "w") as f:
+            json.dump({"scenario": table.scenario, "params": table.params,
+                       "traces": table.traces}, f, indent=2)
+            f.write("\n")
+        print(f"wrote {table_path} and {trace_path}")
+    print(out, end="" if fmt != "json" else "\n")
 
 
 def main() -> None:
@@ -120,16 +141,23 @@ def main() -> None:
                          "lists make grids)")
     ap.add_argument("--format", choices=("csv", "json"), default="csv",
                     help="scenario result-table format")
+    ap.add_argument("--trace", default="", metavar="NAME",
+                    help="with --scenario: record per-window per-tier "
+                         "decision telemetry; write NAME.csv/.json and "
+                         "NAME.trace.json")
     args = ap.parse_args()
 
     if args.list_scenarios:
         _list_scenarios()
         return
     if args.scenario:
-        _run_scenario(args.scenario, args.set_args, args.format, args.jobs)
+        _run_scenario(args.scenario, args.set_args, args.format, args.jobs,
+                      args.trace)
         return
     if args.set_args:
         ap.error("--set requires --scenario")
+    if args.trace:
+        ap.error("--trace requires --scenario")
 
     from benchmarks.common import emit
 

@@ -5,10 +5,13 @@
 
 from repro.core.controller import (
     Decision,
+    MergedSlowPolicy,
     MikuConfig,
     MikuController,
     Phase,
+    SlowTierMiku,
     StragglerGovernor,
+    TierDecisions,
 )
 from repro.core.des import SimResult, TieredMemorySim, WorkloadSpec
 from repro.core.des import validate_workloads
@@ -33,6 +36,8 @@ from repro.core.littles_law import (
     OpClass,
     TierCounters,
     TierEstimate,
+    TierWindow,
+    merge_tier_counters,
 )
 from repro.core.offload import HostOffloader, TransferQueue
 from repro.core.substrate import (
@@ -43,6 +48,7 @@ from repro.core.substrate import (
     TierSetWindowedCounters,
     WindowedCounters,
     WindowRecord,
+    window_record_jsonable,
 )
 from repro.core.tiers import (
     HBM_TIER,
@@ -54,10 +60,13 @@ from repro.core.tiers import (
 
 __all__ = [
     "Decision",
+    "MergedSlowPolicy",
     "MikuConfig",
     "MikuController",
     "Phase",
+    "SlowTierMiku",
     "StragglerGovernor",
+    "TierDecisions",
     "SimResult",
     "TieredMemorySim",
     "WorkloadSpec",
@@ -80,6 +89,8 @@ __all__ = [
     "OpClass",
     "TierCounters",
     "TierEstimate",
+    "TierWindow",
+    "merge_tier_counters",
     "HostOffloader",
     "TransferQueue",
     "ControlLoop",
@@ -89,6 +100,7 @@ __all__ = [
     "TierSetWindowedCounters",
     "WindowedCounters",
     "WindowRecord",
+    "window_record_jsonable",
     "HBM_TIER",
     "HOST_TIER",
     "TieredLayout",

@@ -1,20 +1,21 @@
-"""MIKU — Dynamic Memory Request Control (paper §5.2).
+"""MIKU — Dynamic Memory Request Control (paper §5.2), per slow tier.
 
-The controller half of MIKU.  Given per-window Little's-Law estimates of the
-slow-tier service time (:mod:`repro.core.littles_law`), it decides how much
-concurrency and issue rate slow-tier traffic may use, so that:
+The controller half of MIKU.  Given per-window Little's-Law estimates of
+each slow tier's service time (:mod:`repro.core.littles_law`), it decides
+how much concurrency and issue rate each slow tier's traffic may use, so
+that:
 
   * fast-tier (DDR / HBM) requests are never queued behind a slow-tier
     backlog in the shared request structure, and
-  * slow-tier traffic still gets its maximum backlog-free throughput
+  * every slow tier still gets its maximum backlog-free throughput
     (work-conserving, best-effort service — no static reservation).
 
-Mechanism, mirroring the paper:
+Mechanism, mirroring the paper (per slow tier):
 
   1. **Detection** — slow-tier backlog ⇔ estimated ``T_slow`` exceeds a
      calibrated, read/write-mix-adjusted threshold (and keeps growing).
-  2. **Hierarchical throttling** — on detection, all slow-tier-bound actors
-     are demoted to *level-3*, the most restrictive concurrency level
+  2. **Hierarchical throttling** — on detection, all actors bound for that
+     tier are demoted to *level-3*, the most restrictive concurrency level
      (1 core / 1 in-flight stream).  If ``T_slow`` still exceeds target, the
      issue *rate* at level-3 is reduced (the MBA-% / CPU-quota analogue).
   3. **Work-conserving promotion** — while ``T_slow`` sits comfortably below
@@ -23,17 +24,35 @@ Mechanism, mirroring the paper:
      concurrency: 8 / 4 / 1 cores for load / store / nt-store), and fully
      unrestricted once the fast tier goes idle.
 
+The vector contract (one ladder per slow tier)
+----------------------------------------------
+:class:`MikuController` is an *ensemble* of :class:`SlowTierMiku` units —
+one Little's-Law estimator, one throttle ladder, and one work-conserving
+promotion state per slow tier, each with its own device-derived thresholds
+(paper §5.2's per-device calibration; the device heterogeneity measured in
+"Demystifying CXL Memory").  The canonical law entry point is
+``window(deltas)`` with one :class:`~repro.core.littles_law.TierWindow`
+(per-tier deltas, fast tier first); it returns a tier-addressed
+:class:`TierDecisions`.  The legacy two-argument
+``window(fast_delta, slow_delta)`` form is kept signature-compatible but
+deprecated (it drives unit 0 only and returns a plain :class:`Decision`).
+:class:`MergedSlowPolicy` is the explicit adapter reproducing the
+pre-vector behavior — merge tiers 1..n-1 into one slow delta, run one
+ladder, broadcast its decision to every slow tier — for comparison runs.
+
 The controller is deliberately decoupled from any particular substrate: the
-DES applies its decisions as active-core counts + token-bucket rates; the
-serving engine applies them as max-in-flight host-tier fetches + byte-rate
-caps; the straggler governor applies them to per-host dispatch.
+DES applies its decisions as per-tier active-core counts + token-bucket
+rates; the serving engine applies them as per-tier max-in-flight host
+fetches + byte-rate caps; the straggler governor applies them to per-host
+dispatch.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, Optional, Sequence
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.littles_law import (
     EstimatorConfig,
@@ -41,6 +60,8 @@ from repro.core.littles_law import (
     OpClass,
     TierCounters,
     TierEstimate,
+    TierWindow,
+    merge_tier_counters,
 )
 
 
@@ -87,7 +108,7 @@ class MikuConfig:
 
 @dataclasses.dataclass
 class Decision:
-    """What slow-tier traffic is allowed during the next window."""
+    """What one slow tier's traffic is allowed during the next window."""
 
     max_concurrency: Optional[int]  # None = unrestricted
     rate_factor: float  # 1.0 = unthrottled issue rate
@@ -99,14 +120,79 @@ class Decision:
         return self.phase is Phase.RESTRICTED
 
 
-class MikuController:
-    """The MIKU feedback loop over estimation windows."""
+@dataclasses.dataclass
+class TierDecisions:
+    """A tier-addressed window decision: one :class:`Decision` per slow tier.
+
+    ``tiers``/``decisions`` are parallel, in platform slow-tier order
+    (tiers 1..n-1 of the vector the law consumed).  Substrates apply each
+    tier's decision to that tier's traffic only — per-tier active-core caps
+    and token buckets in the DES, per-tier in-flight caps and byte-rates on
+    the transfer path.
+
+    For legacy consumers the object also reads like a single merged
+    :class:`Decision` (most-restrictive view across tiers), so decision
+    histories, telemetry, and the recorded two-tier MIKU traces — where the
+    vector has exactly one slow tier and the view is that tier's decision
+    verbatim — keep working unchanged.
+    """
+
+    tiers: Tuple[str, ...]
+    decisions: Tuple[Decision, ...]
+
+    def __post_init__(self) -> None:
+        if len(self.tiers) != len(self.decisions) or not self.decisions:
+            raise ValueError(
+                f"TierDecisions needs one decision per slow tier, got "
+                f"{len(self.tiers)} tier(s) / {len(self.decisions)} decision(s)"
+            )
+
+    def for_tier(self, tier: str) -> Decision:
+        return self.decisions[self.tiers.index(tier)]
+
+    def items(self) -> Tuple[Tuple[str, Decision], ...]:
+        return tuple(zip(self.tiers, self.decisions))
+
+    # -- merged (most-restrictive) legacy view ----------------------------
+    @property
+    def max_concurrency(self) -> Optional[int]:
+        caps = [d.max_concurrency for d in self.decisions
+                if d.max_concurrency is not None]
+        return min(caps) if caps else None
+
+    @property
+    def rate_factor(self) -> float:
+        return min(d.rate_factor for d in self.decisions)
+
+    @property
+    def phase(self) -> Phase:
+        return Phase.RESTRICTED if self.restricted else Phase.UNRESTRICTED
+
+    @property
+    def restricted(self) -> bool:
+        return any(d.restricted for d in self.decisions)
+
+    @property
+    def estimate(self) -> Optional[TierEstimate]:
+        return self.decisions[0].estimate
+
+
+class SlowTierMiku:
+    """One slow tier's MIKU state machine (paper §5.2, for a single tier).
+
+    Estimator + throttle ladder + work-conserving promotion state for one
+    slow tier, fed ``(fast_delta, this_tier_delta)`` windows.  This is
+    exactly the seed's single-ladder controller body;
+    :class:`MikuController` runs one instance per slow tier.
+    """
 
     def __init__(
         self,
         config: MikuConfig,
         estimator_config: EstimatorConfig,
+        tier: str = "slow",
     ):
+        self.tier = tier
         self.config = config
         self.estimator = LittlesLawEstimator(estimator_config)
         self.phase = Phase.UNRESTRICTED
@@ -114,7 +200,6 @@ class MikuController:
         self._rate = 1.0
         self._calm_windows = 0
         self._prev_raw: Optional[float] = None
-        self.decisions: list = []
 
     # -- helpers ----------------------------------------------------------
     def _class_cap(self, slow_classes: Sequence[OpClass]) -> int:
@@ -135,7 +220,7 @@ class MikuController:
         self._calm_windows = 0
         self.phase = Phase.RESTRICTED
 
-    # -- main entry point --------------------------------------------------
+    # -- one estimation window --------------------------------------------
     def window(
         self,
         fast_delta: TierCounters,
@@ -196,18 +281,15 @@ class MikuController:
             self._prev_raw = raw
 
         if self.phase is Phase.UNRESTRICTED:
-            decision = Decision(
+            return Decision(
                 max_concurrency=None, rate_factor=1.0, phase=self.phase, estimate=est
             )
-        else:
-            decision = Decision(
-                max_concurrency=self._level_value(),
-                rate_factor=self._rate,
-                phase=self.phase,
-                estimate=est,
-            )
-        self.decisions.append(decision)
-        return decision
+        return Decision(
+            max_concurrency=self._level_value(),
+            rate_factor=self._rate,
+            phase=self.phase,
+            estimate=est,
+        )
 
     def reset(self) -> None:
         self.phase = Phase.UNRESTRICTED
@@ -216,6 +298,201 @@ class MikuController:
         self._calm_windows = 0
         self._prev_raw = None
         self.estimator.reset()
+
+
+def _as_seq(value, n: int, what: str) -> list:
+    """Broadcast a single config to ``n`` units, or validate a sequence."""
+    if isinstance(value, (list, tuple)):
+        if len(value) < n:
+            raise ValueError(
+                f"MikuController got {len(value)} per-tier {what}(s) for "
+                f"{n} slow tier(s)"
+            )
+        return list(value[:n])
+    return [value] * n
+
+
+def split_tier_window(
+    deltas: Sequence[TierCounters],
+) -> Tuple[TierCounters, Tuple[TierCounters, ...], Tuple[str, ...]]:
+    """``(fast, slows, slow_names)`` from one per-tier delta vector.
+
+    The one place the vector's shape is interpreted: names come from a
+    :class:`~repro.core.littles_law.TierWindow` when present, else the
+    ``slow{i}`` fallback — every vector law unpacks through here so tier
+    labels cannot diverge between laws."""
+    if len(deltas) < 2:
+        raise ValueError(
+            "per-tier window needs the fast tier plus >=1 slow tier, "
+            f"got {len(deltas)} tier(s)"
+        )
+    names = getattr(deltas, "names", None)
+    slows = tuple(deltas[1:])
+    slow_names = (
+        tuple(names[1:]) if names is not None
+        else tuple(f"slow{i}" for i in range(len(slows)))
+    )
+    return deltas[0], slows, slow_names
+
+
+class MikuController:
+    """A per-slow-tier ensemble of MIKU ladders over estimation windows.
+
+    ``config`` / ``estimator_config`` may each be a single value (every
+    slow tier gets its own unit with that calibration — the seed signature,
+    unchanged) or a sequence with one entry per slow tier in platform order
+    (per-device ladders and thresholds;
+    :func:`repro.memsim.calibration.default_miku` derives these from each
+    tier's :class:`~repro.core.device_model.DeviceModel`).
+
+    Units are materialized lazily when the first window reveals the slow
+    tier count; unit 0 exists from construction so the legacy single-ladder
+    attributes (``.estimator``, ``.config``) and the deprecated two-argument
+    ``window(fast, slow)`` keep working bit-identically.
+    """
+
+    _warned_pair = False  # process-wide: the deprecation fires once
+
+    def __init__(
+        self,
+        config: Union[MikuConfig, Sequence[MikuConfig]],
+        estimator_config: Union[EstimatorConfig, Sequence[EstimatorConfig]],
+    ):
+        self._configs = config
+        self._est_configs = estimator_config
+        self.units: List[SlowTierMiku] = []
+        self._ensure_units(1)
+        self.decisions: list = []
+
+    # -- unit management ---------------------------------------------------
+    def _ensure_units(
+        self, n_slow: int, names: Optional[Sequence[str]] = None
+    ) -> None:
+        if len(self.units) < n_slow:
+            cfgs = _as_seq(self._configs, n_slow, "MikuConfig")
+            ests = _as_seq(self._est_configs, n_slow, "EstimatorConfig")
+            for i in range(len(self.units), n_slow):
+                tier = (
+                    names[i] if names is not None and i < len(names)
+                    else f"slow{i}"
+                )
+                self.units.append(SlowTierMiku(cfgs[i], ests[i], tier=tier))
+        if names is not None:
+            # Eagerly-created units learn their real tier name on the first
+            # named window.
+            for i in range(min(len(names), len(self.units))):
+                self.units[i].tier = names[i]
+
+    @property
+    def config(self) -> MikuConfig:
+        """Unit 0's ladder config (legacy single-ladder attribute)."""
+        return self.units[0].config
+
+    @property
+    def estimator(self) -> LittlesLawEstimator:
+        """Unit 0's estimator (legacy single-ladder attribute)."""
+        return self.units[0].estimator
+
+    # -- law entry points --------------------------------------------------
+    def window(self, *deltas):
+        """Canonical form: ``window(deltas)`` with one per-tier vector
+        (:class:`~repro.core.littles_law.TierWindow` or any sequence of
+        TierCounters, fast tier first) → :class:`TierDecisions`.
+
+        The legacy ``window(fast_delta, slow_delta)`` two-argument form is
+        deprecated but kept signature-compatible: it runs unit 0 and returns
+        that unit's plain :class:`Decision`, exactly as the seed did.
+        """
+        if len(deltas) == 1 and not isinstance(deltas[0], TierCounters):
+            return self.window_vector(deltas[0])
+        if len(deltas) == 2:
+            if not MikuController._warned_pair:
+                MikuController._warned_pair = True
+                warnings.warn(
+                    "MikuController.window(fast_delta, slow_delta) is "
+                    "deprecated; pass one per-tier TierWindow "
+                    "(window(deltas)) instead",
+                    DeprecationWarning,
+                    stacklevel=2,
+                )
+            return self.pair_window(*deltas)
+        raise TypeError(
+            "MikuController.window expects one per-tier delta vector or "
+            f"the legacy (fast, slow) pair; got {len(deltas)} argument(s)"
+        )
+
+    def pair_window(
+        self, fast_delta: TierCounters, slow_delta: TierCounters
+    ) -> Decision:
+        """Drive unit 0 with one merged ``(fast, slow)`` window.
+
+        The non-deprecated backing of the legacy two-argument form —
+        :class:`MergedSlowPolicy` calls this to run the merged law without
+        tripping the deprecation."""
+        decision = self.units[0].window(fast_delta, slow_delta)
+        self.decisions.append(decision)
+        return decision
+
+    def window_vector(
+        self, deltas: Sequence[TierCounters]
+    ) -> TierDecisions:
+        """One window of the vector contract: per-tier deltas in, one
+        :class:`Decision` per slow tier out (each unit sees the shared fast
+        delta and its own tier's delta)."""
+        fast, slows, slow_names = split_tier_window(deltas)
+        self._ensure_units(len(slows), slow_names)
+        decision = TierDecisions(
+            tiers=slow_names,
+            decisions=tuple(
+                unit.window(fast, s)
+                for unit, s in zip(self.units, slows)
+            ),
+        )
+        self.decisions.append(decision)
+        return decision
+
+    def reset(self) -> None:
+        for unit in self.units:
+            unit.reset()
+        self.decisions.clear()
+
+
+class MergedSlowPolicy:
+    """Law adapter: the pre-vector merged-slow behavior, made explicit.
+
+    Wraps a two-input ``(fast, slow)`` decision law (a
+    :class:`MikuController`, whose unit 0 is used via :meth:`~MikuController.
+    pair_window`, or any object with ``window(fast, slow)``).  Each window it
+    folds tiers 1..n-1 of the per-tier vector into one merged slow delta,
+    runs the wrapped law once, and broadcasts the single decision to every
+    slow tier — exactly what the substrate hard-coded before the vector
+    contract.  Kept as a first-class law so merged-vs-per-tier comparison
+    scenarios (``corun3_pertier``) can run both under the same
+    tier-addressed ``apply()``.
+    """
+
+    def __init__(self, law):
+        self.law = law
+        self.decisions: list = []
+
+    def window(self, *deltas) -> TierDecisions:
+        if len(deltas) == 1 and not isinstance(deltas[0], TierCounters):
+            vec = deltas[0]
+        else:
+            vec = deltas
+        fast, slows, slow_names = split_tier_window(vec)
+        slow = merge_tier_counters(slows)
+        pair = getattr(self.law, "pair_window", None)
+        d = pair(fast, slow) if pair is not None else self.law.window(fast, slow)
+        decision = TierDecisions(
+            tiers=slow_names, decisions=(d,) * len(slow_names)
+        )
+        self.decisions.append(decision)
+        return decision
+
+    def reset(self) -> None:
+        if hasattr(self.law, "reset"):
+            self.law.reset()
         self.decisions.clear()
 
 

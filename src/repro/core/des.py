@@ -53,14 +53,18 @@ import random
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.controller import Decision, MikuController
+from repro.core.controller import Decision, MikuController, TierDecisions
 from repro.core.device_model import (
     DeviceModel,
     PlatformModel,
     UnknownTierError,
 )
-from repro.core.littles_law import OpClass, TierCounters
-from repro.core.substrate import ControlLoop, TierSetWindowedCounters
+from repro.core.littles_law import OpClass, TierCounters, TierWindow
+from repro.core.substrate import (
+    ControlLoop,
+    TierSetWindowedCounters,
+    window_record_jsonable,
+)
 
 # Event kinds.  Heap payloads are (time, packed) with
 # packed = (seq << _SEQ_SHIFT) | (kind << _KIND_SHIFT) | arg — seq in the
@@ -207,8 +211,14 @@ class SimResult:
     tor_peak: int
     tor_occupancy_integral: float  # entry-ns, all tiers
     tor_inserts: int
+    #: Per-window decisions — tier-addressed
+    #: :class:`~repro.core.controller.TierDecisions` under the vector
+    #: contract (plain Decisions only for legacy two-arg laws).
     decisions: List[Decision]
     per_tier_occupancy_integral: Dict[str, float]
+    #: Per-window control telemetry (JSON-safe dicts); populated only when
+    #: the sim was built with ``record_windows=True``.
+    window_records: List[dict] = dataclasses.field(default_factory=list)
 
     def bandwidth(self, name: str) -> float:
         return self.stats[name].bandwidth_gbps(self.sim_ns)
@@ -240,6 +250,7 @@ class TieredMemorySim:
         window_ns: float = 20_000.0,
         controller: Optional[MikuController] = None,
         latency_reservoir: int = LATENCY_RESERVOIR,
+        record_windows: bool = False,
     ):
         self.platform = platform
         self.workloads = list(workloads)
@@ -264,8 +275,9 @@ class TieredMemorySim:
         self.granularity = max(1, granularity)
         self.window_ns = window_ns
         self.controller = controller
+        self._record_windows = record_windows
         self.control = ControlLoop(
-            self, controller, window_ns=window_ns, record=False
+            self, controller, window_ns=window_ns, record=record_windows
         )
 
         self.now = 0.0
@@ -320,6 +332,9 @@ class TieredMemorySim:
         #: General placement: cumulative tier-probability vector (or None).
         #: The last entry is +inf so the routing scan always terminates.
         self._w_cum: List[Optional[Tuple[float, ...]]] = []
+        #: Slow tier codes a placement vector puts mass on (per workload;
+        #: () for non-placement workloads — their touched set is dynamic).
+        self._w_placed_slow: List[Tuple[int, ...]] = []
         self._w_managed: List[bool] = []
         self._w_op: List[int] = []  # index into _OPS
         self._w_effmlp: List[int] = []
@@ -330,7 +345,12 @@ class TieredMemorySim:
         #: Per-workload (duration_ns, tier_code) schedule (None = static).
         self._phase_seq: List[Optional[List[Tuple[float, int]]]] = []
         self._phase_idx: List[int] = [0] * n
-        self._max_cores: List[Optional[int]] = [None] * n
+        # Tier-addressed decision state: one (core-cap, rate) per tier code,
+        # written by ``apply`` and folded into each workload's effective
+        # throttle by ``_recompute_throttle`` (index 0 — the fast tier — is
+        # never throttled and stays at its defaults).
+        self._tier_cap: List[Optional[int]] = [None] * self._n_tiers
+        self._tier_rate: List[float] = [1.0] * self._n_tiers
         self._rate: List[float] = [1.0] * n
         self._tokens: List[float] = [0.0] * n
         self._last_refill: List[float] = [0.0] * n
@@ -372,9 +392,14 @@ class TieredMemorySim:
                 cum[-1] = float("inf")  # absorb rounding; scan terminates
                 self._w_frac.append(None)
                 self._w_cum.append(tuple(cum))
+                self._w_placed_slow.append(tuple(
+                    i for i, t in enumerate(self._tier_names)
+                    if i > 0 and w.placement.get(t, 0.0) > 0.0
+                ))
             else:
                 self._w_frac.append(w.ddr_fraction)
                 self._w_cum.append(None)
+                self._w_placed_slow.append(())
             self._w_managed.append(w.miku_managed)
             self._w_op.append(_OPS.index(w.op))
             self._w_effmlp.append(w.effective_mlp(g))
@@ -407,8 +432,8 @@ class TieredMemorySim:
         self._stat_res: List[List[float]] = [[] for _ in range(n)]
 
         # Tier counters: flat accumulators + a TierSetWindowedCounters the
-        # control loop reads (fast, merged-slow) deltas from.
-        self._counters = TierSetWindowedCounters(self._n_tiers)
+        # control loop reads per-tier TierWindow deltas from.
+        self._counters = TierSetWindowedCounters(names=self._tier_names)
         self.tier_counters = {
             t: self._counters.tiers[i]
             for i, t in enumerate(self._tier_names)
@@ -444,17 +469,42 @@ class TieredMemorySim:
             for i, op in enumerate(_OPS):
                 tc.class_counts[op] = cls[i]
 
-    def counters_delta(self) -> Tuple[TierCounters, TierCounters]:
+    def counters_delta(self) -> TierWindow:
         self._materialize_counters()
         return self._counters.delta()
 
-    def apply(self, decision: Decision) -> None:
-        """Throttle slow-tier-bound workloads per the window's decision."""
+    def apply(self, decision) -> None:
+        """Throttle slow-tier-bound workloads per the window's decision.
+
+        Tier-addressed: a :class:`~repro.core.controller.TierDecisions`
+        sets each slow tier's core cap and token-bucket rate independently
+        (decisions in platform slow-tier order); a plain legacy
+        :class:`Decision` broadcasts one cap/rate to every slow tier."""
+        n = self._n_tiers
+        if isinstance(decision, TierDecisions):
+            ds = decision.decisions
+            if len(ds) != n - 1:
+                raise ValueError(
+                    f"tier-addressed decision has {len(ds)} tier(s); "
+                    f"platform has {n - 1} slow tier(s)"
+                )
+            for code in range(1, n):
+                d = ds[code - 1]
+                self._tier_cap[code] = d.max_concurrency
+                self._tier_rate[code] = d.rate_factor
+        else:
+            for code in range(1, n):
+                self._tier_cap[code] = decision.max_concurrency
+                self._tier_rate[code] = decision.rate_factor
+        # fill/pump per workload, not hoisted after the loop: the seed
+        # applied each workload's new throttle and re-issued immediately,
+        # and the issue path draws from the sim RNG — batching the refill
+        # would reorder draws and break bit-identity with the recorded
+        # traces/goldens.  Cost is per-window (subsequent fill/pump calls
+        # no-op unless the preceding recompute opened issue room).
         for wi in range(len(self.workloads)):
             if not self._w_managed[wi]:
                 continue
-            self._max_cores[wi] = decision.max_concurrency
-            self._rate[wi] = decision.rate_factor
             self._recompute_throttle(wi)
             self._fill_irq()
             self._pump()
@@ -464,23 +514,40 @@ class TieredMemorySim:
         return self.control.decisions
 
     # -- throttle cache -------------------------------------------------------
-    def _touches_slow(self, wi: int) -> bool:
-        """Does this workload currently generate slow-tier traffic?  (MIKU
+    def _touched_slow(self, wi: int) -> Tuple[int, ...]:
+        """Slow tier codes this workload currently sends traffic to.  (MIKU
         identifies slow-tier-accessing threads via sampled physical
         addresses; the simulator knows placement exactly — DESIGN.md §2.)
         Every tier after the first counts as slow."""
         frac = self._w_frac[wi]
         if frac is not None:
-            return frac < 1.0
-        cum = self._w_cum[wi]
-        if cum is not None:
-            return cum[0] < 1.0  # probability mass beyond the fast tier
-        return self._phase_tier[wi] != _DDR
+            return (_CXL,) if frac < 1.0 else ()
+        if self._w_cum[wi] is not None:
+            return self._w_placed_slow[wi]
+        t = self._phase_tier[wi]
+        return (t,) if t != _DDR else ()
 
     def _recompute_throttle(self, wi: int) -> None:
-        throttleable = self._w_managed[wi] and self._touches_slow(wi)
-        self._limit[wi] = self._max_cores[wi] if throttleable else None
-        self._unthrottled[wi] = self._rate[wi] >= 1.0 or not throttleable
+        """Fold the per-tier decision state into this workload's effective
+        core cap / rate (most restrictive across the slow tiers it touches
+        — a workload striped over two slow tiers obeys both ladders)."""
+        codes = self._touched_slow(wi)
+        if not codes or not self._w_managed[wi]:
+            self._limit[wi] = None
+            self._unthrottled[wi] = True
+            return
+        cap: Optional[int] = None
+        rate = 1.0
+        for c in codes:
+            tc = self._tier_cap[c]
+            if tc is not None and (cap is None or tc < cap):
+                cap = tc
+            tr = self._tier_rate[c]
+            if tr < rate:
+                rate = tr
+        self._limit[wi] = cap
+        self._rate[wi] = rate
+        self._unthrottled[wi] = rate >= 1.0
 
     # -- event plumbing -------------------------------------------------------
     def _push(self, t: float, kind: int, arg: int) -> None:
@@ -1008,6 +1075,9 @@ class TieredMemorySim:
                 t: self._occ_tier[i]
                 for i, t in enumerate(self._tier_names)
             },
+            window_records=[
+                window_record_jsonable(r) for r in self.control.records
+            ] if self._record_windows else [],
         )
 
 

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence, Tuple
 
 
 class OpClass(enum.Enum):
@@ -119,6 +119,69 @@ class TierCounters:
         if total == 0:
             return (1.0, 0.0)
         return (reads / total, writes / total)
+
+
+def merge_tier_counters(counters: "Sequence[TierCounters]") -> "TierCounters":
+    """Fold several per-tier window deltas into one merged delta.
+
+    Pure (non-mutating) counterpart of :meth:`TierCounters.merge`; the merge
+    is associative and commutative (plain sums), which is what lets the
+    legacy merged-slow contract be recovered exactly from a per-tier vector
+    (see :class:`repro.core.controller.MergedSlowPolicy`).
+    """
+    out = TierCounters()
+    for tc in counters:
+        out.merge(tc)
+    return out
+
+
+class TierWindow(tuple):
+    """One window's ordered per-tier counter deltas (fast tier first).
+
+    The canonical payload of the vector control-plane contract: a tuple of
+    :class:`TierCounters` — one per platform tier, in platform order — with
+    the tier names carried alongside in :attr:`names`.  Substrates return it
+    from ``counters_delta()``; :class:`~repro.core.substrate.ControlLoop`
+    hands it *whole* to the decision law's ``window(deltas)`` (a plain tuple
+    is still splatted into ``window(*delta)`` for non-tier laws such as the
+    straggler governor).
+    """
+
+    def __new__(
+        cls,
+        counters: "Sequence[TierCounters]",
+        names: Optional["Sequence[str]"] = None,
+    ) -> "TierWindow":
+        self = super().__new__(cls, tuple(counters))
+        if names is None:
+            names = tuple(f"tier{i}" for i in range(len(self)))
+        names = tuple(names)
+        if len(names) != len(self):
+            raise ValueError(
+                f"TierWindow got {len(self)} counter(s) but "
+                f"{len(names)} name(s)"
+            )
+        self._names = names
+        return self
+
+    def __reduce__(self):
+        return (TierWindow, (tuple(self), self._names))
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return self._names
+
+    @property
+    def fast(self) -> TierCounters:
+        return self[0]
+
+    @property
+    def slow_names(self) -> Tuple[str, ...]:
+        return self._names[1:]
+
+    def merged_slow(self) -> TierCounters:
+        """Tiers 1..n-1 folded into one delta — the legacy slow window."""
+        return merge_tier_counters(self[1:])
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,24 +11,30 @@ Two cooperating pieces:
 * :class:`TransferQueue` — the *timing* model of the shared transfer path
   (per-chip DMA descriptors): a simulated clock charging each transfer its
   tier service time, with bounded in-flight slots.  This is the structure
-  MIKU instruments (TierCounters) and throttles (max in-flight + byte-rate),
-  exactly like the DES's ToR — but driven by the serving engine's actual
-  request stream instead of synthetic cores.  On real TPU hardware this class
-  would be replaced by reading transfer-completion timestamps from the
-  runtime; the control law is unchanged (DESIGN.md §2).
+  MIKU instruments (per-tier TierCounters) and throttles (per-tier max
+  in-flight + byte-rate), exactly like the DES's ToR — but driven by the
+  serving engine's actual request stream instead of synthetic cores.  The
+  queue speaks the vector control-plane contract: ``counters_delta()``
+  returns the per-tier :class:`~repro.core.littles_law.TierWindow` (fast
+  tier first) and ``apply`` accepts tier-addressed
+  :class:`~repro.core.controller.TierDecisions`, so each slow link (the
+  default pinned-host path, plus any ``extra_slow`` tiers) gets its own
+  in-flight cap and byte-rate.  On real TPU hardware this class would be
+  replaced by reading transfer-completion timestamps from the runtime; the
+  control law is unchanged (DESIGN.md §2).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
-from repro.core.controller import Decision, MikuController
-from repro.core.littles_law import OpClass, TierCounters
-from repro.core.substrate import ControlLoop, WindowedCounters
+from repro.core.controller import Decision, MikuController, TierDecisions
+from repro.core.littles_law import OpClass, TierCounters, TierWindow
+from repro.core.substrate import ControlLoop, TierSetWindowedCounters
 from repro.core.tiers import (
     HBM_TIER,
     HOST_TIER,
@@ -95,15 +101,26 @@ class TransferQueue:
         slow: TierSpec = HOST_TIER,
         controller: Optional[MikuController] = None,
         window_ns: float = 1_000_000.0,
+        extra_slow: Sequence[TierSpec] = (),
     ):
         self.fast = fast
         self.slow = slow
+        #: Ordered slow links by label: the canonical pinned-host path keeps
+        #: its legacy "slow" label; extra tiers are addressed by TierSpec
+        #: name (e.g. a second host pool or a disaggregated tier).
+        self.slow_tiers: Dict[str, TierSpec] = {"slow": slow}
+        for spec in extra_slow:
+            if spec.name in self.slow_tiers or spec.name == "fast":
+                raise ValueError(f"duplicate slow tier label {spec.name!r}")
+            self.slow_tiers[spec.name] = spec
         self.controller = controller
         self.now = 0.0
-        self._counters = WindowedCounters()
+        self._counters = TierSetWindowedCounters(
+            names=("fast", *self.slow_tiers)
+        )
         self.counters: Dict[str, TierCounters] = {
-            "fast": self._counters.fast,
-            "slow": self._counters.slow,
+            name: tc
+            for name, tc in zip(self._counters.names, self._counters.tiers)
         }
         self._inflight: List[_InFlight] = []
         self._pending: List[Tuple[int, OpClass]] = []
@@ -121,11 +138,19 @@ class TransferQueue:
     def clock_ns(self) -> float:
         return self.now
 
-    def counters_delta(self) -> Tuple[TierCounters, TierCounters]:
+    def counters_delta(self) -> TierWindow:
         return self._counters.delta()
 
-    def apply(self, decision: Decision) -> None:
+    def apply(self, decision) -> None:
         self._decision = decision
+
+    def decision_for(self, tier: str = "slow") -> Decision:
+        """The decision governing one slow link: its own tier-addressed
+        entry, or the broadcast legacy decision."""
+        d = self._decision
+        if isinstance(d, TierDecisions) and tier in d.tiers:
+            return d.for_tier(tier)
+        return d
 
     @property
     def window_ns(self) -> float:
@@ -147,21 +172,26 @@ class TransferQueue:
         return t
 
     # -- submission / progress ------------------------------------------------
-    def slow_inflight(self) -> int:
-        """Slow transfers holding descriptors *now* (enqueued, incomplete)."""
+    def slow_inflight(self, tier: str = "slow") -> int:
+        """One slow link's transfers holding descriptors *now* (enqueued,
+        incomplete)."""
         return sum(
             1 for f in self._inflight
-            if f.tier == "slow" and f.t_enqueue <= self.now
+            if f.tier == tier and f.t_enqueue <= self.now
         )
 
     def submit_slow(self, nbytes: int, op: OpClass = OpClass.LOAD) -> float:
         return self.submit_slow_stream(int(nbytes), 1, op)
 
     def submit_slow_stream(
-        self, total_bytes: int, n_chunks: int, op: OpClass = OpClass.LOAD
+        self,
+        total_bytes: int,
+        n_chunks: int,
+        op: OpClass = OpClass.LOAD,
+        tier: str = "slow",
     ) -> float:
         """Submit one logical stream as ``n_chunks`` transfers (per-layer
-        weight/KV chunks) over the bandwidth-bound slow link.
+        weight/KV chunks) over one bandwidth-bound slow link.
 
         The link serializes chunks, so total duration is ~bytes/bw however
         they are queued — which is exactly why a MIKU in-flight cap is
@@ -170,14 +200,18 @@ class TransferQueue:
         the stream.  Uncapped, every chunk enqueues immediately — the deep
         backlog that starves fast-tier request slots.  rate_factor < 1
         additionally stretches per-chunk service (the MBA/quota analogue).
-        Returns the stream's completion time.
+        Cap and rate are this link's own (tier-addressed decision), so two
+        co-resident slow links can run different ladders.  Returns the
+        stream's completion time.
         """
-        cap = self._decision.max_concurrency
-        rate = max(self._decision.rate_factor, 1e-3)
+        spec = self.slow_tiers[tier]
+        decision = self.decision_for(tier)
+        cap = decision.max_concurrency
+        rate = max(decision.rate_factor, 1e-3)
         chunk = max(1, int(total_bytes) // max(1, n_chunks))
-        service = self._service_ns(chunk, self.slow, op) / rate
+        service = self._service_ns(chunk, spec, op) / rate
         link_free = max(
-            [f.t_complete for f in self._inflight if f.tier == "slow"],
+            [f.t_complete for f in self._inflight if f.tier == tier],
             default=self.now,
         )
         done = max(self.now, link_free)
@@ -188,15 +222,20 @@ class TransferQueue:
                 enq = self.now
             else:
                 enq = dones[i - cap]
-            self._inflight.append(_InFlight(chunk, op, "slow", enq, done))
+            self._inflight.append(_InFlight(chunk, op, tier, enq, done))
             dones.append(done)
         return done
 
-    def slow_backlog(self) -> int:
+    def slow_backlog(self, tier: Optional[str] = None) -> int:
         """In-flight slow transfers beyond the tier's parallel slots —
         the descriptor backlog that blocks fast-tier request slots (the
-        IRQ/ToR unfairness, TPU rendition)."""
-        return max(0, self.slow_inflight() - self.slow.parallelism)
+        IRQ/ToR unfairness, TPU rendition).  ``tier=None`` sums every slow
+        link's backlog."""
+        tiers = self.slow_tiers if tier is None else (tier,)
+        return sum(
+            max(0, self.slow_inflight(t) - self.slow_tiers[t].parallelism)
+            for t in tiers
+        )
 
     def fast_penalty(self, pool: int = 56, c: float = 0.45) -> float:
         """Service-time multiplier for fast-tier steps while slow-tier
@@ -228,7 +267,7 @@ class TransferQueue:
                     f for f in self._inflight if f.t_complete > self.now
                 ]
                 for f in done:
-                    self.counters["slow"].record(f.op, f.t_complete - f.t_enqueue)
+                    self.counters[f.tier].record(f.op, f.t_complete - f.t_enqueue)
         self.now = target
 
     @property

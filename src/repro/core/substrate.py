@@ -14,25 +14,34 @@ A substrate exposes three things:
 
   * ``clock_ns``        — its notion of time (simulated or wall).
   * ``counters_delta()``— counters accumulated since the previous window,
-    consumed on read.  Canonically a ``(fast, slow)`` pair of
-    :class:`~repro.core.littles_law.TierCounters`; substrates with a
-    different decision law (the straggler governor's per-host step times)
-    may return any tuple their paired controller's ``window(*delta)``
-    accepts.
-  * ``apply(decision)`` — make the controller's decision take effect
-    (core masks + token buckets in the DES, in-flight caps on the transfer
-    path, per-host dispatch shares in the launcher).
+    consumed on read.  Canonically a
+    :class:`~repro.core.littles_law.TierWindow`: the ordered per-tier
+    :class:`~repro.core.littles_law.TierCounters` vector (fast tier first,
+    tier names carried alongside).  Substrates with a different decision
+    law (the straggler governor's per-host step times) may instead return
+    any plain tuple their paired controller's ``window(*delta)`` accepts.
+  * ``apply(decision)`` — make the controller's decision take effect.
+    Vector laws return tier-addressed decisions
+    (:class:`~repro.core.controller.TierDecisions`): per-tier core masks +
+    token buckets in the DES, per-tier in-flight caps on the transfer
+    path, per-host dispatch shares in the launcher.
 
-:class:`WindowedCounters` is the shared snapshot/delta helper so substrates
-never hand-roll mark bookkeeping again.
+:class:`TierSetWindowedCounters` is the shared snapshot/delta helper so
+substrates never hand-roll mark bookkeeping again (:class:`WindowedCounters`
+remains for bare two-tier pairs).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, List, Optional, Protocol, Sequence, Tuple
 
-from repro.core.littles_law import TierCounters
+from repro.core.littles_law import (
+    TierCounters,
+    TierWindow,
+    merge_tier_counters,
+)
 
 
 class MemorySubstrate(Protocol):
@@ -46,7 +55,8 @@ class MemorySubstrate(Protocol):
     def counters_delta(self) -> Tuple[Any, ...]:
         """Counters accumulated since the last call (consumed on read).
 
-        Canonical form is ``(fast: TierCounters, slow: TierCounters)``.
+        Canonical form is a :class:`~repro.core.littles_law.TierWindow`
+        (ordered per-tier TierCounters, fast tier first, names carried).
         """
         ...
 
@@ -87,29 +97,59 @@ class TierSetWindowedCounters:
     """N-tier generalization of :class:`WindowedCounters`.
 
     One cumulative :class:`TierCounters` per tier (fast tier first, in
-    platform order).  ``delta()`` still returns the canonical
-    ``(fast, slow)`` pair the two-input decision laws consume: tier 0 is
-    the fast delta and tiers 1..n-1 merge into one slow-tier delta — an
-    N-tier substrate looks to any existing controller exactly like the
-    two-tier pair, so the control plane needs no changes when tiers are
-    added.  For ``n_tiers=2`` the deltas are bit-identical to
-    :class:`WindowedCounters`.
+    platform order).  ``delta()`` returns the per-tier vector contract: a
+    :class:`~repro.core.littles_law.TierWindow` of window deltas, tier
+    names carried alongside — what vector decision laws
+    (:class:`~repro.core.controller.MikuController`,
+    :class:`~repro.core.controller.MergedSlowPolicy`) consume directly.
+
+    ``merged=True`` keeps the deprecated pre-vector behavior: ``delta()``
+    returns the ``(fast, merged-slow)`` pair, with tiers 1..n-1 folded into
+    one slow delta (a DeprecationWarning fires once per process).  New code
+    wanting the merged *law* should drive
+    :class:`~repro.core.controller.MergedSlowPolicy` with the vector
+    instead of merging at the substrate.
     """
 
-    __slots__ = ("tiers", "_marks")
+    __slots__ = ("tiers", "names", "_marks", "_merged")
 
-    def __init__(self, n_tiers: int = 2) -> None:
+    _warned_merged = False  # process-wide: the deprecation fires once
+
+    def __init__(
+        self,
+        n_tiers: int = 2,
+        *,
+        names: Optional[Sequence[str]] = None,
+        merged: bool = False,
+    ) -> None:
+        if names is not None:
+            n_tiers = len(names)
+            self.names = tuple(names)
+        else:
+            self.names = tuple(f"tier{i}" for i in range(n_tiers))
         self.tiers = [TierCounters() for _ in range(n_tiers)]
         self._marks = [t.snapshot() for t in self.tiers]
+        self._merged = merged
+        if merged and not TierSetWindowedCounters._warned_merged:
+            TierSetWindowedCounters._warned_merged = True
+            warnings.warn(
+                "TierSetWindowedCounters(merged=True) is deprecated; consume "
+                "the per-tier TierWindow and merge in the law "
+                "(MergedSlowPolicy) instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
 
-    def delta(self) -> Tuple[TierCounters, TierCounters]:
-        """(fast, merged-slow) accumulated since the previous call."""
+    def delta(self) -> Tuple[TierCounters, ...]:
+        """Per-tier deltas accumulated since the previous call.
+
+        Vector mode (default): a :class:`TierWindow`.  Merged mode
+        (deprecated): the legacy ``(fast, merged-slow)`` pair."""
         ds = [t.delta(m) for t, m in zip(self.tiers, self._marks)]
         self._marks = [t.snapshot() for t in self.tiers]
-        slow = ds[1]
-        for extra in ds[2:]:
-            slow.merge(extra)
-        return ds[0], slow
+        if self._merged:
+            return ds[0], merge_tier_counters(ds[1:])
+        return TierWindow(ds, self.names)
 
     def reset(self) -> None:
         self.tiers = [TierCounters() for _ in self.tiers]
@@ -124,6 +164,61 @@ class WindowRecord:
     t_ns: float
     delta: Tuple[Any, ...]
     decision: Any
+
+
+def _counters_jsonable(tc: TierCounters) -> dict:
+    return {
+        "inserts": tc.inserts,
+        "occupancy_time": tc.occupancy_time,
+        "class_counts": {c.value: n for c, n in tc.class_counts.items()},
+    }
+
+
+def _decision_jsonable(d: Any) -> Any:
+    """One tier's decision as plain JSON (best-effort for foreign laws)."""
+    est = getattr(d, "estimate", None)
+    out = {
+        "max_concurrency": getattr(d, "max_concurrency", None),
+        "rate_factor": getattr(d, "rate_factor", None),
+        "phase": getattr(getattr(d, "phase", None), "value", None),
+    }
+    if est is not None:
+        out["t_slow"] = est.t_slow
+        out["t_slow_raw"] = est.t_slow_raw
+        out["threshold"] = est.threshold
+        out["backlogged"] = est.backlogged
+        out["valid"] = est.valid
+    return out
+
+
+def window_record_jsonable(rec: WindowRecord) -> dict:
+    """One :class:`WindowRecord` as a plain JSON-safe dict.
+
+    The per-tier telemetry shape ``benchmarks/run.py --trace`` emits: the
+    window's per-tier counter deltas (named when the substrate speaks the
+    vector contract) and its per-tier decision(s)."""
+    out: dict = {"window": rec.index, "t_ns": rec.t_ns}
+    delta = rec.delta
+    if isinstance(delta, TierWindow):
+        out["tiers"] = {
+            name: _counters_jsonable(tc)
+            for name, tc in zip(delta.names, delta)
+        }
+    elif (
+        isinstance(delta, tuple)
+        and all(isinstance(tc, TierCounters) for tc in delta)
+    ):
+        out["tiers"] = {
+            f"tier{i}": _counters_jsonable(tc) for i, tc in enumerate(delta)
+        }
+    else:
+        out["delta"] = repr(delta)
+    d = rec.decision
+    if hasattr(d, "items") and hasattr(d, "tiers"):  # TierDecisions
+        out["decision"] = {t: _decision_jsonable(td) for t, td in d.items()}
+    elif d is not None:
+        out["decision"] = _decision_jsonable(d)
+    return out
 
 
 class ControlLoop:
@@ -183,7 +278,13 @@ class ControlLoop:
         if self.controller is None:
             return None
         delta = self.substrate.counters_delta()
-        decision = self.controller.window(*delta)
+        if isinstance(delta, TierWindow):
+            # Vector contract: the law gets the per-tier window whole
+            # (names and all); plain tuples splat as before (straggler
+            # governor, legacy pairs).
+            decision = self.controller.window(delta)
+        else:
+            decision = self.controller.window(*delta)
         self.decisions.append(decision)
         self._windows_run += 1
         if self._record or self._on_window is not None:

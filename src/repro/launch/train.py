@@ -89,8 +89,11 @@ class Trainer:
         self.ckpt_every = ckpt_every
         # Straggler control plane: per-host step times flow through the same
         # substrate/ControlLoop interface as the memory tiers (DESIGN.md §5).
-        # Single host here; the same loop runs fleet-wide at scale.  One
-        # window per step (the governor's native cadence).
+        # The substrate returns a plain (step_times,) tuple — not a
+        # TierWindow — so the loop splats it into the governor's
+        # window(step_times) unchanged under the vector contract.  Single
+        # host here; the same loop runs fleet-wide at scale.  One window per
+        # step (the governor's native cadence).
         self.governor = StragglerGovernor(n_hosts=1)
         self.step_substrate = StepTimingSubstrate(n_hosts=1)
         self.straggler_loop = ControlLoop(

@@ -25,8 +25,10 @@ macro-request = ``granularity`` cachelines serviced back-to-back):
 
 from __future__ import annotations
 
-from repro.core.controller import MikuConfig, MikuController
-from repro.core.device_model import PlatformModel
+from typing import Optional
+
+from repro.core.controller import MergedSlowPolicy, MikuConfig, MikuController
+from repro.core.device_model import DeviceModel, PlatformModel
 from repro.core.littles_law import EstimatorConfig, OpClass
 
 
@@ -36,9 +38,22 @@ def calibrate_estimator(
     *,
     slow_queue_markup: float = 4.0,
     ewma: float = 0.5,
+    slow_device: Optional[DeviceModel] = None,
+    shared_slow_tiers: int = 1,
 ) -> EstimatorConfig:
+    """Estimator calibration for one slow tier (default: the CXL tier).
+
+    ``slow_device`` selects which slow tier's DeviceModel derives the
+    backlog threshold — the per-tier ensemble calibrates one estimator per
+    slow tier, so a CXL-over-switch tier (longer pipeline) gets a higher
+    threshold than a local expander, exactly the paper's per-device
+    calibration.  ``shared_slow_tiers`` divides the allowed queue depth:
+    the ToR is one shared pool, so when ``n`` slow tiers contend, each
+    tier's backlog-free budget is a ``1/n`` share of the depth a lone slow
+    tier may hold (``=1`` — a single slow tier — reproduces the seed
+    calibration exactly)."""
     g = granularity
-    ddr, cxl = platform.ddr, platform.cxl
+    ddr, cxl = platform.ddr, slow_device if slow_device is not None else platform.cxl
     # Loaded fast-tier residency: with the shared pool (ToR) full of fast
     # requests, Little gives residency = pool_size / service_rate.  This is
     # what the paper's offline saturating bw-test measures.  (Independent of
@@ -60,7 +75,7 @@ def calibrate_estimator(
     # coverage ratio pipeline/(g*service) is the natural floor; add the
     # configured markup on top.
     pipeline_cover = cxl.pipeline_ns / max(g * cxl.read_service_ns, 1e-9)
-    depth = max(slow_queue_markup, pipeline_cover)
+    depth = max(slow_queue_markup, pipeline_cover) / max(shared_slow_tiers, 1)
     threshold = cxl.pipeline_ns + g * cxl.read_service_ns * (1.0 + depth)
     return EstimatorConfig(
         t_fast=t_fast,
@@ -71,16 +86,82 @@ def calibrate_estimator(
     )
 
 
+#: Paper defaults: per-instruction-class backlog-free concurrency for the
+#: canonical local CXL expander (§5.2: 8/4/1 cores for load/store/nt-store).
+_BASE_CLASS_CAPS = {OpClass.LOAD: 8, OpClass.STORE: 4, OpClass.NT_STORE: 1}
+
+
+def _default_config() -> MikuConfig:
+    return MikuConfig(levels=(1, 2, 4, 8, 16),
+                      class_caps=dict(_BASE_CLASS_CAPS))
+
+
+def tier_class_caps(
+    device: DeviceModel,
+    reference: DeviceModel,
+    granularity: int = 4,
+) -> dict:
+    """Backlog-free class caps for one slow tier, scaled from the paper's
+    empirically-determined caps for the local expander.
+
+    The ToR-monopolization cost of one core is its *entry-holding time* per
+    request — pipeline flight holds an entry exactly like device queueing
+    does.  A tier reached through a switch (longer pipeline) therefore
+    holds more entry-time per core at equal concurrency, and its
+    backlog-free core count scales down by the entry-holding ratio vs the
+    reference (the platform's first slow tier, for which the paper's 8/4/1
+    caps were determined).  This is what makes the per-tier ladders
+    genuinely *different*: same rungs, lower per-class ceilings for farther
+    tiers."""
+    g = granularity
+    hold_ref = reference.pipeline_ns + g * reference.read_service_ns
+    hold = device.pipeline_ns + g * device.read_service_ns
+    scale = min(1.0, hold_ref / max(hold, 1e-9))
+    return {c: max(1, round(n * scale)) for c, n in _BASE_CLASS_CAPS.items()}
+
+
 def default_miku(
     platform: PlatformModel,
     granularity: int = 4,
     **est_overrides,
 ) -> MikuController:
-    """A MIKU controller calibrated for ``platform`` (paper defaults:
-    concurrency ladder 1/2/4/8/16, class caps 8/4/1 for load/store/nt-store)."""
+    """A per-slow-tier MIKU ensemble calibrated for ``platform``.
+
+    One ladder per slow tier, each derived from that tier's own
+    DeviceModel: the backlog threshold from its pipeline + service time
+    (with the allowed queue depth split across the slow tiers sharing the
+    ToR), and the class caps scaled by its entry-holding time
+    (:func:`tier_class_caps`).  For the canonical two-tier platforms this
+    is exactly the seed's single-ladder controller — one unit, the paper's
+    1/2/4/8/16 ladder and 8/4/1 caps, CXL-calibrated thresholds."""
+    slow_devs = platform.tiers[1:]
+    n_slow = len(slow_devs)
+    reference = slow_devs[0]
+    cfgs = [
+        MikuConfig(
+            levels=(1, 2, 4, 8, 16),
+            class_caps=tier_class_caps(dev, reference, granularity),
+        )
+        for dev in slow_devs
+    ]
+    ests = [
+        calibrate_estimator(
+            platform, granularity, slow_device=dev,
+            shared_slow_tiers=n_slow, **est_overrides
+        )
+        for dev in slow_devs
+    ]
+    return MikuController(cfgs, ests)
+
+
+def merged_miku(
+    platform: PlatformModel,
+    granularity: int = 4,
+    **est_overrides,
+) -> MergedSlowPolicy:
+    """The pre-vector merged-slow MIKU as an explicit law adapter: one
+    CXL-calibrated ladder fed the fold of all slow tiers' deltas, its
+    decision broadcast to every slow tier (comparison baseline for
+    ``corun3_pertier``)."""
     est = calibrate_estimator(platform, granularity, **est_overrides)
-    cfg = MikuConfig(
-        levels=(1, 2, 4, 8, 16),
-        class_caps={OpClass.LOAD: 8, OpClass.STORE: 4, OpClass.NT_STORE: 1},
-    )
-    return MikuController(cfg, est)
+    return MergedSlowPolicy(MikuController(_default_config(), est))

@@ -156,6 +156,30 @@ class MikuComparison:
         return self.miku_ddr / max(self.opt_ddr, 1e-9)
 
 
+def pertier_comparison(
+    platform: str = "A-switch",
+    op: OpClass = OpClass.STORE,
+    *,
+    laws: Tuple[str, ...] = ("racing", "merged", "pertier"),
+    n_threads: int = 16,
+    sim_ns: float = 300_000.0,
+    processes: Optional[int] = None,
+) -> List[dict]:
+    """Three-tier co-run under each control law (``corun3_pertier``):
+    per-slow-tier MIKU ladders vs the merged-slow broadcast vs racing.
+    Rows carry per-tier mean caps/rates and restricted-window counts —
+    under the per-tier law the switch tier's ladder sits below local
+    CXL's; under the merged law both columns are identical by
+    construction."""
+    return _rows(
+        "corun3_pertier",
+        {"platform": platform, "op": (op,), "law": laws,
+         "n_threads": n_threads, "sim_ns": sim_ns},
+        processes,
+        drop=(),
+    )
+
+
 def miku_comparison(
     platform: PlatformModel,
     op: OpClass,

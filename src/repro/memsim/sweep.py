@@ -44,21 +44,34 @@ class SimJob:
     #: Build a platform-calibrated MIKU controller in the worker.
     miku: bool = False
     miku_overrides: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: Which decision law ``miku=True`` builds: "pertier" (the per-slow-tier
+    #: ensemble, default) or "merged" (the explicit MergedSlowPolicy
+    #: baseline — one CXL-calibrated ladder over the folded slow deltas).
+    miku_law: str = "pertier"
+    #: Record per-window control telemetry into SimResult.window_records
+    #: (the ``benchmarks/run.py --trace`` payload).
+    record_windows: bool = False
 
     def __post_init__(self):
         # Fail at job construction (with the platform's tier list) rather
         # than deep inside a pool worker: unknown tier names raise
         # UnknownTierError here.
         validate_workloads(self.platform, self.workloads)
+        if self.miku_law not in ("pertier", "merged"):
+            raise ValueError(
+                f"unknown miku_law {self.miku_law!r}; "
+                "expected 'pertier' or 'merged'"
+            )
 
 
 def run_job(job: SimJob) -> SimResult:
     """Execute one job (the worker entry point; also the serial path)."""
     controller = None
     if job.miku:
-        from repro.memsim.calibration import default_miku
+        from repro.memsim.calibration import default_miku, merged_miku
 
-        controller = default_miku(
+        build = merged_miku if job.miku_law == "merged" else default_miku
+        controller = build(
             job.platform, job.granularity, **job.miku_overrides
         )
     sim = TieredMemorySim(
@@ -68,6 +81,7 @@ def run_job(job: SimJob) -> SimResult:
         granularity=job.granularity,
         controller=controller,
         window_ns=job.window_ns,
+        record_windows=job.record_windows,
     )
     return sim.run(job.sim_ns)
 

@@ -6,10 +6,13 @@ to live in :mod:`repro.memsim.runner` (which is now a thin compatibility
 wrapper over this registry).  Declaration order is presentation order —
 ``benchmarks/run.py`` derives its module list from it.
 
-Two scenarios exercise tier sets the legacy two-tier API could not
-express: ``corun3_switch`` (DDR + local CXL + CXL-over-switch) and
+Three scenarios exercise tier sets the legacy two-tier API could not
+express: ``corun3_switch`` (DDR + local CXL + CXL-over-switch),
 ``numa_remote`` (weighted interleave across local and NUMA-remote DDR
-while CXL traffic co-runs).
+while CXL traffic co-runs), and ``corun3_pertier`` (per-slow-tier MIKU
+ladders vs the merged-slow broadcast law on the three-tier co-run — the
+per-tier vector contract's demonstrator: independent DDR recovery with
+*different* ladders per slow tier).
 """
 
 from __future__ import annotations
@@ -45,6 +48,7 @@ def _job(
     seed: int = 0,
     granularity: int = 4,
     window_ns: float = 10_000.0,
+    miku_law: str = "pertier",
 ) -> SimJob:
     return SimJob(
         platform=platform,
@@ -54,6 +58,7 @@ def _job(
         granularity=granularity,
         window_ns=window_ns,
         miku=miku,
+        miku_law=miku_law,
     )
 
 
@@ -816,6 +821,92 @@ register(Scenario(
     ),
     build=_corun3_build,
     reduce=_corun3_reduce,
+))
+
+
+_CORUN3P_SLOW = ("cxl", "cxl_sw")
+
+
+def _corun3p_build(platform, cell) -> List[SimJob]:
+    op, n, sim_ns = cell["op"], cell["n_threads"], cell["sim_ns"]
+    law = cell["law"]
+    a = bw_test("ddr", op, n, name="ddr", miku_managed=False)
+    b = bw_test("cxl", op, n, name="cxl")
+    c = bw_test("cxl_sw", op, n, name="cxl_sw")
+    return [
+        _job(platform, [a], _BW_SIM_NS),
+        _job(platform, [b], _BW_SIM_NS),
+        _job(platform, [c], _BW_SIM_NS),
+        _job(platform, [a, b, c], sim_ns,
+             miku=law != "racing",
+             miku_law=law if law != "racing" else "pertier"),
+    ]
+
+
+def _corun3p_reduce(platform, cell, jobs, results) -> List[dict]:
+    a, b, c, corun = results
+    alone = {
+        "ddr": a.bandwidth("ddr"),
+        "cxl": b.bandwidth("cxl"),
+        "cxl_sw": c.bandwidth("cxl_sw"),
+    }
+    row = {
+        "platform": cell["platform"],
+        "op": cell["op"].value,
+        "law": cell["law"],
+    }
+    for tier in ("ddr", "cxl", "cxl_sw"):
+        row[f"{tier}_alone_gbps"] = alone[tier]
+        row[f"{tier}_corun_gbps"] = corun.bandwidth(tier)
+    row["ddr_pct_of_opt"] = 100.0 * corun.bandwidth("ddr") / max(
+        alone["ddr"], 1e-9
+    )
+    # Per-slow-tier ladder telemetry — the thing the merged contract cannot
+    # differentiate (its broadcast makes both columns identical).
+    top = 16.0  # ladder ceiling stands in for "unrestricted" in the mean
+    for tier in _CORUN3P_SLOW:
+        if cell["law"] == "racing":
+            row[f"{tier}_restricted_windows"] = 0
+            row[f"{tier}_mean_cap"] = top
+            row[f"{tier}_mean_rate"] = 1.0
+            continue
+        ds = [d.for_tier(tier) for d in corun.decisions]
+        caps = [float(d.max_concurrency) if d.max_concurrency is not None
+                else top for d in ds]
+        row[f"{tier}_restricted_windows"] = sum(1 for d in ds if d.restricted)
+        row[f"{tier}_mean_cap"] = sum(caps) / max(len(caps), 1)
+        row[f"{tier}_mean_rate"] = (
+            sum(d.rate_factor for d in ds) / max(len(ds), 1)
+        )
+    return [row]
+
+
+register(Scenario(
+    name="corun3_pertier",
+    title="Per-tier vs merged MIKU ladders on the three-tier co-run",
+    module="",  # registry/CLI native
+    axes=(
+        _platform_axis("A-switch"),
+        _op_axis(OpClass.STORE),
+        Axis("law", ("racing", "merged", "pertier"),
+             help="control law for the co-run "
+                  "(racing = no controller, merged = MergedSlowPolicy "
+                  "broadcast, pertier = per-slow-tier ensemble)"),
+        Axis("n_threads", 16, help="threads per co-running group"),
+        Axis("sim_ns", 300_000.0, help="co-run simulated horizon"),
+    ),
+    metrics=(
+        Metric("ddr_pct_of_opt", "%",
+               "fast-tier recovery vs running alone"),
+        Metric("cxl_mean_cap", "cores",
+               "mean local-CXL core cap over the run"),
+        Metric("cxl_sw_mean_cap", "cores",
+               "mean switched-CXL core cap (per-tier law: < cxl_mean_cap)"),
+        Metric("cxl_sw_restricted_windows", "",
+               "windows the switch tier spent restricted"),
+    ),
+    build=_corun3p_build,
+    reduce=_corun3p_reduce,
 ))
 
 

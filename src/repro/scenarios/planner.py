@@ -6,10 +6,17 @@ legacy imperative runners.  ``run_scenario()`` executes: every cell's jobs
 go through one :func:`~repro.memsim.sweep.run_sweep` batch (so figure-wide
 matrices fan out over the process pool exactly like the legacy runners),
 then each cell's ``reduce`` collects rows into a :class:`ResultTable`.
+
+``run_scenario(..., trace=True)`` additionally records every job's
+ControlLoop per-window decision telemetry (per-tier counter deltas +
+tier-addressed decisions) and attaches it as ``ResultTable.traces`` —
+the payload ``benchmarks/run.py --trace`` dumps as JSON next to the
+scenario's CSV.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -110,12 +117,25 @@ def run_scenario(
     scenario: ScenarioRef,
     overrides: Optional[Dict[str, Any]] = None,
     processes: Optional[int] = None,
+    *,
+    trace: bool = False,
 ) -> ResultTable:
-    """Execute a scenario and collect its uniform result table."""
+    """Execute a scenario and collect its uniform result table.
+
+    ``trace=True`` (grid scenarios only) turns on per-window control-plane
+    telemetry recording in every job and attaches the per-cell window
+    records as ``ResultTable.traces``.
+    """
     sc = _scenario(scenario)
     values = resolve_axes(sc, overrides)
     rows: List[Dict[str, Any]] = []
+    traces: Optional[List[Dict[str, Any]]] = [] if trace else None
     if sc.run_cell is not None:
+        if trace:
+            raise ValueError(
+                f"scenario {sc.name!r} is multi-stage (run_cell); per-window "
+                "decision tracing supports grid scenarios only"
+            )
         for cell, pm in _resolved_cells(sc, values):
             rows.extend(sc.run_cell(pm, cell, processes))
     else:
@@ -123,6 +143,12 @@ def run_scenario(
             (cell, pm, sc.build(pm, cell))
             for cell, pm in _resolved_cells(sc, values)
         ]
+        if trace:
+            planned = [
+                (cell, pm,
+                 [dataclasses.replace(j, record_windows=True) for j in jobs])
+                for cell, pm, jobs in planned
+            ]
         all_jobs: List[SimJob] = [j for _, _, jobs in planned for j in jobs]
         results = run_sweep(all_jobs, processes)
         i = 0
@@ -130,7 +156,21 @@ def run_scenario(
             chunk = results[i: i + len(jobs)]
             i += len(jobs)
             rows.extend(sc.reduce(pm, cell, jobs, chunk))
-    return ResultTable(scenario=sc.name, rows=rows, params=values)
+            if traces is not None:
+                traces.append({
+                    "cell": {k: getattr(v, "value", v)
+                             for k, v in cell.items()},
+                    "jobs": [
+                        {
+                            "job": j,
+                            "workloads": [w.name for w in job.workloads],
+                            "windows": res.window_records,
+                        }
+                        for j, (job, res) in enumerate(zip(jobs, chunk))
+                    ],
+                })
+    return ResultTable(scenario=sc.name, rows=rows, params=values,
+                       traces=traces)
 
 
 def parse_set_args(

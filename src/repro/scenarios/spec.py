@@ -144,6 +144,10 @@ class ResultTable:
     scenario: str
     rows: List[Dict[str, Any]]
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: Per-window control-plane telemetry (one entry per cell, each with
+    #: its jobs' per-tier window records) — populated only when the
+    #: scenario ran with ``trace=True`` (``benchmarks/run.py --trace``).
+    traces: Optional[List[Dict[str, Any]]] = None
 
     def __post_init__(self):
         self.rows = [{k: _plain(v) for k, v in r.items()} for r in self.rows]

@@ -15,9 +15,11 @@ Architecture
   decode step charges the queue its tier traffic: HBM-resident steps
   account fast-tier bytes (weights + KV read once per token — the
   memory-bound decode reality); host-resident steps *submit* their weight/KV
-  stream as slow-tier transfers.  A MIKU controller attached to the queue
-  watches the same Little's-Law counters as on the x86 platforms and
-  throttles host-tier concurrency — reproducing Figure 11/12's
+  stream as slow-tier transfers on the queue's "slow" link.  A MIKU
+  controller attached to the queue watches the same per-tier Little's-Law
+  counters (the :class:`~repro.core.littles_law.TierWindow` vector
+  contract) as on the x86 platforms and throttles each slow link's
+  concurrency via tier-addressed decisions — reproducing Figure 11/12's
   DataRacing -> MIKU recovery end to end with real model math and modeled
   PCIe timing (this container has no TPU; DESIGN.md §2).
 
@@ -290,7 +292,7 @@ class TieredServingCluster:
                     n_chunks = (eng.cfg.stream_chunks
                                 or 2 * eng.cfg.model.n_layers)
                     done_t = q.submit_slow_stream(wb + kvb, n_chunks,
-                                                  OpClass.LOAD)
+                                                  OpClass.LOAD, tier="slow")
                     self._host_busy_until[name] = done_t
                     n = eng.decode_once(done_t)
                     finished_at[name] = done_t

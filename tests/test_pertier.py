@@ -1,0 +1,393 @@
+"""Per-tier control-plane contract tests (vector counters, per-tier laws,
+tier-addressed apply).
+
+Four contracts:
+
+1. **Deprecation pins** — the legacy ``(fast, slow)`` wrappers
+   (``MikuController.window(fast, slow)`` and
+   ``TierSetWindowedCounters(merged=True)``) stay signature-compatible and
+   emit exactly one DeprecationWarning per process.
+2. **Vector bit-identity** — replaying the recorded two-tier seed trace as
+   per-tier TierWindows through the vector path reproduces the seed's
+   decision sequence verbatim (the vector degenerates to the pair).
+3. **Golden per-tier traces** — ``corun3_switch``'s co-run under the
+   per-tier ensemble and under the explicit MergedSlowPolicy reproduces the
+   recorded decision sequences (``tests/data/pertier_trace_*.json``), both
+   replayed law-only and re-simulated end to end.
+4. **Merging algebra** — folding per-tier window deltas is associative and
+   equals the legacy merged delta (hypothesis property).
+"""
+
+import json
+import os
+import warnings
+
+import pytest
+
+from repro.core.controller import (
+    Decision,
+    MergedSlowPolicy,
+    MikuController,
+    Phase,
+    TierDecisions,
+)
+from repro.core.des import TieredMemorySim
+from repro.core.device_model import platform_a, platform_a_switch
+from repro.core.littles_law import (
+    OpClass,
+    TierCounters,
+    TierWindow,
+    merge_tier_counters,
+)
+from repro.core.substrate import (
+    ControlLoop,
+    ReplaySubstrate,
+    TierSetWindowedCounters,
+)
+from repro.memsim.calibration import default_miku, merged_miku
+from repro.memsim.workloads import bw_test
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+P = platform_a()
+P3 = platform_a_switch()
+
+
+def _counters(d) -> TierCounters:
+    return TierCounters(
+        inserts=d["inserts"],
+        occupancy_time=d["occupancy_time"],
+        class_counts={OpClass(k): v for k, v in d["class_counts"].items()},
+    )
+
+
+def _pair_win(n_fast, t_fast, n_slow, t_slow, op=OpClass.LOAD):
+    f, s = TierCounters(), TierCounters()
+    for _ in range(n_fast):
+        f.record(op, t_fast)
+    for _ in range(n_slow):
+        s.record(op, t_slow)
+    return f, s
+
+
+# -- deprecation pins ---------------------------------------------------------
+
+
+def test_two_arg_window_deprecated_once_and_signature_compatible():
+    ctl = default_miku(P)
+    MikuController._warned_pair = False
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        d = ctl.window(*_pair_win(50, 100.0, 50, 5000.0))
+    assert [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    # legacy return type and fields, exactly as the seed controller
+    assert isinstance(d, Decision) and not isinstance(d, TierDecisions)
+    assert d.phase is Phase.RESTRICTED and d.max_concurrency == 1
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        ctl.window(*_pair_win(50, 100.0, 50, 5000.0))
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]  # fired once
+
+
+def test_two_arg_window_equals_vector_single_slow_tier():
+    """The deprecated pair form and a two-tier vector make identical
+    decisions (the vector degenerates to today's pair)."""
+    pair_ctl, vec_ctl = default_miku(P), default_miku(P)
+    MikuController._warned_pair = True  # silence; already pinned above
+    series = [
+        _pair_win(50, 100.0, 50, 5000.0),
+        _pair_win(50, 100.0, 50, 6000.0),
+        _pair_win(50, 100.0, 50, 300.0),
+        _pair_win(50, 100.0, 50, 250.0),
+    ]
+    for f, s in series:
+        dp = pair_ctl.window(f, s)
+        dv = vec_ctl.window(TierWindow((f, s), ("ddr", "cxl")))
+        assert isinstance(dv, TierDecisions) and dv.tiers == ("cxl",)
+        assert (dv.max_concurrency, dv.rate_factor, dv.phase) == (
+            dp.max_concurrency, dp.rate_factor, dp.phase)
+        assert dv.for_tier("cxl").max_concurrency == dp.max_concurrency
+
+
+def test_merged_mode_counters_deprecated_and_equal_to_vector_fold():
+    TierSetWindowedCounters._warned_merged = False
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy = TierSetWindowedCounters(3, merged=True)
+    assert [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        TierSetWindowedCounters(3, merged=True)
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]  # once
+
+    vector = TierSetWindowedCounters(names=("ddr", "cxl", "cxl_sw"))
+    for tc_set in (legacy, vector):
+        tc_set.tiers[0].record(OpClass.LOAD, 10.0)
+        tc_set.tiers[1].record(OpClass.STORE, 50.0)
+        tc_set.tiers[2].record(OpClass.LOAD, 70.0)
+        tc_set.tiers[2].record(OpClass.NT_STORE, 90.0)
+    fast_l, slow_l = legacy.delta()
+    win = vector.delta()
+    assert isinstance(win, TierWindow) and win.names == ("ddr", "cxl", "cxl_sw")
+    assert fast_l == win.fast
+    assert slow_l == win.merged_slow()
+    # consume-on-read in both modes
+    assert legacy.delta()[1].inserts == 0
+    assert vector.delta().merged_slow().inserts == 0
+
+
+# -- merging algebra (hypothesis property) ------------------------------------
+
+
+def test_merge_is_associative_and_matches_legacy_merged_delta():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def tier_counters(draw):
+        tc = TierCounters()
+        for op in OpClass:
+            n = draw(st.integers(0, 20))
+            for _ in range(n):
+                tc.record(op, draw(st.floats(0.0, 1e4)))
+        return tc
+
+    @given(a=tier_counters(), b=tier_counters(), c=tier_counters())
+    @settings(max_examples=50, deadline=None)
+    def prop(a, b, c):
+        left = merge_tier_counters([merge_tier_counters([a, b]), c])
+        right = merge_tier_counters([a, merge_tier_counters([b, c])])
+        assert left.inserts == right.inserts
+        assert left.occupancy_time == pytest.approx(right.occupancy_time)
+        assert left.class_counts == right.class_counts
+        # ... and equals the legacy merged-slow window over the same vector
+        win = TierWindow((TierCounters(), a, b, c))
+        folded = win.merged_slow()
+        assert folded.inserts == a.inserts + b.inserts + c.inserts
+        assert folded.occupancy_time == pytest.approx(
+            a.occupancy_time + b.occupancy_time + c.occupancy_time)
+
+    prop()
+
+
+# -- vector bit-identity with the recorded two-tier seed trace ----------------
+
+
+def _load_pair_trace(name):
+    with open(os.path.join(DATA, name)) as f:
+        windows = json.load(f)["windows"]
+    deltas = [
+        TierWindow((_counters(w["fast"]), _counters(w["slow"])),
+                   ("ddr", "cxl"))
+        for w in windows
+    ]
+    return deltas, [w["decision"] for w in windows]
+
+
+def test_vector_replay_reproduces_seed_two_tier_decisions():
+    """The seed's recorded (fast, slow) trace, replayed as two-tier
+    TierWindows through the vector path, yields the identical decision
+    sequence — the existing pin extended to the vector contract."""
+    deltas, golden = _load_pair_trace("miku_trace_des.json")
+    sub = ReplaySubstrate(deltas)
+    loop = ControlLoop(sub, default_miku(P), window_ns=1.0)
+    while not sub.exhausted:
+        loop.fire()
+    assert len(loop.decisions) == len(golden)
+    for d, g in zip(loop.decisions, golden):
+        assert isinstance(d, TierDecisions) and d.tiers == ("cxl",)
+        assert d.max_concurrency == g["max_concurrency"]
+        assert d.rate_factor == g["rate_factor"]
+        assert d.phase.value == g["phase"]
+    assert sub.applied == loop.decisions  # tier-addressed apply, in order
+
+
+def test_des_counters_delta_speaks_the_vector_contract():
+    wls = [bw_test("ddr", OpClass.LOAD, 2, name="a", miku_managed=False)]
+    sim = TieredMemorySim(P3, wls, seed=0)
+    sim.run(20_000.0)
+    win = sim.counters_delta()
+    assert isinstance(win, TierWindow)
+    assert win.names == ("ddr", "cxl", "cxl_sw")
+    assert len(win) == 3 and win.fast.inserts > 0
+
+
+# -- golden per-tier decision traces (corun3_switch) --------------------------
+
+
+def _load_pertier_trace(law):
+    with open(os.path.join(DATA, f"pertier_trace_{law}.json")) as f:
+        blob = json.load(f)
+    names = tuple(blob["tier_names"])
+    deltas, golden = [], []
+    for w in blob["windows"]:
+        deltas.append(TierWindow(
+            tuple(_counters(w["tiers"][t]) for t in names), names))
+        golden.append(w["decision"])
+    return blob, names, deltas, golden
+
+
+def _law_controller(law, platform):
+    return default_miku(platform) if law == "pertier" else merged_miku(platform)
+
+
+def _assert_tier_decisions_match(decisions, golden, slow_names):
+    assert len(decisions) == len(golden)
+    for i, (d, g) in enumerate(zip(decisions, golden)):
+        assert isinstance(d, TierDecisions) and d.tiers == slow_names, i
+        for t in slow_names:
+            dt, gt = d.for_tier(t), g[t]
+            assert dt.max_concurrency == gt["max_concurrency"], (i, t)
+            assert dt.rate_factor == gt["rate_factor"], (i, t)
+            assert dt.phase.value == gt["phase"], (i, t)
+
+
+@pytest.mark.parametrize("law", ["pertier", "merged"])
+def test_replayed_pertier_trace_reproduces_golden_decisions(law):
+    blob, names, deltas, golden = _load_pertier_trace(law)
+    sub = ReplaySubstrate(deltas)
+    loop = ControlLoop(sub, _law_controller(law, P3), window_ns=1.0)
+    while not sub.exhausted:
+        loop.fire()
+    _assert_tier_decisions_match(loop.decisions, golden, names[1:])
+
+
+@pytest.mark.parametrize("law", ["pertier", "merged"])
+def test_live_corun3_reproduces_golden_decisions(law):
+    """End to end: the 3-tier co-run re-simulated under each law emits the
+    recorded decision sequence (and therefore identical throttling)."""
+    blob, names, _, golden = _load_pertier_trace(law)
+    op = OpClass(blob["op"])
+    wls = [bw_test("ddr", op, blob["n_threads"], name="ddr",
+                   miku_managed=False),
+           bw_test("cxl", op, blob["n_threads"], name="cxl"),
+           bw_test("cxl_sw", op, blob["n_threads"], name="cxl_sw")]
+    sim = TieredMemorySim(P3, wls, seed=0,
+                          controller=_law_controller(law, P3),
+                          window_ns=blob["window_ns"])
+    res = sim.run(blob["sim_ns"])
+    _assert_tier_decisions_match(res.decisions, golden, names[1:])
+
+
+def test_pertier_ladders_differ_where_merged_cannot():
+    """The per-tier golden throttles the switch tier harder than local CXL;
+    the merged golden is structurally incapable of that (broadcast)."""
+    _, _, _, per = _load_pertier_trace("pertier")
+    _, _, _, mer = _load_pertier_trace("merged")
+    for g in mer:
+        assert g["cxl"]["max_concurrency"] == g["cxl_sw"]["max_concurrency"]
+        assert g["cxl"]["rate_factor"] == g["cxl_sw"]["rate_factor"]
+
+    def mean_cap(gs, tier, top=16.0):
+        caps = [g[tier]["max_concurrency"] for g in gs]
+        return sum(top if c is None else c for c in caps) / len(caps)
+
+    assert mean_cap(per, "cxl_sw") < mean_cap(per, "cxl")
+
+
+# -- tier-addressed apply -----------------------------------------------------
+
+
+def test_des_apply_addresses_tiers_independently():
+    wls = [bw_test("cxl", OpClass.LOAD, 4, name="b"),
+           bw_test("cxl_sw", OpClass.LOAD, 4, name="c")]
+    sim = TieredMemorySim(P3, wls, seed=0)
+    restricted = Decision(max_concurrency=1, rate_factor=0.5,
+                          phase=Phase.RESTRICTED)
+    open_d = Decision(max_concurrency=None, rate_factor=1.0,
+                      phase=Phase.UNRESTRICTED)
+    sim.apply(TierDecisions(tiers=("cxl", "cxl_sw"),
+                            decisions=(restricted, open_d)))
+    assert sim._limit[0] == 1 and not sim._unthrottled[0]  # cxl workload
+    assert sim._limit[1] is None and sim._unthrottled[1]  # cxl_sw workload
+    # broadcast legacy decision still reaches every slow tier
+    sim.apply(restricted)
+    assert sim._limit[0] == 1 and sim._limit[1] == 1
+    # wrong arity is a loud error
+    with pytest.raises(ValueError, match="slow tier"):
+        sim.apply(TierDecisions(tiers=("cxl",), decisions=(restricted,)))
+
+
+def test_striped_workload_obeys_most_restrictive_touched_tier():
+    import dataclasses
+
+    wl = dataclasses.replace(
+        bw_test("ddr", OpClass.LOAD, 4, name="s"),
+        placement={"ddr": 0.4, "cxl": 0.3, "cxl_sw": 0.3},
+    )
+    sim = TieredMemorySim(P3, [wl], seed=0)
+    sim.apply(TierDecisions(
+        tiers=("cxl", "cxl_sw"),
+        decisions=(Decision(max_concurrency=4, rate_factor=1.0,
+                            phase=Phase.RESTRICTED),
+                   Decision(max_concurrency=2, rate_factor=0.25,
+                            phase=Phase.RESTRICTED)),
+    ))
+    assert sim._limit[0] == 2  # min across touched slow tiers
+    assert sim._rate[0] == 0.25
+
+
+def test_transfer_queue_per_tier_links_and_decisions():
+    from repro.core.offload import TransferQueue
+    from repro.core.tiers import TierSpec
+
+    far = TierSpec(name="far_host", memory_kind="pinned_host",
+                   bandwidth_gbps=8.0, capacity_gib=512.0, parallelism=4)
+    q = TransferQueue(extra_slow=(far,))
+    assert list(q.slow_tiers) == ["slow", "far_host"]
+    q.apply(TierDecisions(
+        tiers=("slow", "far_host"),
+        decisions=(Decision(max_concurrency=None, rate_factor=1.0,
+                            phase=Phase.UNRESTRICTED),
+                   Decision(max_concurrency=2, rate_factor=1.0,
+                            phase=Phase.RESTRICTED)),
+    ))
+    q.submit_slow_stream(1 << 20, 32, tier="slow")
+    q.submit_slow_stream(1 << 20, 32, tier="far_host")
+    # the uncapped link floods descriptors; the capped link holds <= 2
+    assert q.slow_inflight("slow") == 32
+    assert q.slow_inflight("far_host") == 2
+    assert q.slow_backlog("slow") > 0
+    # per-tier counters exist and fill as transfers retire
+    q.advance(5e8)
+    assert q.counters["slow"].inserts == 32
+    assert q.counters["far_host"].inserts == 32
+    win = q.counters_delta()
+    assert isinstance(win, TierWindow)
+    assert win.names == ("fast", "slow", "far_host")
+
+
+# -- scenario + trace plumbing ------------------------------------------------
+
+
+def test_corun3_pertier_scenario_acceptance():
+    """CLI-runnable demonstrator: per-tier ladders throttle the switch tier
+    harder than local CXL while DDR recovers to near-peak; the merged law
+    cannot tell the tiers apart."""
+    from repro.scenarios import run_scenario
+
+    table = run_scenario(
+        "corun3_pertier",
+        {"law": ("merged", "pertier"), "sim_ns": 200_000.0},
+        trace=True,
+    )
+    rows = {r["law"]: r for r in table.rows}
+    per, mer = rows["pertier"], rows["merged"]
+    assert per["ddr_pct_of_opt"] > 90.0  # near-peak DDR recovery
+    assert per["cxl_sw_mean_cap"] < per["cxl_mean_cap"]  # switch hit harder
+    assert per["cxl_sw_restricted_windows"] > 0
+    assert mer["cxl_mean_cap"] == mer["cxl_sw_mean_cap"]  # merged: can't
+    # per-tier telemetry was traced for every cell
+    assert table.traces is not None and len(table.traces) == 2
+    windows = table.traces[1]["jobs"][3]["windows"]
+    assert windows, "co-run job must carry per-window telemetry"
+    assert set(windows[0]["tiers"]) == {"ddr", "cxl", "cxl_sw"}
+    assert set(windows[0]["decision"]) == {"cxl", "cxl_sw"}
+
+
+def test_trace_rejected_for_multistage_scenarios():
+    from repro.scenarios import run_scenario
+
+    with pytest.raises(ValueError, match="multi-stage"):
+        run_scenario("fig2_tiering", {"op": (OpClass.LOAD,)}, trace=True)
