@@ -114,11 +114,22 @@ def _run_scenario(name: str, set_args: list, fmt: str, jobs: int,
         trace_path = f"{trace}.trace.json"
         with open(table_path, "w") as f:
             f.write(out if out.endswith("\n") else out + "\n")
-        with open(trace_path, "w") as f:
-            json.dump({"scenario": table.scenario, "params": table.params,
-                       "traces": table.traces}, f, indent=2)
-            f.write("\n")
-        print(f"wrote {table_path} and {trace_path}")
+        has_windows = table.traces and any(
+            j["windows"] for t in table.traces for j in t["jobs"]
+        )
+        if has_windows:
+            with open(trace_path, "w") as f:
+                json.dump({"scenario": table.scenario, "params": table.params,
+                           "traces": table.traces}, f, indent=2)
+                f.write("\n")
+            print(f"wrote {table_path} and {trace_path}")
+        else:
+            # No job recorded any control-plane windows (e.g. the horizon is
+            # shorter than one window): an empty trace file would just break
+            # downstream tooling — say so instead.
+            print(f"wrote {table_path}; no per-window telemetry was "
+                  f"recorded (no job completed a control window), "
+                  f"skipping {trace_path}")
     print(out, end="" if fmt != "json" else "\n")
 
 

@@ -7,6 +7,12 @@
    two-tier surface could not express.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+Next stop: ``examples/tiering_demo.py`` — the tiering layer (page-granular
+hotness tracking + a migration engine whose copies are real modeled
+``MIGRATE`` traffic, coordinated with MIKU), and the
+``migrate_interference`` / ``tiering_policies`` scenarios that exercise it
+from ``benchmarks/run.py``.
 """
 
 from repro.core.des import run_bw_test, run_corun

@@ -79,12 +79,16 @@ class MikuConfig:
     levels: Sequence[int] = (1, 2, 4, 8, 16)
     #: Per-instruction-class backlog-free concurrency caps (paper: 8/4/1
     #: cores for load/store/nt-store).  Promotion stops here while the fast
-    #: tier is active; caps are lifted when the fast tier idles.
+    #: tier is active; caps are lifted when the fast tier idles.  MIGRATE is
+    #: the tiering subsystem's page-copy class: its cap is the ladder's
+    #: *migration budget* — the concurrency best-effort migration traffic
+    #: may use on this tier while demand traffic is active.
     class_caps: Dict[OpClass, int] = dataclasses.field(
         default_factory=lambda: {
             OpClass.LOAD: 8,
             OpClass.STORE: 4,
             OpClass.NT_STORE: 1,
+            OpClass.MIGRATE: 2,
         }
     )
     #: Multiplicative rate steps applied *below* the most restrictive level
@@ -205,9 +209,24 @@ class SlowTierMiku:
     def _class_cap(self, slow_classes: Sequence[OpClass]) -> int:
         """The most permissive backlog-free cap among active traffic classes
         is bounded by the least permissive one actually present — a window
-        containing nt-stores must respect the nt-store cap."""
-        caps = [self.config.class_caps[c] for c in slow_classes]
+        containing nt-stores must respect the nt-store cap.  Classes with no
+        configured cap (e.g. MIGRATE under a pre-tiering config) default to
+        the most restrictive stance (1)."""
+        caps = [self.config.class_caps.get(c, 1) for c in slow_classes]
         return min(caps) if caps else max(self.config.levels)
+
+    def migration_budget(self) -> int:
+        """Concurrent migration streams this ladder currently tolerates on
+        its tier: the MIGRATE class cap while unrestricted, the ladder's
+        current level (bounded by that cap) while restricted, and zero once
+        fine-grained rate control has engaged — by then even level-3 demand
+        concurrency is too much, so best-effort copies must stand down."""
+        cap = self.config.class_caps.get(OpClass.MIGRATE, 1)
+        if self.phase is Phase.UNRESTRICTED:
+            return cap
+        if self._rate < 1.0:
+            return 0
+        return min(cap, self._level_value())
 
     def _level_value(self) -> int:
         return self.config.levels[self._level_idx]
@@ -450,6 +469,12 @@ class MikuController:
         )
         self.decisions.append(decision)
         return decision
+
+    def migration_budgets(self) -> Dict[str, int]:
+        """Per-slow-tier migration budgets (tier name → allowed concurrent
+        migration streams) from each ladder's current state — what a
+        MIKU-coordinated tiering policy consults before enqueueing copies."""
+        return {u.tier: u.migration_budget() for u in self.units}
 
     def reset(self) -> None:
         for unit in self.units:

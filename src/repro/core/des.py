@@ -219,6 +219,9 @@ class SimResult:
     #: Per-window control telemetry (JSON-safe dicts); populated only when
     #: the sim was built with ``record_windows=True``.
     window_records: List[dict] = dataclasses.field(default_factory=list)
+    #: Tiering-subsystem summary (pages promoted/demoted, migrated bytes,
+    #: final placement fractions); None unless a tiering hook was installed.
+    tiering: Optional[dict] = None
 
     def bandwidth(self, name: str) -> float:
         return self.stats[name].bandwidth_gbps(self.sim_ns)
@@ -251,9 +254,18 @@ class TieredMemorySim:
         controller: Optional[MikuController] = None,
         latency_reservoir: int = LATENCY_RESERVOIR,
         record_windows: bool = False,
+        tiering=None,
     ):
         self.platform = platform
         self.workloads = list(workloads)
+        # Tiering hook (duck-typed; see repro.tiering.hook.TieringHook): the
+        # hook contributes its migration pseudo-workloads up front, then
+        # re-resolves placement / migration budgets once per window.  With
+        # ``tiering=None`` the engine is exactly the hook-free fast path —
+        # bit-identical to the pinned two-tier goldens.
+        self._tiering = tiering
+        if tiering is not None:
+            self.workloads.extend(tiering.migration_workloads(platform))
         validate_workloads(platform, self.workloads)
         # Ordered tier table: tier code == position in platform.tiers (fast
         # tier first); the LLC is one extra station after the tiers.
@@ -455,6 +467,9 @@ class TieredMemorySim:
         self._timeline_bucket_ns = window_ns
         self._timeline_acc = [0.0] * n
         self._timeline_next = self._timeline_bucket_ns
+
+        if tiering is not None:
+            tiering.bind(self)
 
     # -- substrate protocol ---------------------------------------------------
     @property
@@ -832,6 +847,14 @@ class TieredMemorySim:
         # applies the decision (see ``apply``); with no controller it still
         # keeps the window cadence for the timeline flush below.
         self.control.fire()
+        if self._tiering is not None:
+            # Per-window tiering pass: sample accesses into the PageMap, run
+            # the migration policy, re-resolve placement vectors, gate the
+            # migration pseudo-workloads — then re-open the issue path if the
+            # hook changed routing or budgets.
+            if self._tiering.on_window(self):
+                self._fill_irq()
+                self._pump()
         # Flush bandwidth timeline buckets.
         while self.now >= self._timeline_next:
             acc = self._timeline_acc
@@ -1075,10 +1098,35 @@ class TieredMemorySim:
                 t: self._occ_tier[i]
                 for i, t in enumerate(self._tier_names)
             },
-            window_records=[
-                window_record_jsonable(r) for r in self.control.records
-            ] if self._record_windows else [],
+            window_records=self._window_records(),
+            tiering=(
+                self._tiering.summary() if self._tiering is not None else None
+            ),
         )
+
+    def _window_records(self) -> List[dict]:
+        if not self._record_windows:
+            return []
+        records = [window_record_jsonable(r) for r in self.control.records]
+        if self._tiering is None:
+            return records
+        # Merge the tiering hook's per-window migration counters in by window
+        # index.  With no controller the ControlLoop records nothing, so the
+        # hook's log alone carries the trace (naive-migration cells still get
+        # per-window telemetry).
+        by_index = {r["window"]: r for r in records}
+        merged: List[dict] = []
+        for entry in self._tiering.window_log:
+            rec = by_index.pop(entry["window"], None)
+            if rec is None:
+                rec = {"window": entry["window"], "t_ns": entry["t_ns"]}
+            rec["tiering"] = {
+                k: v for k, v in entry.items() if k not in ("window", "t_ns")
+            }
+            merged.append(rec)
+        merged.extend(by_index.values())  # windows the hook never saw
+        merged.sort(key=lambda r: r["window"])
+        return merged
 
 
 # ---------------------------------------------------------------------------

@@ -40,12 +40,23 @@ class OpClass(enum.Enum):
       write per retired store (paper: "involve an equal number of reads and
       writes").
     * ``NT_STORE`` — non-temporal stores: write-only streams.
+    * ``MIGRATE``  — page-migration traffic (the tiering subsystem's
+      promotion/demotion copies): each migrated line is read at the source
+      tier and written at the destination, so one retired migration request
+      carries a read + a write over the slow link — a best-effort request
+      class the control plane may budget separately from demand traffic.
     """
 
     LOAD = "load"
     STORE = "store"
     NT_STORE = "nt_store"
+    MIGRATE = "migrate"
 
+
+#: The application-issued instruction classes (what bw-tests and workload op
+#: grids enumerate).  MIGRATE is engine-generated background traffic, never a
+#: demand-workload op — keep it out of figure matrices.
+DEMAND_CLASSES = (OpClass.LOAD, OpClass.STORE, OpClass.NT_STORE)
 
 #: Device-level accesses generated per retired request of each class
 #: (reads, writes) — used both by the device models and by the threshold
@@ -54,6 +65,7 @@ ACCESS_MIX: Dict[OpClass, tuple] = {
     OpClass.LOAD: (1, 0),
     OpClass.STORE: (1, 1),
     OpClass.NT_STORE: (0, 1),
+    OpClass.MIGRATE: (1, 1),
 }
 
 
@@ -82,8 +94,12 @@ class TierCounters:
     def merge(self, other: "TierCounters") -> None:
         self.inserts += other.inserts
         self.occupancy_time += other.occupancy_time
+        # .get: counters deserialized from traces recorded before a class
+        # existed (e.g. MIGRATE) simply lack that key — treat as zero.
         for c in OpClass:
-            self.class_counts[c] += other.class_counts[c]
+            self.class_counts[c] = (
+                self.class_counts.get(c, 0) + other.class_counts.get(c, 0)
+            )
 
     def snapshot(self) -> "TierCounters":
         return TierCounters(
@@ -98,7 +114,8 @@ class TierCounters:
             inserts=self.inserts - since.inserts,
             occupancy_time=self.occupancy_time - since.occupancy_time,
             class_counts={
-                c: self.class_counts[c] - since.class_counts[c] for c in OpClass
+                c: self.class_counts.get(c, 0) - since.class_counts.get(c, 0)
+                for c in OpClass
             },
         )
 
@@ -182,6 +199,29 @@ class TierWindow(tuple):
     def merged_slow(self) -> TierCounters:
         """Tiers 1..n-1 folded into one delta — the legacy slow window."""
         return merge_tier_counters(self[1:])
+
+    @classmethod
+    def zero(cls, names: "Sequence[str]") -> "TierWindow":
+        """The identity window: one empty TierCounters per named tier."""
+        return cls(tuple(TierCounters() for _ in names), tuple(names))
+
+    def merge(self, other: "TierWindow") -> "TierWindow":
+        """Element-wise fold of two windows over the *same* tier set.
+
+        Aggregating windows across runs/processes only makes sense when the
+        tier vectors describe the same platform, so a name mismatch is a
+        loud error rather than a silent positional fold.  Merging with
+        :meth:`zero` is the identity (pinned in tests/test_pertier.py).
+        """
+        if self.names != other.names:
+            raise ValueError(
+                f"cannot merge TierWindows over different tier sets: "
+                f"{self.names} vs {other.names}"
+            )
+        return TierWindow(
+            tuple(merge_tier_counters((a, b)) for a, b in zip(self, other)),
+            self.names,
+        )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -33,6 +33,7 @@ import jax
 import numpy as np
 
 from repro.core.controller import Decision, MikuController, TierDecisions
+from repro.core.device_model import UnknownTierError
 from repro.core.littles_law import OpClass, TierCounters, TierWindow
 from repro.core.substrate import ControlLoop, TierSetWindowedCounters
 from repro.core.tiers import (
@@ -144,9 +145,16 @@ class TransferQueue:
     def apply(self, decision) -> None:
         self._decision = decision
 
+    def _check_tier(self, tier: str) -> None:
+        """Unknown slow-link names are a loud error (the DES already does
+        this at construction; the queue used to fall back silently)."""
+        if tier not in self.slow_tiers:
+            raise UnknownTierError(tier, ("fast", *self.slow_tiers))
+
     def decision_for(self, tier: str = "slow") -> Decision:
         """The decision governing one slow link: its own tier-addressed
         entry, or the broadcast legacy decision."""
+        self._check_tier(tier)
         d = self._decision
         if isinstance(d, TierDecisions) and tier in d.tiers:
             return d.for_tier(tier)
@@ -175,6 +183,7 @@ class TransferQueue:
     def slow_inflight(self, tier: str = "slow") -> int:
         """One slow link's transfers holding descriptors *now* (enqueued,
         incomplete)."""
+        self._check_tier(tier)
         return sum(
             1 for f in self._inflight
             if f.tier == tier and f.t_enqueue <= self.now
@@ -204,6 +213,7 @@ class TransferQueue:
         co-resident slow links can run different ladders.  Returns the
         stream's completion time.
         """
+        self._check_tier(tier)
         spec = self.slow_tiers[tier]
         decision = self.decision_for(tier)
         cap = decision.max_concurrency
@@ -231,6 +241,8 @@ class TransferQueue:
         the descriptor backlog that blocks fast-tier request slots (the
         IRQ/ToR unfairness, TPU rendition).  ``tier=None`` sums every slow
         link's backlog."""
+        if tier is not None:
+            self._check_tier(tier)
         tiers = self.slow_tiers if tier is None else (tier,)
         return sum(
             max(0, self.slow_inflight(t) - self.slow_tiers[t].parallelism)

@@ -68,6 +68,7 @@ def calibrate_estimator(
         OpClass.LOAD: rs,
         OpClass.STORE: rs + ws,
         OpClass.NT_STORE: ws,
+        OpClass.MIGRATE: rs + ws,  # a migrated line is read + written
     }
     class_scale = {c: s / rs for c, s in per_instr.items()}
     # Backlog-free queue depth: enough in-flight to cover the pipeline (the
@@ -88,7 +89,15 @@ def calibrate_estimator(
 
 #: Paper defaults: per-instruction-class backlog-free concurrency for the
 #: canonical local CXL expander (§5.2: 8/4/1 cores for load/store/nt-store).
-_BASE_CLASS_CAPS = {OpClass.LOAD: 8, OpClass.STORE: 4, OpClass.NT_STORE: 1}
+#: MIGRATE is the tiering engine's page-copy class: its cap is the ladder's
+#: migration budget — copies are RMW-heavy (read at source + write at dest),
+#: so the backlog-free budget sits between the store and nt-store caps.
+_BASE_CLASS_CAPS = {
+    OpClass.LOAD: 8,
+    OpClass.STORE: 4,
+    OpClass.NT_STORE: 1,
+    OpClass.MIGRATE: 2,
+}
 
 
 def _default_config() -> MikuConfig:

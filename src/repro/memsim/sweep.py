@@ -51,6 +51,9 @@ class SimJob:
     #: Record per-window control telemetry into SimResult.window_records
     #: (the ``benchmarks/run.py --trace`` payload).
     record_windows: bool = False
+    #: Optional :class:`repro.tiering.TieringSpec` — the worker builds a
+    #: fresh hook per sim (stateful, like MIKU controllers).
+    tiering: Optional[object] = None
 
     def __post_init__(self):
         # Fail at job construction (with the platform's tier list) rather
@@ -82,6 +85,7 @@ def run_job(job: SimJob) -> SimResult:
         controller=controller,
         window_ns=job.window_ns,
         record_windows=job.record_windows,
+        tiering=job.tiering.build() if job.tiering is not None else None,
     )
     return sim.run(job.sim_ns)
 

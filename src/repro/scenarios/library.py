@@ -21,7 +21,7 @@ from typing import Dict, List, Optional
 
 from repro.core.des import WorkloadSpec
 from repro.core.device_model import PlatformModel
-from repro.core.littles_law import OpClass
+from repro.core.littles_law import DEMAND_CLASSES, OpClass
 from repro.memsim.sweep import SimJob, run_sweep
 from repro.memsim.workloads import (
     alternating_bw_pair,
@@ -35,7 +35,7 @@ from repro.scenarios.spec import Axis, Metric, Scenario
 _BW_SIM_NS = 120_000.0
 _CORUN_SIM_NS = 300_000.0
 
-_OPS = tuple(OpClass)
+_OPS = DEMAND_CLASSES  # workload op grids never include MIGRATE
 _TWO_TIERS = ("ddr", "cxl")
 
 
@@ -49,6 +49,7 @@ def _job(
     granularity: int = 4,
     window_ns: float = 10_000.0,
     miku_law: str = "pertier",
+    tiering=None,
 ) -> SimJob:
     return SimJob(
         platform=platform,
@@ -59,6 +60,7 @@ def _job(
         window_ns=window_ns,
         miku=miku,
         miku_law=miku_law,
+        tiering=tiering,
     )
 
 
@@ -299,7 +301,7 @@ register(Scenario(
 
 def _fig6_build(platform, cell) -> List[SimJob]:
     jobs = []
-    for op in OpClass:
+    for op in DEMAND_CLASSES:
         for scenario in ("ddr", "cxl", "both"):
             wls: List[WorkloadSpec] = []
             if scenario in ("ddr", "both"):
@@ -907,6 +909,183 @@ register(Scenario(
     ),
     build=_corun3p_build,
     reduce=_corun3p_reduce,
+))
+
+
+# -- Tiering subsystem scenarios (repro.tiering) ------------------------------
+
+
+def _mig_spec(policy: str, managed: bool, drift: float, mig_cores: int,
+              mig_mlp: int):
+    """TieringSpec for the migrate_interference co-run: the CXL demand
+    workload's pages all start slow, with a drifting hot set that keeps the
+    promotion/demotion engine busy for the whole run."""
+    from repro.tiering import HotSetPattern, RegionSpec, TieringSpec
+
+    return TieringSpec(
+        regions=(RegionSpec(
+            workload="cxl",
+            n_pages=2048,
+            placement={"cxl": 1.0},
+            pattern=HotSetPattern(hot_fraction=0.125, hot_weight=0.9,
+                                  drift_pages=drift),
+        ),),
+        policy=policy,
+        fast_capacity_pages=384,
+        mig_cores=mig_cores,
+        mig_mlp=mig_mlp,
+        mig_miku_managed=managed,
+    )
+
+
+_MIGRATE_VARIANTS = ("demand_only", "naive", "miku")
+
+
+def _migif_build(platform, cell) -> List[SimJob]:
+    op, n, sim_ns = cell["op"], cell["n_threads"], cell["sim_ns"]
+    drift = cell["drift_pages"]
+    a = bw_test("ddr", op, n, name="ddr", miku_managed=False)
+    b = bw_test("cxl", op, n, name="cxl")
+    wls = [a, b]
+    # naive: the migration daemon races outside MIKU's reach (hotness_lru,
+    # unmanaged, aggressive); miku: the same candidates but migration is a
+    # MIKU-governed request class (managed workloads + coordinated deferral).
+    naive = _mig_spec("hotness_lru", managed=False, drift=drift,
+                      mig_cores=cell["mig_cores"], mig_mlp=cell["mig_mlp"])
+    coord = _mig_spec("miku_coordinated", managed=True, drift=drift,
+                      mig_cores=cell["mig_cores"], mig_mlp=cell["mig_mlp"])
+    return [
+        _job(platform, wls, sim_ns, miku=True),
+        _job(platform, wls, sim_ns, miku=True, tiering=naive),
+        _job(platform, wls, sim_ns, miku=True, tiering=coord),
+    ]
+
+
+def _migif_reduce(platform, cell, jobs, results) -> List[dict]:
+    baseline = results[0].bandwidth("ddr")
+    rows = []
+    for variant, res in zip(_MIGRATE_VARIANTS, results):
+        row = {
+            "platform": cell["platform"],
+            "op": cell["op"].value,
+            "variant": variant,
+            "ddr_gbps": res.bandwidth("ddr"),
+            "cxl_gbps": res.bandwidth("cxl"),
+            "ddr_pct_of_demand_only":
+                100.0 * res.bandwidth("ddr") / max(baseline, 1e-9),
+        }
+        t = res.tiering
+        row["mig_gbps"] = (
+            res.bandwidth("mig-cxl") if t is not None else 0.0
+        )
+        row["pages_promoted"] = t["pages_promoted"] if t else 0
+        row["pages_demoted"] = t["pages_demoted"] if t else 0
+        row["deferred_jobs"] = t["deferred_jobs"] if t else 0
+        row["cxl_fast_fraction"] = (
+            t["fast_fraction"]["cxl"] if t else 0.0
+        )
+        rows.append(row)
+    return rows
+
+
+register(Scenario(
+    name="migrate_interference",
+    title="Migration traffic as a request class: naive vs MIKU-coordinated",
+    module="",  # registry/CLI native
+    axes=(
+        _platform_axis(),
+        _op_axis(OpClass.LOAD),
+        Axis("n_threads", 16, help="threads per demand group"),
+        Axis("drift_pages", 64.0, help="hot-set drift per window (churn)"),
+        Axis("mig_cores", 8, help="migration-daemon cores per slow tier"),
+        Axis("mig_mlp", 160, help="migration-daemon MLP per core"),
+        Axis("sim_ns", 300_000.0, help="co-run simulated horizon"),
+    ),
+    metrics=(
+        Metric("ddr_pct_of_demand_only", "%",
+               "DDR demand bandwidth vs the no-migration co-run"),
+        Metric("mig_gbps", "GB/s", "migration-engine copy bandwidth"),
+        Metric("pages_promoted", "pages"),
+        Metric("deferred_jobs", "",
+               "migrations MIKU coordination pushed past throttled windows"),
+    ),
+    build=_migif_build,
+    reduce=_migif_reduce,
+))
+
+
+def _tierpol_build(platform, cell) -> List[SimJob]:
+    from repro.tiering import HotSetPattern, RegionSpec, TieringSpec
+
+    op, n, sim_ns = cell["op"], cell["n_threads"], cell["sim_ns"]
+    n_pages = 1024
+    # A quarter of the region starts fast; the slow remainder is spread
+    # evenly over however many slow tiers the platform has (the 3-tier
+    # A-switch cell exercises promotion from two different slow devices).
+    slow = platform.tier_names[1:]
+    placement = {"ddr": 0.25}
+    for t in slow:
+        placement[t] = 0.75 / len(slow)
+    # The hot set starts inside the slow-resident portion (page n/4 is the
+    # first slow page under the contiguous initial placement): a static
+    # placement serves it from the slow tier(s) forever, a hotness policy
+    # promotes it — and then has to chase it as it drifts.
+    spec = TieringSpec(
+        regions=(RegionSpec(
+            workload="app",
+            n_pages=n_pages,
+            placement=placement,
+            pattern=HotSetPattern(hot_fraction=0.125, hot_weight=0.9,
+                                  drift_pages=cell["drift_pages"],
+                                  hot_start=n_pages // 4),
+        ),),
+        policy=cell["policy"],
+        fast_capacity_pages=320,
+        mig_cores=8,
+    )
+    app = bw_test("ddr", op, n, name="app", miku_managed=False)
+    return [_job(platform, [app], sim_ns, tiering=spec)]
+
+
+def _tierpol_reduce(platform, cell, jobs, results) -> List[dict]:
+    (res,) = results
+    t = res.tiering
+    return [{
+        "platform": cell["platform"],
+        "policy": cell["policy"],
+        "drift_pages": cell["drift_pages"],
+        "app_gbps": res.bandwidth("app"),
+        "app_fast_fraction": t["fast_fraction"]["app"],
+        "pages_promoted": t["pages_promoted"],
+        "pages_demoted": t["pages_demoted"],
+        "migrated_gb": t["migrated_bytes"] / 1e9,
+    }]
+
+
+register(Scenario(
+    name="tiering_policies",
+    title="Hot-set drift vs tiering policy on 2- and 3-tier platforms",
+    module="",  # registry/CLI native
+    axes=(
+        _platform_axis(("A", "A-switch")),
+        Axis("policy", ("static", "hotness_lru"),
+             help="tiering policy (repro.tiering.policies registry)"),
+        _op_axis(OpClass.LOAD),
+        Axis("n_threads", 16, help="app thread count"),
+        Axis("drift_pages", 4.0,
+             help="hot-set drift per window (fast drift outruns migration "
+                  "bandwidth and the copy tax wins — try 16)"),
+        Axis("sim_ns", 300_000.0, help="simulated horizon"),
+    ),
+    metrics=(
+        Metric("app_gbps", "GB/s", "delivered app bandwidth"),
+        Metric("app_fast_fraction", "",
+               "access-weighted share served by the fast tier at the end"),
+        Metric("pages_promoted", "pages"),
+        Metric("migrated_gb", "GB", "total migration copy traffic"),
+    ),
+    build=_tierpol_build,
+    reduce=_tierpol_reduce,
 ))
 
 

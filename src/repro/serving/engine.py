@@ -73,11 +73,22 @@ class EngineConfig:
 
 
 class ServingEngine:
-    """One model instance with continuous batching."""
+    """One model instance with continuous batching.
+
+    ``kv_pagemap`` (optional) hands KV-cache offload placement to the
+    tiering subsystem: a :class:`repro.tiering.pagemap.PageMap` carrying a
+    region named after this engine.  Instead of the all-or-nothing
+    ``placement`` split, each decode step's KV bytes divide between the HBM
+    path and the host link by the region's *live* access-weighted tier
+    fractions — so promoting hot KV pages genuinely moves their stream off
+    the slow link mid-run.  The engine feeds the region one access sample
+    per decoded token (station accounting, same contract as the DES hook).
+    """
 
     def __init__(self, cfg: EngineConfig, params: Any, *,
-                 rng: Optional[jax.Array] = None):
+                 rng: Optional[jax.Array] = None, kv_pagemap: Any = None):
         self.cfg = cfg
+        self.kv_pagemap = kv_pagemap
         self.model = TransformerLM(cfg.model)
         self.params = params
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -204,6 +215,24 @@ class ServingEngine:
         )
         return wb, kvb
 
+    def kv_tier_bytes(self, kv_bytes: int) -> Tuple[int, int]:
+        """Split one step's KV stream into (fast_bytes, slow_bytes).
+
+        Without a PageMap the split follows the static placement (the
+        pre-tiering behavior, bit-for-bit).  With one, the engine's KV
+        region decides: its access-weighted fast fraction stays on HBM and
+        only the slow remainder crosses the host link."""
+        if self.kv_pagemap is None or self.cfg.name not in getattr(
+            self.kv_pagemap, "regions", {}
+        ):
+            if self.cfg.placement == "host":
+                return 0, kv_bytes
+            return kv_bytes, 0
+        self.kv_pagemap.record_window(self.cfg.name, float(self.n_active))
+        fast = self.kv_pagemap.fast_fraction(self.cfg.name)
+        fast_bytes = int(kv_bytes * fast)
+        return fast_bytes, kv_bytes - fast_bytes
+
     def decode_once(self, now_ns: float) -> int:
         """One real decode step for all active slots.  Returns #tokens."""
         if self.n_active == 0:
@@ -291,8 +320,20 @@ class TieredServingCluster:
                         continue
                     n_chunks = (eng.cfg.stream_chunks
                                 or 2 * eng.cfg.model.n_layers)
-                    done_t = q.submit_slow_stream(wb + kvb, n_chunks,
+                    # A KV PageMap routes the hot share of the KV stream
+                    # over HBM; only the slow remainder crosses the link.
+                    # The HBM share costs exactly what it would cost an
+                    # hbm-placed engine (fast_penalty included) and the
+                    # step completes only when both paths have.
+                    kv_fast, kv_slow = eng.kv_tier_bytes(kvb)
+                    fast_dur = 0.0
+                    if kv_fast:
+                        fast_dur = kv_fast / self.hbm_bw * q.fast_penalty()
+                        q.account_fast(kv_fast, fast_dur, OpClass.LOAD)
+                        fast_time += fast_dur
+                    done_t = q.submit_slow_stream(wb + kv_slow, n_chunks,
                                                   OpClass.LOAD, tier="slow")
+                    done_t = max(done_t, q.now + fast_dur)
                     self._host_busy_until[name] = done_t
                     n = eng.decode_once(done_t)
                     finished_at[name] = done_t

@@ -1,0 +1,56 @@
+"""repro.tiering — page-granularity hotness tracking + migration engine.
+
+The simulator's workloads used to carry *static* placement vectors frozen at
+construction; every real tiered-memory system instead tracks per-page
+hotness, promotes hot pages toward the fast tier, demotes cold ones — and
+pays for it, because the promotion/demotion copies travel the same CXL links
+as demand requests ("Demystifying CXL Memory"; CXL-DMSim's explicit
+data-movement path).  This package is that vertical slice:
+
+* :mod:`repro.tiering.pagemap` — the address-space model: page → tier,
+  per-page hotness with exponential decay, sampled access tracking fed from
+  the DES's station accounting.
+* :mod:`repro.tiering.policies` — the policy registry (``static``,
+  ``hotness_lru`` TPP-style promotion + watermark demotion, and
+  ``miku_coordinated``, which consults the MIKU ladders' migration budgets
+  and defers copies while a tier is throttling).
+* :mod:`repro.tiering.engine` — the MigrationEngine: policy decisions become
+  migration jobs executed as best-effort ``OpClass.MIGRATE`` requests
+  through the existing DES stations, so copies consume real modeled
+  bandwidth, queue behind demand traffic, and are visible to the per-tier
+  :class:`~repro.core.littles_law.TierWindow` counters.
+* :mod:`repro.tiering.hook` — the DES integration: a picklable
+  :class:`~repro.tiering.hook.TieringSpec` builds a per-sim hook that
+  :class:`~repro.core.des.TieredMemorySim` drives once per control window
+  (``tiering=`` argument); with no hook installed the engine's two-tier fast
+  path is bit-identical to the pinned goldens.
+"""
+
+from repro.tiering.engine import MigrationEngine, MigrationJob
+from repro.tiering.hook import RegionSpec, TieringHook, TieringSpec
+from repro.tiering.pagemap import HotSetPattern, PageMap, PageRegion
+from repro.tiering.policies import (
+    POLICIES,
+    HotnessLRUPolicy,
+    MikuCoordinatedPolicy,
+    PolicyContext,
+    StaticPolicy,
+    make_policy,
+)
+
+__all__ = [
+    "HotSetPattern",
+    "HotnessLRUPolicy",
+    "MigrationEngine",
+    "MigrationJob",
+    "MikuCoordinatedPolicy",
+    "POLICIES",
+    "PageMap",
+    "PageRegion",
+    "PolicyContext",
+    "RegionSpec",
+    "StaticPolicy",
+    "TieringHook",
+    "TieringSpec",
+    "make_policy",
+]

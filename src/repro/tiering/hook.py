@@ -1,0 +1,281 @@
+"""DES integration: TieringSpec (picklable config) → TieringHook (per-sim).
+
+:class:`TieredMemorySim` accepts ``tiering=hook`` and drives it through
+three duck-typed entry points, keeping :mod:`repro.core.des` import-free of
+this package:
+
+* ``migration_workloads(platform)`` — the per-slow-tier MIGRATE
+  pseudo-workloads appended to the sim's workload list at construction
+  (kernel migration daemons: a few cores issuing page-copy traffic).
+* ``bind(sim)`` — resolve tier codes, build the PageMap/engine/policy,
+  apply the *initial* PageMap-derived routing, and gate the migration
+  workloads closed (no backlog yet).
+* ``on_window(sim)`` — once per control window, after the ControlLoop
+  fired: drain migration completions into page moves, feed demand
+  completions to the hotness tracker, run the policy, re-resolve each
+  tracked workload's live placement vector, and re-gate migration issue.
+
+:class:`TieringSpec` is the picklable description scenario builders put on a
+:class:`~repro.memsim.sweep.SimJob` (``tiering=``); the worker builds a
+fresh hook per simulation, exactly like MIKU controllers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.controller import TierDecisions
+from repro.core.des import TieredMemorySim, WorkloadSpec
+from repro.core.device_model import PlatformModel
+from repro.core.littles_law import OpClass
+from repro.tiering.engine import MigrationEngine
+from repro.tiering.pagemap import HotSetPattern, PageMap
+from repro.tiering.policies import PolicyContext, make_policy
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionSpec:
+    """One tracked workload's page region (initial placement + access
+    pattern).  ``workload`` names a demand workload in the same sim."""
+
+    workload: str
+    n_pages: int
+    placement: Dict[str, float]
+    pattern: HotSetPattern = HotSetPattern()
+
+
+@dataclasses.dataclass(frozen=True)
+class TieringSpec:
+    """Everything a worker needs to build a fresh tiering hook (picklable)."""
+
+    regions: Tuple[RegionSpec, ...]
+    policy: str = "hotness_lru"
+    policy_args: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: Fast-tier page budget shared by all regions.
+    fast_capacity_pages: int = 1024
+    page_bytes: int = 4096
+    hotness_decay: float = 0.5
+    #: The migration pseudo-workloads: cores per slow tier and per-core MLP
+    #: (how hard the copy engine races when it has backlog).
+    mig_cores: int = 4
+    mig_mlp: int = 64
+    #: False models a kernel migration daemon outside MIKU's reach (the
+    #: *naive* configuration); True makes migration a MIKU-governed request
+    #: class like any other slow-tier actor.
+    mig_miku_managed: bool = True
+
+    def build(self) -> "TieringHook":
+        return TieringHook(self)
+
+
+#: Migration pseudo-workload name prefix (one per slow tier).
+MIG_PREFIX = "mig-"
+
+
+class TieringHook:
+    """Per-simulation tiering state machine (see module docstring)."""
+
+    def __init__(self, spec: TieringSpec) -> None:
+        self.spec = spec
+        self.pagemap: Optional[PageMap] = None
+        self.window_log: List[dict] = []
+        self.deferred_jobs = 0
+        self._windows = 0
+        self._sim: Optional[TieredMemorySim] = None
+
+    # -- pre-construction --------------------------------------------------
+    def migration_workloads(
+        self, platform: PlatformModel
+    ) -> List[WorkloadSpec]:
+        return [
+            WorkloadSpec(
+                name=f"{MIG_PREFIX}{tier}",
+                op=OpClass.MIGRATE,
+                tier=tier,
+                n_cores=self.spec.mig_cores,
+                mlp=self.spec.mig_mlp,
+                miku_managed=self.spec.mig_miku_managed,
+            )
+            for tier in platform.tier_names[1:]
+        ]
+
+    # -- binding -----------------------------------------------------------
+    def bind(self, sim: TieredMemorySim) -> None:
+        spec = self.spec
+        self._sim = sim
+        names = sim.platform.tier_names
+        self.pagemap = PageMap(
+            names, spec.fast_capacity_pages, decay=spec.hotness_decay
+        )
+        wl_names = {w.name for w in sim.workloads}
+        for region in spec.regions:
+            if region.workload not in wl_names:
+                raise ValueError(
+                    f"tiering region tracks unknown workload "
+                    f"{region.workload!r}; sim workloads: "
+                    f"{', '.join(sorted(wl_names))}"
+                )
+            self.pagemap.add_region(
+                region.workload, region.n_pages, spec.page_bytes,
+                region.placement, region.pattern,
+            )
+        self.policy = make_policy(spec.policy, **spec.policy_args)
+        # One page's copy = page_bytes of traffic on its slow link, issued
+        # as MIGRATE macro-requests of (access_bytes x granularity) each.
+        g = sim.granularity
+        self.engine = MigrationEngine({
+            code: math.ceil(
+                spec.page_bytes
+                / (sim.platform.tiers[code].access_bytes * g)
+            )
+            for code in range(1, len(names))
+        })
+        wi_by_name = {w.name: i for i, w in enumerate(sim.workloads)}
+        self._region_wi = {
+            r.workload: wi_by_name[r.workload] for r in spec.regions
+        }
+        self._mig_wi: Dict[int, int] = {
+            code: wi_by_name[f"{MIG_PREFIX}{tier}"]
+            for code, tier in enumerate(names) if code > 0
+        }
+        # Gate migration issue closed until there is backlog (effective MLP
+        # 0 blocks the round-robin arbiter for those cores).
+        self._mig_effmlp = {
+            wi: sim._w_effmlp[wi] for wi in self._mig_wi.values()
+        }
+        for wi in self._mig_wi.values():
+            sim._w_effmlp[wi] = 0
+        self._stat_mark = list(sim._stat_completed)
+        self._apply_placements(sim)
+
+    # -- per-window pass ---------------------------------------------------
+    def on_window(self, sim: TieredMemorySim) -> bool:
+        assert self.pagemap is not None
+        self._windows += 1
+        completed = sim._stat_completed
+        deltas = [c - m for c, m in zip(completed, self._stat_mark)]
+        self._stat_mark = list(completed)
+
+        # 1. Completed MIGRATE traffic retires jobs and flips pages.
+        promoted = demoted = 0
+        mig_done: Dict[str, int] = {}
+        for code, wi in self._mig_wi.items():
+            if deltas[wi]:
+                mig_done[sim.platform.tier_names[code]] = deltas[wi]
+                p, d = self.engine.on_completions(code, deltas[wi],
+                                                  self.pagemap)
+                promoted += p
+                demoted += d
+
+        # 2. Demand completions are the sampled access stream feeding the
+        #    hotness tracker (station accounting, not offered load).
+        for name, wi in self._region_wi.items():
+            self.pagemap.record_window(name, deltas[wi])
+
+        # 3. Policy pass under the control plane's latest view.
+        ctx = PolicyContext(
+            window=self._windows,
+            tier_names=sim.platform.tier_names,
+            engine=self.engine,
+            decisions=self._latest_decisions(sim),
+            budgets=self._budgets(sim),
+        )
+        jobs = self.policy.decide(self.pagemap, ctx)
+        enqueued = self.engine.enqueue(jobs)
+        self.deferred_jobs += ctx.deferred
+
+        # 4. Placement re-resolution + migration issue gating.  ``changed``
+        # is the return contract: only a window that actually moved routing
+        # or re-opened migration issue makes the DES re-pump its issue path.
+        changed = self._apply_placements(sim)
+        for code, wi in self._mig_wi.items():
+            want = self._mig_effmlp[wi] if self.engine.pending_reqs(code) else 0
+            if sim._w_effmlp[wi] != want:
+                sim._w_effmlp[wi] = want
+                changed = True
+
+        self.window_log.append({
+            "window": self._windows,
+            "t_ns": sim.now,
+            "promoted": promoted,
+            "demoted": demoted,
+            "enqueued": enqueued,
+            "deferred": ctx.deferred,
+            "backlog_pages": self.engine.backlog_pages(),
+            "migrated_bytes": self.engine.migrated_bytes,
+            "mig_reqs_completed": mig_done,
+            "fast_fraction": {
+                name: self.pagemap.fast_fraction(name)
+                for name in self._region_wi
+            },
+        })
+        return changed
+
+    # -- control-plane views ----------------------------------------------
+    @staticmethod
+    def _latest_decisions(sim: TieredMemorySim) -> Optional[TierDecisions]:
+        ds = sim.control.decisions
+        if ds and isinstance(ds[-1], TierDecisions):
+            return ds[-1]
+        return None
+
+    @staticmethod
+    def _budgets(sim: TieredMemorySim) -> Optional[Dict[str, int]]:
+        budgets = getattr(sim.controller, "migration_budgets", None)
+        return budgets() if callable(budgets) else None
+
+    # -- routing -----------------------------------------------------------
+    def _apply_placements(self, sim: TieredMemorySim) -> bool:
+        """Write each tracked workload's live PageMap-derived routing vector
+        into the sim's issue tables (two-tier platforms stay on the
+        single-draw ``ddr_fraction`` fast path).  Returns whether any
+        routing entry actually changed (a static policy's steady state
+        changes nothing — no re-pump needed)."""
+        assert self.pagemap is not None
+        n = sim._n_tiers
+        changed = False
+        for name, wi in self._region_wi.items():
+            fr = self.pagemap.regions[name].tier_fractions()
+            if n == 2:
+                frac = float(fr[0])
+                if sim._w_frac[wi] != frac:
+                    sim._w_frac[wi] = frac
+                    sim._w_cum[wi] = None
+                    sim._w_placed_slow[wi] = ()
+                    sim._recompute_throttle(wi)
+                    changed = True
+            else:
+                acc = 0.0
+                cum = []
+                for f in fr:
+                    acc += float(f)
+                    cum.append(acc)
+                cum[-1] = float("inf")
+                cum = tuple(cum)
+                if sim._w_cum[wi] != cum:
+                    sim._w_frac[wi] = None
+                    sim._w_cum[wi] = cum
+                    sim._w_placed_slow[wi] = tuple(
+                        i for i in range(1, n) if fr[i] > 0.0
+                    )
+                    sim._recompute_throttle(wi)
+                    changed = True
+        return changed
+
+    # -- result surface ----------------------------------------------------
+    def summary(self) -> dict:
+        assert self.pagemap is not None
+        return {
+            **self.engine.counters(),
+            "policy": self.policy.name,
+            "windows": self._windows,
+            "deferred_jobs": self.deferred_jobs,
+            "fast_pages_used": self.pagemap.fast_pages_used(),
+            "occupancy": self.pagemap.occupancy(),
+            "fast_fraction": {
+                name: self.pagemap.fast_fraction(name)
+                for name in self._region_wi
+            },
+        }

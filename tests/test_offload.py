@@ -51,6 +51,27 @@ def test_cap_bounds_backlog_without_slowing_stream():
     assert d2 == pytest.approx(d1, rel=0.01)
 
 
+def test_unknown_slow_tier_is_a_loud_error():
+    """Regression: decision_for/slow_inflight/slow_backlog/submit used to
+    fall back silently (or KeyError) on unknown link names; they now raise
+    UnknownTierError naming the queue's links, like the DES does."""
+    from repro.core.device_model import UnknownTierError
+
+    q = TransferQueue()
+    with pytest.raises(UnknownTierError, match="slow"):
+        q.decision_for("warp_drive")
+    with pytest.raises(UnknownTierError):
+        q.slow_inflight("warp_drive")
+    with pytest.raises(UnknownTierError):
+        q.slow_backlog("warp_drive")
+    with pytest.raises(UnknownTierError):
+        q.submit_slow_stream(1 << 20, 4, tier="warp_drive")
+    # the valid names still work, including the tier=None backlog sum
+    q.submit_slow_stream(1 << 20, 4)
+    assert q.slow_backlog() >= 0
+    assert q.decision_for("slow") is q.decision
+
+
 def test_fast_penalty_rises_with_backlog():
     q = TransferQueue()
     assert q.fast_penalty() == 1.0

@@ -137,7 +137,44 @@ def test_merged_mode_counters_deprecated_and_equal_to_vector_fold():
     assert vector.delta().merged_slow().inserts == 0
 
 
-# -- merging algebra (hypothesis property) ------------------------------------
+# -- merging algebra ----------------------------------------------------------
+
+
+def _win(*counters, names=None):
+    names = names or tuple(f"t{i}" for i in range(len(counters)))
+    return TierWindow(tuple(counters), names)
+
+
+def test_tier_window_merge_identities():
+    """Empty-window merge is the identity; a single-tier window merges
+    element-wise; mismatched tier names are rejected loudly."""
+    a, b = TierCounters(), TierCounters()
+    a.record(OpClass.LOAD, 10.0)
+    a.record(OpClass.STORE, 20.0)
+    b.record(OpClass.NT_STORE, 5.0)
+
+    # empty-window identity (both orders)
+    win = _win(a, b, names=("ddr", "cxl"))
+    zero = TierWindow.zero(("ddr", "cxl"))
+    for merged in (win.merge(zero), zero.merge(win)):
+        assert merged.names == ("ddr", "cxl")
+        assert list(merged) == [a, b]
+
+    # single-tier identity: fold of one window with itself doubles counts
+    single = _win(a, names=("ddr",))
+    doubled = single.merge(single)
+    assert doubled[0].inserts == 2 * a.inserts
+    assert doubled[0].occupancy_time == pytest.approx(2 * a.occupancy_time)
+
+    # name mismatch (and therefore arity mismatch) is a loud error
+    with pytest.raises(ValueError, match="different tier sets"):
+        win.merge(_win(a, b, names=("ddr", "cxl_sw")))
+    with pytest.raises(ValueError, match="different tier sets"):
+        win.merge(_win(a, names=("ddr",)))
+
+    # merge_tier_counters identities: empty fold and singleton fold
+    assert merge_tier_counters([]) == TierCounters()
+    assert merge_tier_counters([a]) == a
 
 
 def test_merge_is_associative_and_matches_legacy_merged_delta():
@@ -167,6 +204,15 @@ def test_merge_is_associative_and_matches_legacy_merged_delta():
         assert folded.inserts == a.inserts + b.inserts + c.inserts
         assert folded.occupancy_time == pytest.approx(
             a.occupancy_time + b.occupancy_time + c.occupancy_time)
+        # TierWindow.merge: zero is the identity, and the element-wise fold
+        # commutes with merged_slow()
+        zero = TierWindow.zero(win.names)
+        assert list(win.merge(zero)) == list(win)
+        wa = TierWindow((a, b), ("f", "s"))
+        wb = TierWindow((b, c), ("f", "s"))
+        both = wa.merge(wb)
+        assert both.merged_slow().inserts == b.inserts + c.inserts
+        assert both.fast == merge_tier_counters([a, b])
 
     prop()
 

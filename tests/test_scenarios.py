@@ -26,7 +26,7 @@ from repro.core.device_model import (
     platform_a_numa,
     platform_a_switch,
 )
-from repro.core.littles_law import OpClass
+from repro.core.littles_law import DEMAND_CLASSES, OpClass
 from repro.memsim.sweep import SimJob, run_sweep
 from repro.memsim.workloads import alternating_bw_pair, bw_test, lat_test
 from repro.scenarios import (
@@ -89,7 +89,7 @@ def test_fig3_plan_matches_legacy_matrix():
     got = [j for _, _, jobs in planned for j in jobs]
     legacy = [
         _legacy_job(P, [bw_test(tier, op, n)], 120_000.0)
-        for op in OpClass
+        for op in DEMAND_CLASSES
         for n in (1, 16)
         for tier in ("ddr", "cxl")
     ]
@@ -112,7 +112,7 @@ def test_fig5_plan_matches_legacy_matrix():
     planned = plan("fig5_corun", {"platform": "A"})
     got = [j for _, _, jobs in planned for j in jobs]
     legacy = []
-    for op in OpClass:
+    for op in DEMAND_CLASSES:
         a = bw_test("ddr", op, 16, name="ddr", miku_managed=False)
         c = bw_test("cxl", op, 16, name="cxl")
         legacy.append(_legacy_job(P, [a], 120_000.0))

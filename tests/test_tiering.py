@@ -1,0 +1,455 @@
+"""repro.tiering — PageMap, MigrationEngine, policies, DES hook, scenarios.
+
+Five contracts:
+
+1. **PageMap units** — placement validation, circular hot-set weights,
+   decayed hotness, access-weighted tier fractions.
+2. **MigrationEngine units** — FIFO completion credit, dedup, page flips
+   only when the copy traffic has actually completed.
+3. **Policy laws** — hotness_lru promotes hottest-first within fast
+   capacity and demotes coldest-first over the watermark;
+   miku_coordinated defers against the ladders' migration budgets.
+4. **DES integration** — migration traffic is real ``OpClass.MIGRATE``
+   station traffic (visible in TierWindow class counts), placement
+   re-resolves from the live PageMap, and a sim without a hook carries no
+   migration workloads (the fast path stays pinned by tests/test_substrate).
+5. **Scenario acceptance + golden traces** — ``migrate_interference``
+   reproduces the recorded decision/telemetry sequences
+   (tests/data/migrate_trace_goldens.json) and the headline result: naive
+   migration degrades DDR, MIKU coordination recovers it.
+"""
+
+import json
+import os
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.controller import (
+    Decision,
+    Phase,
+    TierDecisions,
+)
+from repro.core.des import TieredMemorySim, WorkloadSpec
+from repro.core.device_model import platform_a, platform_a_switch
+from repro.core.littles_law import DEMAND_CLASSES, OpClass
+from repro.memsim.calibration import default_miku
+from repro.tiering import (
+    HotSetPattern,
+    MigrationEngine,
+    MigrationJob,
+    PageMap,
+    PolicyContext,
+    RegionSpec,
+    TieringSpec,
+    make_policy,
+)
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+P = platform_a()
+P3 = platform_a_switch()
+
+
+# -- PageMap ------------------------------------------------------------------
+
+
+def _pagemap(n_pages=64, fast_cap=16, placement=None, pattern=None):
+    pm = PageMap(("ddr", "cxl"), fast_capacity_pages=fast_cap)
+    pm.add_region("app", n_pages, 4096,
+                  placement or {"cxl": 1.0}, pattern or HotSetPattern())
+    return pm
+
+
+def test_pagemap_rejects_bad_placement_and_duplicates():
+    pm = PageMap(("ddr", "cxl"), 16)
+    with pytest.raises(ValueError, match="unknown tier"):
+        pm.add_region("a", 8, 4096, {"nope": 1.0})
+    with pytest.raises(ValueError, match="sum to"):
+        pm.add_region("a", 8, 4096, {"cxl": 0.5})
+    pm.add_region("a", 8, 4096, {"cxl": 1.0})
+    with pytest.raises(ValueError, match="duplicate region"):
+        pm.add_region("a", 8, 4096, {"cxl": 1.0})
+
+
+def test_hot_set_pattern_validation():
+    with pytest.raises(ValueError, match="hot_fraction"):
+        HotSetPattern(hot_fraction=0.0)
+    with pytest.raises(ValueError, match="hot_weight"):
+        HotSetPattern(hot_weight=1.5)
+
+
+def test_access_weights_sum_to_one_and_drift_is_circular():
+    pat = HotSetPattern(hot_fraction=0.25, hot_weight=0.8, drift_pages=60.0)
+    pm = _pagemap(n_pages=64, pattern=pat)
+    region = pm.regions["app"]
+    w = region.access_weights()
+    assert w.sum() == pytest.approx(1.0)
+    hot = np.flatnonzero(w > w.min())
+    assert len(hot) == 16 and set(hot) == set(range(16))
+    region.record_window(100.0, decay=0.5)  # drifts by 60
+    w2 = region.access_weights()
+    hot2 = set(np.flatnonzero(w2 > w2.min()))
+    assert hot2 == {(60 + i) % 64 for i in range(16)}  # wrapped
+
+
+def test_hotness_decays_and_tracks_throughput():
+    pm = _pagemap(pattern=HotSetPattern(hot_fraction=0.25, hot_weight=0.8))
+    region = pm.regions["app"]
+    pm.record_window("app", 1000.0)
+    h1 = region.hotness.sum()
+    assert h1 == pytest.approx(1000.0)
+    pm.record_window("app", 0.0)  # idle window: pure decay
+    assert region.hotness.sum() == pytest.approx(500.0)
+
+
+def test_tier_fractions_follow_moves():
+    pm = _pagemap(n_pages=10, placement={"ddr": 0.5, "cxl": 0.5},
+                  pattern=HotSetPattern(hot_fraction=1.0))  # uniform
+    assert pm.fast_fraction("app") == pytest.approx(0.5)
+    pm.move("app", 9, 0)
+    assert pm.fast_fraction("app") == pytest.approx(0.6)
+    assert pm.fast_pages_used() == 6
+    assert pm.occupancy() == {"ddr": 6, "cxl": 4}
+
+
+# -- MigrationEngine ----------------------------------------------------------
+
+
+def test_engine_flips_pages_only_when_copy_traffic_completes():
+    pm = _pagemap(n_pages=8)
+    eng = MigrationEngine({1: 4})  # 4 MIGRATE reqs per page on tier 1
+    jobs = [MigrationJob("app", p, src=1, dst=0) for p in (0, 1)]
+    assert eng.enqueue(jobs) == 2
+    assert eng.enqueue(jobs) == 0  # dedup: already queued
+    assert eng.pending_reqs(1) == 8
+    assert eng.on_completions(1, 3, pm) == (0, 0)  # not yet paid
+    assert pm.regions["app"].tier[0] == 1
+    assert eng.on_completions(1, 1, pm) == (1, 0)  # page 0 flips, FIFO
+    assert pm.regions["app"].tier[0] == 0 and pm.regions["app"].tier[1] == 1
+    assert eng.on_completions(1, 10, pm) == (1, 0)  # page 1 + surplus credit
+    assert eng.pending_reqs(1) == 0 and eng.backlog_pages() == 0
+    assert eng.migrated_bytes == 2 * 4096
+    # demotions count separately
+    eng.enqueue([MigrationJob("app", 0, src=0, dst=1)])
+    assert eng.on_completions(1, 4, pm) == (0, 1)
+    assert eng.pages_promoted == 2 and eng.pages_demoted == 1
+
+
+def test_engine_rejects_unknown_traffic_tier():
+    eng = MigrationEngine({1: 4})
+    with pytest.raises(KeyError, match="slow tier code 2"):
+        eng.enqueue([MigrationJob("app", 0, src=2, dst=0)])
+
+
+def test_migration_job_traffic_tier_is_the_slow_side():
+    assert MigrationJob("a", 0, src=2, dst=0).traffic_tier == 2  # promotion
+    assert MigrationJob("a", 0, src=0, dst=1).traffic_tier == 1  # demotion
+    assert MigrationJob("a", 0, src=2, dst=0).is_promotion
+
+
+# -- policies -----------------------------------------------------------------
+
+
+def _ctx(engine, names=("ddr", "cxl"), decisions=None, budgets=None):
+    return PolicyContext(window=1, tier_names=names, engine=engine,
+                         decisions=decisions, budgets=budgets)
+
+
+def test_unknown_policy_is_a_loud_error():
+    with pytest.raises(ValueError, match="registered policies"):
+        make_policy("nope")
+
+
+def test_static_policy_never_migrates():
+    pm = _pagemap()
+    pm.record_window("app", 1000.0)
+    assert make_policy("static").decide(pm, _ctx(MigrationEngine({1: 4}))) == []
+
+
+def test_hotness_lru_promotes_hottest_within_capacity():
+    pm = _pagemap(n_pages=64, fast_cap=4,
+                  pattern=HotSetPattern(hot_fraction=0.125, hot_weight=0.9))
+    pm.record_window("app", 1000.0)
+    eng = MigrationEngine({1: 4})
+    jobs = make_policy("hotness_lru", promote_per_window=32).decide(
+        pm, _ctx(eng))
+    assert len(jobs) == 4  # fast capacity bounds promotion
+    assert all(j.is_promotion for j in jobs)
+    hot_pages = set(np.argsort(pm.regions["app"].hotness)[-8:])
+    assert {j.page for j in jobs} <= hot_pages
+
+
+def test_hotness_lru_demotes_coldest_over_watermark():
+    pm = _pagemap(n_pages=32, fast_cap=8,
+                  placement={"ddr": 0.5, "cxl": 0.5},
+                  pattern=HotSetPattern(hot_fraction=0.25, hot_weight=0.9))
+    # 16 fast pages against an 8-page budget: well over the high watermark.
+    pm.record_window("app", 1000.0)
+    eng = MigrationEngine({1: 4})
+    policy = make_policy("hotness_lru", promote_per_window=0,
+                         high_watermark=0.9, low_watermark=0.75)
+    jobs = policy.decide(pm, _ctx(eng))
+    demotions = [j for j in jobs if not j.is_promotion]
+    assert demotions and all(j.dst == 1 for j in demotions)
+    region = pm.regions["app"]
+    coldest = region.hotness[region.pages_on(0)].min()
+    assert any(region.hotness[j.page] == coldest for j in demotions)
+
+
+def test_demotion_projects_in_flight_copies_no_overshoot():
+    """Regression: while demotion copies are pending, the watermark logic
+    must not re-demote for the same occupancy gap every window (it used to
+    enqueue the gap repeatedly and land far below the low watermark)."""
+    pm = PageMap(("ddr", "cxl"), fast_capacity_pages=100)
+    pm.add_region("app", 200, 4096, {"ddr": 0.5, "cxl": 0.5},
+                  HotSetPattern(hot_fraction=1.0))
+    pm.record_window("app", 1000.0)
+    eng = MigrationEngine({1: 10})  # copies span several windows
+    policy = make_policy("hotness_lru", promote_per_window=0,
+                         high_watermark=0.95, low_watermark=0.85)
+    total = 0
+    for _ in range(4):
+        jobs = policy.decide(pm, _ctx(eng))
+        eng.enqueue(jobs)
+        total += len(jobs)
+    assert total == 15  # one batch for the 100->85 gap, not 4x
+    eng.on_completions(1, 10_000, pm)
+    assert pm.fast_pages_used() == 85  # lands on the low watermark
+
+
+def test_pagemap_rounding_never_truncates_counts():
+    """Regression: per-tier int(round()) counts could sum past n_pages and
+    silently truncate the last run; cumulative boundaries always assign
+    exactly n_pages."""
+    pm = PageMap(("ddr", "cxl"), 16)
+    r = pm.add_region("a", 15, 4096, {"ddr": 0.5, "cxl": 0.5})
+    assert r.resident_pages(0) + r.resident_pages(1) == 15
+    assert abs(r.resident_pages(0) - 7.5) <= 0.5
+    pm3 = PageMap(("ddr", "cxl", "cxl_sw"), 16)
+    r3 = pm3.add_region("a", 2, 4096,
+                        {"ddr": 0.5, "cxl": 0.25, "cxl_sw": 0.25})
+    assert sum(r3.resident_pages(c) for c in range(3)) == 2
+    assert r3.resident_pages(0) == 1  # half the region really stays fast
+
+
+def test_miku_coordinated_defers_on_zero_budget_and_restriction():
+    pm = _pagemap(n_pages=64, fast_cap=32)
+    pm.record_window("app", 1000.0)
+    eng = MigrationEngine({1: 16})
+    policy = make_policy("miku_coordinated", promote_per_window=8)
+
+    ctx = _ctx(eng, budgets={"cxl": 0})
+    assert policy.decide(pm, ctx) == [] and ctx.deferred == 8
+
+    ctx = _ctx(eng, budgets={"cxl": 2})  # 2 * jobs_per_budget_unit allowed
+    assert len(policy.decide(pm, ctx)) == 8 and ctx.deferred == 0
+
+    restricted = TierDecisions(
+        tiers=("cxl",),
+        decisions=(Decision(max_concurrency=1, rate_factor=0.5,
+                            phase=Phase.RESTRICTED),),
+    )
+    ctx = _ctx(eng, decisions=restricted)  # no budgets: coarse fallback
+    assert policy.decide(pm, ctx) == [] and ctx.deferred == 8
+
+
+def test_miku_ladder_migration_budget_follows_state():
+    ctl = default_miku(P)
+    unit = ctl.units[0]
+    cap = unit.config.class_caps[OpClass.MIGRATE]
+    assert unit.migration_budget() == cap  # unrestricted: the class cap
+    unit._demote_fully()
+    assert unit.migration_budget() == min(cap, unit.config.levels[0])
+    unit._rate = 0.5  # fine-grained rate control: stand down
+    assert unit.migration_budget() == 0
+    assert ctl.migration_budgets() == {unit.tier: 0}
+
+
+# -- DES integration ----------------------------------------------------------
+
+
+def _spec(policy="hotness_lru", **kw):
+    defaults = dict(
+        regions=(RegionSpec(
+            workload="app", n_pages=256, placement={"cxl": 1.0},
+            pattern=HotSetPattern(hot_fraction=0.25, hot_weight=0.9),
+        ),),
+        policy=policy,
+        fast_capacity_pages=128,
+    )
+    defaults.update(kw)
+    return TieringSpec(**defaults)
+
+
+def _app(n_cores=8):
+    return WorkloadSpec(name="app", op=OpClass.LOAD, tier="cxl",
+                        n_cores=n_cores)
+
+
+def test_no_hook_means_no_migration_workloads_and_no_summary():
+    sim = TieredMemorySim(P, [_app()], seed=0)
+    assert [w.name for w in sim.workloads] == ["app"]
+    assert sim.run(30_000.0).tiering is None
+
+
+def test_hook_tracks_unknown_workload_loudly():
+    spec = _spec(regions=(RegionSpec(workload="ghost", n_pages=8,
+                                     placement={"cxl": 1.0}),))
+    with pytest.raises(ValueError, match="unknown workload"):
+        TieredMemorySim(P, [_app()], seed=0, tiering=spec.build())
+
+
+def test_migrate_traffic_is_real_station_traffic_and_placement_follows():
+    sim = TieredMemorySim(P, [_app()], seed=0, tiering=_spec().build())
+    assert [w.name for w in sim.workloads] == ["app", "mig-cxl"]
+    res = sim.run(200_000.0)
+    t = res.tiering
+    assert t["pages_promoted"] > 0
+    assert res.bandwidth("mig-cxl") > 0  # copies cost modeled bandwidth
+    # MIGRATE retires are classed per tier in the uncore-style counters.
+    assert res.tier_counters["cxl"].class_counts[OpClass.MIGRATE] > 0
+    assert res.tier_counters["ddr"].class_counts[OpClass.MIGRATE] == 0
+    # the app's live routing follows the PageMap: most accesses now fast
+    assert t["fast_fraction"]["app"] > 0.8
+    assert t["fast_pages_used"] <= 128  # capacity respected
+    # ... and it beats the frozen placement
+    static = TieredMemorySim(P, [_app()], seed=0,
+                             tiering=_spec("static").build())
+    res_static = static.run(200_000.0)
+    assert res_static.tiering["pages_promoted"] == 0
+    assert res.bandwidth("app") > 1.5 * res_static.bandwidth("app")
+
+
+def test_hook_on_three_tier_platform_routes_with_cum_vectors():
+    spec = _spec(regions=(RegionSpec(
+        workload="app", n_pages=256,
+        placement={"cxl": 0.5, "cxl_sw": 0.5},
+        pattern=HotSetPattern(hot_fraction=0.25, hot_weight=0.9),
+    ),))
+    sim = TieredMemorySim(P3, [_app()], seed=0, tiering=spec.build())
+    assert [w.name for w in sim.workloads] == ["app", "mig-cxl", "mig-cxl_sw"]
+    res = sim.run(150_000.0)
+    assert res.tiering["pages_promoted"] > 0
+    assert res.tiering["fast_fraction"]["app"] > 0.5
+
+
+def test_window_records_carry_migration_counters_without_controller():
+    sim = TieredMemorySim(P, [_app()], seed=0, tiering=_spec().build(),
+                          record_windows=True)
+    res = sim.run(60_000.0)
+    assert res.window_records, "hook-only telemetry must still be recorded"
+    for rec in res.window_records:
+        tiering = rec["tiering"]
+        assert {"promoted", "demoted", "enqueued", "deferred",
+                "backlog_pages", "migrated_bytes"} <= set(tiering)
+
+
+# -- scenario acceptance + golden traces --------------------------------------
+
+
+@pytest.fixture(scope="module")
+def migrate_run():
+    from repro.scenarios import run_scenario
+
+    with open(os.path.join(DATA, "migrate_trace_goldens.json")) as f:
+        golden = json.load(f)
+    table = run_scenario("migrate_interference", golden["overrides"],
+                         trace=True)
+    return golden, table
+
+
+def test_migrate_interference_headline(migrate_run):
+    """Naive migration degrades DDR under load; MIKU coordination recovers
+    it to within a few percent of the demand-only co-run."""
+    _, table = migrate_run
+    rows = {r["variant"]: r for r in table.rows}
+    assert rows["naive"]["ddr_pct_of_demand_only"] < 90.0
+    assert rows["miku"]["ddr_pct_of_demand_only"] > 97.0
+    assert rows["miku"]["pages_promoted"] > 0  # coordination still migrates
+    assert rows["miku"]["deferred_jobs"] > 0  # ... and actually deferred
+    assert rows["naive"]["mig_gbps"] > rows["miku"]["mig_gbps"]
+
+
+def test_migrate_interference_matches_golden_traces(migrate_run):
+    golden, table = migrate_run
+    jobs = table.traces[0]["jobs"]
+    for variant, blob in golden["variants"].items():
+        windows = jobs[blob["job"]]["windows"]
+        assert len(windows) == len(blob["windows"])
+        for got, want in zip(windows, blob["windows"]):
+            gd = got.get("decision", {}).get("cxl")
+            wd = want["decision"]
+            if wd is None:
+                assert gd is None, got["window"]
+            else:
+                assert gd["max_concurrency"] == wd["max_concurrency"]
+                assert gd["rate_factor"] == wd["rate_factor"]
+                assert gd["phase"] == wd["phase"]
+            for k, v in want["tiering"].items():
+                assert got["tiering"][k] == v, (variant, got["window"], k)
+    for variant, want in golden["rows"].items():
+        row = next(r for r in table.rows if r["variant"] == variant)
+        assert row["ddr_pct_of_demand_only"] == pytest.approx(
+            want["ddr_pct_of_demand_only"])
+        assert row["pages_promoted"] == want["pages_promoted"]
+        assert row["pages_demoted"] == want["pages_demoted"]
+        assert row["deferred_jobs"] == want["deferred_jobs"]
+
+
+def test_migrate_trace_windows_expose_migrate_class(migrate_run):
+    """Acceptance: per-window migration counters present in the trace JSON,
+    and MIGRATE visible in the per-tier class counts MIKU consumes."""
+    _, table = migrate_run
+    windows = table.traces[0]["jobs"][2]["windows"]
+    assert any(w["tiers"]["cxl"]["class_counts"]["migrate"] > 0
+               for w in windows)
+    assert all("tiering" in w for w in windows)
+
+
+def test_tiering_policies_scenario_hotness_beats_static():
+    from repro.scenarios import run_scenario
+
+    table = run_scenario("tiering_policies", {"platform": ("A",)})
+    rows = {r["policy"]: r for r in table.rows}
+    assert rows["hotness_lru"]["app_gbps"] > 1.3 * rows["static"]["app_gbps"]
+    assert rows["hotness_lru"]["app_fast_fraction"] > 0.5
+    assert rows["static"]["pages_promoted"] == 0
+    assert rows["hotness_lru"]["migrated_gb"] > 0
+
+
+# -- serving engine: PageMap-driven KV offload split ---------------------------
+
+
+def test_kv_tier_bytes_follows_pagemap():
+    from repro.serving.engine import ServingEngine
+
+    pm = PageMap(("hbm", "host"), fast_capacity_pages=8)
+    pm.add_region("eng", 10, 4096, {"hbm": 0.5, "host": 0.5},
+                  HotSetPattern(hot_fraction=1.0))  # uniform access
+    stub = SimpleNamespace(kv_pagemap=pm,
+                           cfg=SimpleNamespace(name="eng", placement="host"),
+                           n_active=4)
+    fast, slow = ServingEngine.kv_tier_bytes(stub, 1000)
+    assert fast == 500 and slow == 500
+    pm.move("eng", 9, 0)  # promote one KV page
+    fast, slow = ServingEngine.kv_tier_bytes(stub, 1000)
+    assert fast == 600 and slow == 400
+    # without a pagemap the static placement decides, bit-for-bit
+    stub_static = SimpleNamespace(
+        kv_pagemap=None, cfg=SimpleNamespace(name="eng", placement="host"),
+        n_active=4)
+    assert ServingEngine.kv_tier_bytes(stub_static, 1000) == (0, 1000)
+    stub_static.cfg.placement = "device"
+    assert ServingEngine.kv_tier_bytes(stub_static, 1000) == (1000, 0)
+
+
+# -- MIGRATE class plumbing ----------------------------------------------------
+
+
+def test_migrate_class_excluded_from_demand_grids():
+    assert OpClass.MIGRATE not in DEMAND_CLASSES
+    from repro.scenarios import get
+
+    for name in ("fig3_bandwidth", "fig5_corun"):
+        assert OpClass.MIGRATE not in get(name).axis("op").default
