@@ -5,7 +5,11 @@ both the current DES and the pinned seed snapshot
 (``benchmarks/_seed_des_baseline.py``), alternating reps so container CPU
 throttling hits both sides equally, and verifies the Fig. 3/5 bandwidths
 against the recorded seed goldens (they are bit-identical by construction;
-1% is the gate).  Emits ``BENCH_des.json`` at the repo root.
+1% is the gate).  Also runs the sweep-scale lane A/B: the 96-cell
+``corun_sweep`` grid on the scalar process pool vs the batched lane
+(``repro.memsim.batched``; ≥5x is the acceptance bar, with the cross-lane
+bandwidth deviation recorded alongside).  Emits ``BENCH_des.json`` at the
+repo root.
 
 Usage:  PYTHONPATH=src python benchmarks/bench_des.py [--reps N] [--out PATH]
 """
@@ -88,6 +92,49 @@ def check_goldens() -> dict:
     }
 
 
+def bench_sweep_lanes() -> dict:
+    """Sweep-scale lane A/B: the 96-cell ``corun_sweep`` grid, scalar
+    process pool vs the batched lane (``repro.memsim.batched``).
+
+    The batched side runs twice and keeps the warm time (first call pays
+    numpy/ladder setup); the scalar side runs once through the pool the
+    ``--jobs`` path would use.  Also records the worst per-cell bandwidth
+    deviation between the lanes — the speedup is only meaningful while the
+    lanes agree."""
+    import os as _os
+
+    from repro.memsim.sweep import run_sweep
+    from repro.scenarios import plan
+
+    jobs = [j for _, _, js in plan("corun_sweep") for j in js]
+    procs = max(2, min(8, _os.cpu_count() or 1))
+    t0 = time.perf_counter()
+    batched = run_sweep(jobs, lane="batched")
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_sweep(jobs, lane="batched")
+    t_batched = min(t_cold, time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    scalar = run_sweep(jobs, processes=procs, lane="scalar")
+    t_scalar = time.perf_counter() - t0
+    errs = []
+    for s, b in zip(scalar, batched):
+        for w in ("ddr", "cxl"):
+            errs.append(abs(b.bandwidth(w) - s.bandwidth(w))
+                        / max(s.bandwidth(w), 1e-9))
+    return {
+        "sweep_scenario": "corun_sweep",
+        "sweep_cells": len(jobs),
+        "scalar_pool_procs": procs,
+        "scalar_pool_wall_s": round(t_scalar, 3),
+        "batched_wall_s": round(t_batched, 3),
+        "batched_speedup": round(t_scalar / max(t_batched, 1e-9), 1),
+        "batched_speedup_ge_5x": t_scalar / max(t_batched, 1e-9) >= 5.0,
+        "lane_worst_rel_err": round(max(errs), 4),
+        "lane_mean_rel_err": round(sum(errs) / len(errs), 4),
+    }
+
+
 def check_fast_path_overhead(out: dict, snapshot_path: str) -> dict:
     """Two-tier fast-path overhead gate for the per-tier contract.
 
@@ -126,10 +173,14 @@ def main() -> None:
         return
     out = {"bench": "des_fast_path", **bench_ab(args.reps), **check_goldens()}
     out.update(check_fast_path_overhead(out, snapshot))
+    out["sweep_lanes"] = bench_sweep_lanes()
     print(json.dumps(out, indent=2))
     if out["speedup_vs_seed"] < 2.0:
         print("WARNING: speedup below the 2x acceptance bar "
               "(noisy machine, or a fast-path regression)")
+    if not out["sweep_lanes"]["batched_speedup_ge_5x"]:
+        print("WARNING: batched lane below the 5x acceptance bar vs the "
+              "scalar pool (noisy machine, or a batched-lane regression)")
     # Gate BEFORE writing: a failing run must not replace the snapshot it
     # was compared against (the baseline would self-ratchet downward).
     assert out["fast_path_within_5pct"], (

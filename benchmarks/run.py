@@ -68,18 +68,21 @@ def _run_module(name: str) -> list:
 
 
 def _fmt_default(v) -> str:
-    import enum
+    from repro.scenarios.spec import format_default
 
-    if isinstance(v, enum.Enum):
-        return str(v.value)
-    if isinstance(v, (tuple, list)):
-        return ",".join(_fmt_default(x) for x in v)
-    return str(v)
+    return format_default(v)
 
 
-def _list_scenarios() -> None:
+def _list_scenarios(fmt: str = "csv") -> None:
     from repro.scenarios import all_scenarios
 
+    if fmt == "md":
+        # The generated docs/scenarios.md payload (CI regenerates the file
+        # from this output and fails on diff — keep it deterministic).
+        from repro.scenarios.catalog import catalog_md
+
+        print(catalog_md(), end="")
+        return
     for sc in all_scenarios():
         grid = []
         for a in sc.axes:
@@ -95,7 +98,7 @@ def _list_scenarios() -> None:
 
 
 def _run_scenario(name: str, set_args: list, fmt: str, jobs: int,
-                  trace: str = "") -> None:
+                  trace: str = "", lane: str = "") -> None:
     import json
 
     from repro.scenarios import get, parse_set_args, run_scenario
@@ -103,7 +106,10 @@ def _run_scenario(name: str, set_args: list, fmt: str, jobs: int,
     sc = get(name)
     overrides = parse_set_args(sc, set_args)
     table = run_scenario(sc, overrides, processes=jobs if jobs > 1 else None,
-                         trace=bool(trace))
+                         trace=bool(trace), lane=lane or None)
+    if lane:
+        # Lane routing summary on stderr so csv/json stdout stays clean.
+        print(f"lane: {json.dumps(table.meta)}", file=sys.stderr)
     if fmt == "json":
         out = table.to_json()
     else:
@@ -150,25 +156,37 @@ def main() -> None:
                     dest="set_args",
                     help="override a scenario axis (repeatable; comma "
                          "lists make grids)")
-    ap.add_argument("--format", choices=("csv", "json"), default="csv",
-                    help="scenario result-table format")
+    ap.add_argument("--format", choices=("csv", "json", "md"), default="csv",
+                    help="scenario result-table format (md: with --list, "
+                         "the generated docs/scenarios.md catalog)")
     ap.add_argument("--trace", default="", metavar="NAME",
                     help="with --scenario: record per-window per-tier "
                          "decision telemetry; write NAME.csv/.json and "
                          "NAME.trace.json")
+    ap.add_argument("--lane", choices=("scalar", "batched"), default="",
+                    help="with --scenario: sweep execution lane (batched = "
+                         "vectorized repro.memsim.batched; inexpressible "
+                         "jobs fall back to the scalar DES)")
     args = ap.parse_args()
 
     if args.list_scenarios:
-        _list_scenarios()
+        if args.format == "json":
+            ap.error("--list supports --format md (markdown catalog) or "
+                     "the default text listing")
+        _list_scenarios(args.format)
         return
+    if args.format == "md":
+        ap.error("--format md is only valid with --list")
     if args.scenario:
         _run_scenario(args.scenario, args.set_args, args.format, args.jobs,
-                      args.trace)
+                      args.trace, args.lane)
         return
     if args.set_args:
         ap.error("--set requires --scenario")
     if args.trace:
         ap.error("--trace requires --scenario")
+    if args.lane:
+        ap.error("--lane requires --scenario")
 
     from benchmarks.common import emit
 

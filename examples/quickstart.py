@@ -79,6 +79,13 @@ def main() -> None:
 
     scenarios()
 
+    print(
+        "\ndocs: docs/scenarios.md (generated scenario catalog) · "
+        "docs/telemetry.md (--trace schema) · "
+        "docs/decision-laws.md (control-plane + batched-lane contracts) · "
+        "examples/README.md (demo index)"
+    )
+
 
 if __name__ == "__main__":
     main()

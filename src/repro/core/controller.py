@@ -55,6 +55,7 @@ import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.littles_law import (
+    ACCESS_MIX,
     EstimatorConfig,
     LittlesLawEstimator,
     OpClass,
@@ -152,9 +153,11 @@ class TierDecisions:
             )
 
     def for_tier(self, tier: str) -> Decision:
+        """The named slow tier's :class:`Decision` (ValueError if absent)."""
         return self.decisions[self.tiers.index(tier)]
 
     def items(self) -> Tuple[Tuple[str, Decision], ...]:
+        """``(tier_name, Decision)`` pairs in platform slow-tier order."""
         return tuple(zip(self.tiers, self.decisions))
 
     # -- merged (most-restrictive) legacy view ----------------------------
@@ -245,6 +248,9 @@ class SlowTierMiku:
         fast_delta: TierCounters,
         slow_delta: TierCounters,
     ) -> Decision:
+        """One estimation window: update the estimator with the
+        ``(fast, this-tier)`` counter deltas, advance the ladder state
+        machine, and return this tier's :class:`Decision`."""
         cfg = self.config
         est = self.estimator.update(fast_delta, slow_delta)
         slow_classes = [c for c, n in slow_delta.class_counts.items() if n > 0]
@@ -311,6 +317,7 @@ class SlowTierMiku:
         )
 
     def reset(self) -> None:
+        """Forget all ladder and estimator state (back to unrestricted)."""
         self.phase = Phase.UNRESTRICTED
         self._level_idx = len(self.config.levels) - 1
         self._rate = 1.0
@@ -477,6 +484,7 @@ class MikuController:
         return {u.tier: u.migration_budget() for u in self.units}
 
     def reset(self) -> None:
+        """Reset every per-tier unit and clear the decision history."""
         for unit in self.units:
             unit.reset()
         self.decisions.clear()
@@ -519,6 +527,252 @@ class MergedSlowPolicy:
         if hasattr(self.law, "reset"):
             self.law.reset()
         self.decisions.clear()
+
+
+class VectorMikuLadder:
+    """The MIKU decision law over ``(n_cells, n_units)`` state arrays.
+
+    One window step for a whole sweep grid at once: every (cell, slow-tier)
+    pair carries its own estimator EWMA, ladder level, rate and promotion
+    state, and :meth:`window` advances all of them with numpy masks — the
+    vectorized twin of driving one :class:`SlowTierMiku` per cell per tier.
+    The state machine is *identical* to the scalar unit (same Eq.-1
+    estimator, detection, hierarchical throttling, draining hysteresis and
+    work-conserving promotion), so feeding both the same per-window counter
+    sequences produces the same decision sequences
+    (``tests/test_batched.py`` pins this with randomized traces).
+
+    Built from per-(cell, unit) :class:`SlowTierMiku` instances via
+    :meth:`from_units` — the batched sweep lane constructs those through the
+    ordinary calibration factories
+    (:func:`repro.memsim.calibration.default_miku` /
+    :func:`~repro.memsim.calibration.merged_miku`), so calibration can never
+    drift between lanes.  All ladders in one batch must share the same rung
+    sequence (:class:`MikuConfig.levels`); heterogeneous-ladder jobs belong
+    on the scalar lane.
+    """
+
+    def __init__(self, cells: int, units: int, levels: Sequence[int]):
+        import numpy as np
+
+        self._np = np
+        self.cells = cells
+        self.units = units
+        self.levels_arr = np.asarray(levels, dtype=np.float64)
+        self.n_levels = len(levels)
+        shape = (cells, units)
+        n_ops = len(OpClass)
+        # Per-unit calibration (filled by from_units).
+        self.t_fast = np.zeros(shape)
+        self.slow_read_threshold = np.zeros(shape)
+        self.write_scale = np.full(shape, 2.0)
+        self.ewma_a = np.full(shape, 0.5)
+        self.alpha_calm = np.full(shape, 0.97)
+        self.min_window_inserts = np.full(shape, 16.0)
+        self.min_slow_inserts = np.full(shape, 4.0)
+        self.t_fast_scale = np.ones(shape + (n_ops,))
+        self.class_caps = np.ones(shape + (n_ops,))
+        self.min_rate = np.full(shape, 0.1)
+        self.rate_backoff = np.full(shape, 0.5)
+        self.rate_recover = np.full(shape, 2.0)
+        self.patience = np.full(shape, 1.0)
+        self.target_margin = np.full(shape, 0.85)
+        self.drain_factor = np.full(shape, 0.9)
+        self.fast_idle_alpha = np.full(shape, 0.02)
+        # ACCESS_MIX weights, (n_ops,) each, in OpClass declaration order.
+        ops = tuple(OpClass)
+        self.mix_reads = np.asarray([ACCESS_MIX[c][0] for c in ops], float)
+        self.mix_writes = np.asarray([ACCESS_MIX[c][1] for c in ops], float)
+        self.reset()
+
+    def reset(self) -> None:
+        """Reset every (cell, unit) ladder/estimator to the initial state."""
+        np = self._np
+        shape = (self.cells, self.units)
+        self.level = np.full(shape, self.n_levels - 1, dtype=np.int64)
+        self.rate = np.ones(shape)
+        self.calm = np.zeros(shape, dtype=np.int64)
+        self.restricted = np.zeros(shape, dtype=bool)
+        self.prev_raw = np.zeros(shape)
+        self.has_prev = np.zeros(shape, dtype=bool)
+        self.t_slow = np.zeros(shape)
+        self.has_ewma = np.zeros(shape, dtype=bool)
+
+    @classmethod
+    def from_units(
+        cls, unit_grid: Sequence[Sequence[Optional[SlowTierMiku]]]
+    ) -> "VectorMikuLadder":
+        """Stack per-cell lists of :class:`SlowTierMiku` (None pads inactive
+        slots) into one vector ladder; every real unit must share the rung
+        sequence."""
+        import numpy as np
+
+        cells = len(unit_grid)
+        units = max((len(row) for row in unit_grid), default=0) or 1
+        levels: Optional[Tuple[int, ...]] = None
+        for row in unit_grid:
+            for u in row:
+                if u is None:
+                    continue
+                lv = tuple(u.config.levels)
+                if levels is None:
+                    levels = lv
+                elif lv != levels:
+                    raise ValueError(
+                        "VectorMikuLadder requires one shared ladder rung "
+                        f"sequence; got {levels} and {lv}"
+                    )
+        self = cls(cells, units, levels or MikuConfig().levels)
+        ops = tuple(OpClass)
+        for ci, row in enumerate(unit_grid):
+            for ui, u in enumerate(row):
+                if u is None:
+                    continue
+                cfg, est = u.config, u.estimator.config
+                self.t_fast[ci, ui] = est.t_fast
+                self.slow_read_threshold[ci, ui] = est.slow_read_threshold
+                self.write_scale[ci, ui] = est.write_threshold_scale
+                self.ewma_a[ci, ui] = est.ewma
+                self.alpha_calm[ci, ui] = est.alpha_calm
+                self.min_window_inserts[ci, ui] = est.min_window_inserts
+                self.min_slow_inserts[ci, ui] = est.min_slow_inserts
+                scales = est.t_fast_class_scale or {}
+                self.t_fast_scale[ci, ui] = np.asarray(
+                    [scales.get(c, 1.0) for c in ops]
+                )
+                self.class_caps[ci, ui] = np.asarray(
+                    [cfg.class_caps.get(c, 1) for c in ops]
+                )
+                self.min_rate[ci, ui] = cfg.min_rate
+                self.rate_backoff[ci, ui] = cfg.rate_backoff
+                self.rate_recover[ci, ui] = cfg.rate_recover
+                self.patience[ci, ui] = cfg.promote_patience
+                self.target_margin[ci, ui] = cfg.target_margin
+                self.drain_factor[ci, ui] = cfg.drain_factor
+                self.fast_idle_alpha[ci, ui] = cfg.fast_idle_alpha
+        return self
+
+    def window(self, fast_ins, fast_occ, fast_cls, slow_ins, slow_occ,
+               slow_cls) -> dict:
+        """Advance every (cell, unit) ladder by one estimation window.
+
+        ``fast_*`` are per-cell fast-tier window deltas (``fast_cls`` shaped
+        ``(cells, n_ops)``); ``slow_*`` are per-(cell, unit) deltas
+        (``slow_cls`` shaped ``(cells, units, n_ops)``).  Returns the
+        decision arrays plus the estimate fields the scalar law exposes via
+        :class:`~repro.core.littles_law.TierEstimate` — ``cap`` is +inf for
+        unrestricted (cell, unit) pairs.
+        """
+        np = self._np
+        f_ins = np.asarray(fast_ins, float)[:, None]
+        f_occ = np.asarray(fast_occ, float)[:, None]
+        f_cls = np.asarray(fast_cls, float)[:, None, :]
+        slow_ins = np.asarray(slow_ins, float)
+        slow_occ = np.asarray(slow_occ, float)
+        slow_cls = np.asarray(slow_cls, float)
+
+        # -- estimator (LittlesLawEstimator.update, vectorized) ------------
+        total_ins = f_ins + slow_ins
+        total_occ = f_occ + slow_occ
+        reads = (slow_cls * self.mix_reads).sum(-1)
+        writes = (slow_cls * self.mix_writes).sum(-1)
+        tot_rw = reads + writes
+        rf = np.where(tot_rw > 0, reads / np.maximum(tot_rw, 1e-300), 1.0)
+        wf = np.where(tot_rw > 0, writes / np.maximum(tot_rw, 1e-300), 0.0)
+        threshold = self.slow_read_threshold * (rf + wf * self.write_scale)
+        num = (f_cls * self.t_fast_scale).sum(-1)
+        den = np.maximum(f_cls.sum(-1), 1.0)
+        t_fast = np.where(f_ins > 0, self.t_fast * num / den, self.t_fast)
+        valid = (total_ins >= self.min_window_inserts) & (
+            slow_ins >= self.min_slow_inserts
+        )
+        t_avg = np.where(
+            total_ins > 0, total_occ / np.maximum(total_ins, 1e-300), 0.0
+        )
+        alpha_v = f_ins / np.maximum(total_ins, 1e-300)
+        alpha = np.where(valid, alpha_v, np.where(slow_ins == 0, 1.0, 0.0))
+        slow_mean = np.where(
+            slow_ins > 0, slow_occ / np.maximum(slow_ins, 1e-300), 0.0
+        )
+        raw_eq1 = (t_avg - alpha * t_fast) / np.maximum(1.0 - alpha, 1e-12)
+        raw = np.maximum(np.where(alpha > self.alpha_calm, slow_mean,
+                                  raw_eq1), 0.0)
+        raw = np.where(valid, raw, 0.0)
+        upd = np.where(
+            self.has_ewma,
+            self.ewma_a * raw + (1.0 - self.ewma_a) * self.t_slow,
+            raw,
+        )
+        self.t_slow = np.where(valid, upd, self.t_slow)
+        self.has_ewma = self.has_ewma | valid
+        backlogged = valid & (self.t_slow > threshold)
+
+        # -- ladder (SlowTierMiku.window, vectorized) ----------------------
+        was_restricted = self.restricted
+        demote_unres = ~was_restricted & backlogged
+        fast_idle = (~valid & (f_ins == 0)) | (
+            valid & (alpha < self.fast_idle_alpha)
+        )
+        release = was_restricted & fast_idle
+        over = was_restricted & ~fast_idle & valid & (raw > threshold)
+        draining = over & self.has_prev & (
+            raw < self.prev_raw * self.drain_factor
+        )
+        demote_again = over & ~draining & (self.level > 0)
+        back_off = over & ~draining & (self.level == 0)
+        under = (
+            was_restricted & ~fast_idle & ~over & valid
+            & (raw < self.target_margin * threshold)
+        )
+        hold = was_restricted & ~fast_idle & ~over & ~under
+
+        calm = np.where(over | hold, 0, self.calm)
+        calm = np.where(under, calm + 1, calm)
+        do_promote = under & (calm >= self.patience)
+        calm = np.where(do_promote | release | demote_unres, 0, calm)
+        recover = do_promote & (self.rate < 1.0)
+        promote = do_promote & (self.rate >= 1.0)
+        present = slow_cls > 0
+        caps_masked = np.where(present, self.class_caps, np.inf)
+        class_cap = np.where(
+            present.any(-1), caps_masked.min(-1), self.levels_arr[-1]
+        )
+        nxt = self.level + 1
+        nxt_val = self.levels_arr[np.minimum(nxt, self.n_levels - 1)]
+        can = (nxt < self.n_levels) & (
+            nxt_val <= np.maximum(class_cap, self.levels_arr[0])
+        )
+
+        level = np.where(demote_unres | demote_again, 0, self.level)
+        level = np.where(release, self.n_levels - 1, level)
+        level = np.where(promote & can, self.level + 1, level)
+        rate = np.where(demote_unres | release, 1.0, self.rate)
+        rate = np.where(
+            back_off, np.maximum(self.min_rate, self.rate * self.rate_backoff),
+            rate,
+        )
+        rate = np.where(
+            recover, np.minimum(1.0, self.rate * self.rate_recover), rate
+        )
+        restricted = (was_restricted | demote_unres) & ~release
+
+        self.level, self.rate, self.calm = level, rate, calm
+        self.restricted = restricted
+        self.prev_raw = np.where(valid, raw, self.prev_raw)
+        self.has_prev = self.has_prev | valid
+
+        return {
+            "cap": np.where(restricted, self.levels_arr[level], np.inf),
+            "rate": np.where(restricted, rate, 1.0),
+            "restricted": restricted,
+            "t_avg": t_avg,
+            "alpha": alpha,
+            "t_slow": self.t_slow.copy(),
+            "t_slow_raw": raw,
+            "threshold": threshold,
+            "backlogged": backlogged,
+            "valid": valid,
+        }
 
 
 # ---------------------------------------------------------------------------

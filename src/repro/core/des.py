@@ -476,6 +476,70 @@ class TieredMemorySim:
     def clock_ns(self) -> float:
         return self.now
 
+    # -- state export (batched lane) ------------------------------------------
+    def export_state(self) -> dict:
+        """Static per-sim state as plain Python values, for array stacking.
+
+        The batched sweep lane (:mod:`repro.memsim.batched`) constructs one
+        ``TieredMemorySim`` per job *without running it* and stacks these
+        exports into ``(n_jobs, n_workloads, n_tiers)`` arrays.  Everything
+        here is derived in ``__init__`` — exporting is read-only and must
+        never advance the simulation (the scalar path stays bit-identical).
+
+        Keys (per-workload lists are indexed like ``self.workloads``):
+
+        * ``tier_names`` / ``st_slots`` / ``pipe`` — platform topology; the
+          station list is the tiers plus one trailing LLC station.
+        * ``tor_capacity`` / ``irq_capacity`` — shared-queue bounds in
+          macro-request units (granularity already applied).
+        * ``w_svc`` / ``w_bytes`` / ``w_llc_svc`` / ``w_phit`` — per-workload
+          service/byte constants, the LLC routing sentinel included.
+        * ``w_tier_frac`` — each workload's *static* tier-routing
+          probability vector (one-hot tier, ``ddr_fraction`` pair, or the
+          general placement vector); phased workloads export their schedule
+          in ``w_phases`` instead and carry their phase-0 one-hot here.
+        """
+        n_tiers = self._n_tiers
+        fracs: List[List[float]] = []
+        for wi, w in enumerate(self.workloads):
+            vec = [0.0] * n_tiers
+            if self._w_frac[wi] is not None:
+                vec[_DDR] = self._w_frac[wi]
+                vec[_CXL] = 1.0 - self._w_frac[wi]
+            elif w.placement is not None:
+                for t, f in w.placement.items():
+                    vec[self._tier_idx[t]] = f
+            else:
+                vec[self._phase_tier[wi]] = 1.0
+            fracs.append(vec)
+        return {
+            "tier_names": list(self._tier_names),
+            "n_tiers": n_tiers,
+            "granularity": self.granularity,
+            "window_ns": self.window_ns,
+            "st_slots": list(self._st_slots),
+            "pipe": list(self._pipe),
+            "tor_capacity": self.tor_capacity,
+            "irq_capacity": self.irq_capacity,
+            "w_names": [w.name for w in self.workloads],
+            "w_op": list(self._w_op),
+            "w_g": list(self._w_g),
+            "w_svc": [list(s) for s in self._w_svc],
+            "w_bytes": [list(b) for b in self._w_bytes],
+            "w_llc_svc": list(self._w_llc_svc),
+            "w_phit": list(self._w_phit),
+            "w_tier_frac": fracs,
+            "w_effmlp": list(self._w_effmlp),
+            "w_cores": [w.n_cores for w in self.workloads],
+            "w_managed": list(self._w_managed),
+            "w_dependent": [bool(w.dependent) for w in self.workloads],
+            "w_sync": [bool(w.sync) for w in self.workloads],
+            "w_phases": [
+                list(seq) if seq is not None else None
+                for seq in self._phase_seq
+            ],
+        }
+
     def _materialize_counters(self) -> None:
         for code, tc in enumerate(self._counters.tiers):
             tc.inserts = self._tc_ins[code]

@@ -92,6 +92,7 @@ class TierCounters:
         self.class_counts[op] += 1
 
     def merge(self, other: "TierCounters") -> None:
+        """Accumulate ``other``'s counts into this counter, in place."""
         self.inserts += other.inserts
         self.occupancy_time += other.occupancy_time
         # .get: counters deserialized from traces recorded before a class
@@ -102,6 +103,7 @@ class TierCounters:
             )
 
     def snapshot(self) -> "TierCounters":
+        """An independent copy, for later :meth:`delta` marks."""
         return TierCounters(
             inserts=self.inserts,
             occupancy_time=self.occupancy_time,
@@ -287,6 +289,7 @@ class LittlesLawEstimator:
         self.history: list = []  # list[TierEstimate], for diagnostics
 
     def reset(self) -> None:
+        """Forget the EWMA state and the estimate history."""
         self._t_slow_ewma = None
         self.history.clear()
 
@@ -317,6 +320,9 @@ class LittlesLawEstimator:
     def update(
         self, fast_window: TierCounters, slow_window: TierCounters
     ) -> TierEstimate:
+        """Solve Eq. 1 for one window's ``(fast, slow)`` counter deltas,
+        returning the smoothed :class:`TierEstimate` (and appending it to
+        :attr:`history`)."""
         cfg = self.config
         total_inserts = fast_window.inserts + slow_window.inserts
         total_occ = fast_window.occupancy_time + slow_window.occupancy_time

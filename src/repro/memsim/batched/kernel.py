@@ -1,0 +1,216 @@
+"""Per-window equilibrium solvers for the batched lane.
+
+The fluid engine reduces each control window to two water-filling
+questions, both answered by bisection over the common per-core admission
+rate λ (the fluid image of the DES's round-robin core arbitration):
+
+* :func:`station_lambdas` — per-station fair rates: the largest λ each
+  station can serve among its users (``+inf`` where unconstrained).  A
+  workload held below its fair inflow by a saturated station queues — up
+  to its MLP population — instead of inserting faster.
+* :func:`global_lambda` — one λ per cell under the shared-ToR *population*
+  constraint: each workload's ToR holding is ``min(O, y·R_tor)``, jumping
+  to its full MLP population ``O`` once a saturated station clamps it
+  below its fair share (its queue then soaks up every permit it has).
+  When the summed holdings exceed the ToR, λ shrinks until they fit —
+  FIFO admission ties every hungry workload to the same per-core share,
+  which is the paper's unfair-queuing collapse in fluid form.
+
+``global_lambda`` has two backends: numpy (default) and a Pallas kernel
+(``REPRO_BATCH_BACKEND=pallas``) that runs the whole bisection on-device
+(``jax.lax.fori_loop`` inside one ``pl.pallas_call``; interpreted
+automatically off-TPU).  Both produce the same fixed point to float
+tolerance — ``tests/test_batched.py`` pins backend parity.
+"""
+
+from __future__ import annotations
+
+import os
+import warnings
+from typing import Optional
+
+import numpy as np
+
+_BISECT_ITERS = 48
+_EPS = 1e-9
+
+
+def backend() -> str:
+    """Solver backend from ``REPRO_BATCH_BACKEND`` (numpy | pallas)."""
+    return os.environ.get("REPRO_BATCH_BACKEND", "numpy").strip().lower()
+
+
+def station_lambdas(
+    A: np.ndarray, cap: np.ndarray, route_svc: np.ndarray, slots: np.ndarray
+) -> np.ndarray:
+    """Per-(cell, station) fair per-core rate.
+
+    ``A``/``cap``: ``(C, W)`` active cores and per-workload issue-rate caps;
+    ``route_svc``: ``(C, W, S)`` expected service seconds each inserted
+    request demands from station ``s``; ``slots``: ``(C, S)`` server counts
+    (0 = padding).  Returns ``(C, S)`` λ, ``+inf`` where the station can
+    serve every user at their cap."""
+    C, W = A.shape
+    S = slots.shape[1]
+    hi0 = (cap / np.maximum(A, 1e-12)).max(axis=1) + 1e-6  # y saturates here
+    hi = np.broadcast_to(hi0[:, None], (C, S)).copy()
+    lo = np.zeros((C, S))
+
+    def demand(lam):
+        y = np.minimum(lam[:, None, :] * A[:, :, None], cap[:, :, None])
+        return (y * route_svc).sum(axis=1)
+
+    feasible_at_cap = demand(hi) <= slots + _EPS
+    for _ in range(_BISECT_ITERS):
+        mid = 0.5 * (lo + hi)
+        ok = demand(mid) <= slots + _EPS
+        lo = np.where(ok, mid, lo)
+        hi = np.where(ok, hi, mid)
+    return np.where(feasible_at_cap, np.inf, lo)
+
+
+def _population(lam, A, cap, y_sta, o_eff, R_tor, irq_cap):
+    """Per-workload ToR holdings at per-core rate ``lam`` (see module doc).
+
+    A queue-builder's holdings are its MLP population minus its share of
+    the (full, at the boundary) IRQ — staged requests count against MLP
+    but hold no ToR entry."""
+    y_free = np.minimum(lam[:, None] * A, cap)
+    y = np.minimum(y_free, y_sta)
+    clamped = y_sta < y_free * (1.0 - 1e-9)
+    unclamped_pop = np.minimum(o_eff, y * R_tor)
+    share = y / np.maximum(y.sum(axis=1, keepdims=True), 1e-12)
+    qb_pop = np.maximum(o_eff - irq_cap[:, None] * share, unclamped_pop)
+    return y, np.where(clamped, qb_pop, unclamped_pop)
+
+
+def _global_lambda_numpy(A, cap, y_sta, o_eff, R_tor, tor_cap, irq_cap):
+    C = A.shape[0]
+    hi0 = (cap / np.maximum(A, 1e-12)).max(axis=1) + 1e-6
+    lo = np.zeros(C)
+    hi = hi0.copy()
+
+    def feasible(lam):
+        _, pop = _population(lam, A, cap, y_sta, o_eff, R_tor, irq_cap)
+        return pop.sum(axis=1) <= tor_cap + _EPS
+
+    feasible_at_cap = feasible(hi0)
+    for _ in range(_BISECT_ITERS):
+        mid = 0.5 * (lo + hi)
+        ok = feasible(mid)
+        lo = np.where(ok, mid, lo)
+        hi = np.where(ok, hi, mid)
+    return np.where(feasible_at_cap, np.inf, lo)
+
+
+_pallas_solver = None
+_pallas_failed = False
+
+
+def _build_pallas_solver():
+    """Compile the bisection as one Pallas kernel (interpreted off-TPU)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    interpret = jax.default_backend() != "tpu"
+
+    def kernel(a_ref, cap_ref, ysta_ref, oeff_ref, rtor_ref, tor_ref,
+               irq_ref, hi_ref, out_ref):
+        A = a_ref[:]              # (C, W)
+        cap = cap_ref[:]          # (C, W)
+        y_sta = ysta_ref[:]       # (C, W)
+        o_eff = oeff_ref[:]       # (C, W)
+        r_tor = rtor_ref[:]       # (C, W)
+        tor = tor_ref[:]          # (C, 1)
+        irq = irq_ref[:]          # (C, 1)
+        hi0 = hi_ref[:]           # (C, 1)
+
+        def feasible(lam):        # lam (C, 1) -> (C, 1) bool
+            y_free = jnp.minimum(lam * A, cap)
+            y = jnp.minimum(y_free, y_sta)
+            clamped = y_sta < y_free * (1.0 - 1e-9)
+            unc = jnp.minimum(o_eff, y * r_tor)
+            share = y / jnp.maximum(y.sum(axis=1, keepdims=True), 1e-12)
+            pop = jnp.where(
+                clamped, jnp.maximum(o_eff - irq * share, unc), unc
+            )
+            return pop.sum(axis=1, keepdims=True) <= tor + _EPS
+
+        def body(_, lo_hi):
+            lo, hi = lo_hi
+            mid = 0.5 * (lo + hi)
+            ok = feasible(mid)
+            return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+        lo = jnp.zeros_like(hi0)
+        lo, _ = jax.lax.fori_loop(0, _BISECT_ITERS, body, (lo, hi0))
+        out_ref[:] = jnp.where(feasible(hi0), jnp.inf, lo)
+
+    @jax.jit
+    def solve(A, cap, y_sta, o_eff, r_tor, tor, irq, hi0):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(hi0.shape, jnp.float32),
+            interpret=interpret,
+        )(A, cap, y_sta, o_eff, r_tor, tor, irq, hi0)
+
+    return solve
+
+
+def _global_lambda_pallas(A, cap, y_sta, o_eff, R_tor, tor_cap, irq_cap):
+    global _pallas_solver
+    import jax.numpy as jnp
+
+    if _pallas_solver is None:
+        _pallas_solver = _build_pallas_solver()
+    big = 1e30  # f32-safe stand-in for +inf inputs
+    f32 = lambda x: jnp.asarray(np.minimum(x, big), jnp.float32)  # noqa: E731
+    hi0 = (np.minimum(cap, big) / np.maximum(A, 1e-12)).max(axis=1) + 1e-6
+    lam = _pallas_solver(
+        f32(A), f32(cap), f32(y_sta), f32(o_eff), f32(R_tor),
+        f32(tor_cap[:, None]), f32(irq_cap[:, None]), f32(hi0[:, None]),
+    )
+    return np.asarray(lam, dtype=np.float64)[:, 0]
+
+
+def global_lambda(
+    A: np.ndarray,
+    cap: np.ndarray,
+    y_sta: np.ndarray,
+    o_eff: np.ndarray,
+    R_tor: np.ndarray,
+    tor_cap: np.ndarray,
+    irq_cap: np.ndarray,
+    force_backend: Optional[str] = None,
+) -> np.ndarray:
+    """Max common per-core rate per cell under the ToR population bound.
+
+    ``cap`` is the issue-side cap (token rate and MLP); ``y_sta`` the
+    per-workload fair station-capacity share; ``o_eff`` the MLP population
+    bound; ``R_tor`` the per-insert ToR residency; ``irq_cap`` the staging
+    queue each queue-builder's MLP partly parks in.  Returns ``(C,)`` λ,
+    ``+inf`` where the ToR never fills."""
+    chosen = force_backend or backend()
+    global _pallas_failed
+    if chosen == "pallas" and not _pallas_failed:
+        if force_backend:
+            # Explicitly forced (tests, parity gates): a broken pallas
+            # backend must FAIL, not silently compare numpy to numpy.
+            return _global_lambda_pallas(
+                A, cap, y_sta, o_eff, R_tor, tor_cap, irq_cap
+            )
+        try:
+            return _global_lambda_pallas(
+                A, cap, y_sta, o_eff, R_tor, tor_cap, irq_cap
+            )
+        except Exception as ex:  # missing/odd jax: fall back, once, loudly
+            _pallas_failed = True
+            warnings.warn(
+                f"REPRO_BATCH_BACKEND=pallas unavailable ({ex!r}); "
+                "falling back to the numpy solver",
+                RuntimeWarning,
+            )
+    return _global_lambda_numpy(
+        A, cap, y_sta, o_eff, R_tor, tor_cap, irq_cap
+    )

@@ -1,0 +1,124 @@
+"""Lane entry points: partition a job list, run it batched, fall back scalar.
+
+``run_sweep(jobs, lane="batched")`` lands here.  Jobs the lane can express
+run through the exact closed form (single-workload cells) or the stacked
+fluid engine; tiering hooks and ``record_windows`` traces route back
+through the ordinary scalar path (process pool included), silently and
+per job, and :func:`partition_jobs` reports the split so callers
+(:func:`repro.scenarios.planner.run_scenario`) can surface it in result
+metadata.  Fluid cells stack into one group per (window cadence, ladder
+rung table) pair — heterogeneous-rung grids still run batched, in
+separate groups — and any group that nevertheless fails to stack falls
+back to the scalar DES rather than aborting the sweep.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.des import SimResult
+from repro.memsim.batched.stacking import BatchGroup, CellPlan, plan_cell
+
+#: (plans aligned with the job list — None where the job fell back,
+#:  [(job_index, reason), ...] for the fallbacks)
+Partition = Tuple[List[Optional[CellPlan]], List[Tuple[int, str]]]
+
+
+def can_batch(job) -> Optional[str]:
+    """Static screen: the fallback reason, or None when the lane applies.
+
+    The dynamic screen (ladder stacking) happens in :func:`partition_jobs`,
+    which actually builds the cell plan.
+    """
+    if job.tiering is not None:
+        return "tiering hook requires the scalar DES"
+    if job.record_windows:
+        return "record_windows telemetry requires the scalar DES"
+    return None
+
+
+def partition_jobs(jobs: Sequence) -> Partition:
+    """Split ``jobs`` into batchable cell plans and scalar fallbacks."""
+    plans: List[Optional[CellPlan]] = []
+    fallbacks: List[Tuple[int, str]] = []
+    for i, job in enumerate(jobs):
+        reason = can_batch(job)
+        if reason is None:
+            try:
+                plans.append(plan_cell(job))
+                continue
+            except ValueError as ex:  # e.g. heterogeneous ladder rungs
+                reason = str(ex)
+        plans.append(None)
+        fallbacks.append((i, reason))
+    return plans, fallbacks
+
+
+def run_sweep_batched(
+    jobs: Sequence,
+    processes: Optional[int] = None,
+    partition: Optional[Partition] = None,
+) -> List[SimResult]:
+    """Run ``jobs`` through the batched lane, results in job order.
+
+    Single-workload cells take the exact closed form
+    (:mod:`~repro.memsim.batched.exact`); the rest stack into window-lockstep
+    fluid groups (:mod:`~repro.memsim.batched.fluid`, one group per control
+    cadence).  Fallback jobs run on the scalar lane — through the process
+    pool when ``processes`` says so.
+    """
+    from repro.memsim.batched import exact as exact_mod
+    from repro.memsim.batched import fluid as fluid_mod
+    from repro.memsim.sweep import run_sweep
+
+    jobs = list(jobs)
+    plans, fallbacks = partition if partition is not None else (
+        partition_jobs(jobs)
+    )
+    results: List[Optional[SimResult]] = [None] * len(jobs)
+
+    fluid_cells: List[Tuple[int, CellPlan]] = []
+    for i, plan in enumerate(plans):
+        if plan is None:
+            continue
+        if exact_mod.exact_regime(plan) is not None:
+            results[i] = exact_mod.run_exact(plan)
+        else:
+            fluid_cells.append((i, plan))
+
+    # Group by window cadence (lockstep needs one shared cadence) AND by
+    # ladder rung sequence (the vector ladder stacks one rung table per
+    # group — cells with different MikuConfig.levels go to separate
+    # groups and still run batched).
+    by_key: dict = {}
+    scalar_idxs: List[int] = []
+    for i, plan in fluid_cells:
+        levels = tuple(plan.units[0].config.levels) if plan.units else ()
+        key = (float(plan.export["window_ns"]), levels)
+        by_key.setdefault(key, []).append((i, plan))
+    for _, cells in sorted(by_key.items()):
+        try:
+            # Stacking (array layout + vector-ladder build) is the part
+            # that can legitimately reject a group (e.g. a cell whose
+            # per-tier units mix rung tables).  Keep the net that narrow:
+            # a failure *running* the fluid engine is a bug and must
+            # surface, not silently rerun scalar.
+            group = BatchGroup(cells)
+            ladder = fluid_mod.build_ladder(group)
+        except ValueError:
+            scalar_idxs.extend(i for i, _ in cells)
+            continue
+        for idx, res in zip(group.indices,
+                            fluid_mod.run_fluid(group, ladder)):
+            results[idx] = res
+
+    scalar_idxs.extend(i for i, _ in fallbacks)
+    if scalar_idxs:
+        for idx, res in zip(
+            scalar_idxs,
+            run_sweep([jobs[i] for i in scalar_idxs], processes,
+                      lane="scalar"),
+        ):
+            results[idx] = res
+    assert all(r is not None for r in results)
+    return results  # type: ignore[return-value]

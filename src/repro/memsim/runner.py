@@ -41,6 +41,7 @@ def bandwidth_matrix(
     threads: Tuple[int, ...] = (1, 16),
     processes: Optional[int] = None,
 ) -> List[dict]:
+    """Fig. 3 rows: per-tier bw-test bandwidth over a thread grid."""
     return _rows("fig3_bandwidth",
                  {"platform": platform, "threads": threads}, processes)
 
@@ -53,6 +54,7 @@ def latency_matrix(
     threads: Tuple[int, ...] = (1, 2, 4, 8, 16),
     processes: Optional[int] = None,
 ) -> List[dict]:
+    """Fig. 4 rows: per-tier loaded avg/p50/p99 latency over threads."""
     return _rows("fig4_latency",
                  {"platform": platform, "threads": threads}, processes)
 
@@ -79,6 +81,7 @@ def corun_matrix(
     n_threads: int = 16,
     processes: Optional[int] = None,
 ) -> List[dict]:
+    """Fig. 5/6 rows: co-run collapse + ToR accounting per op class."""
     return _rows("fig5_corun",
                  {"platform": platform, "n_threads": n_threads}, processes)
 
@@ -101,6 +104,7 @@ def llc_partition_sweep(
     allocs: Tuple[float, ...] = (0.95, 0.75, 0.5, 0.25, 0.05),
     processes: Optional[int] = None,
 ) -> List[dict]:
+    """Fig. 7 rows: LLC (CAT) allocation sweep under tiered co-run."""
     return _rows(
         "fig7_llc",
         {"platform": platform, "wss_mb": (wss_mb,), "ddr_share": allocs},
@@ -116,6 +120,7 @@ def sync_interference(
     bg_threads: Tuple[int, ...] = (0, 4, 8, 16),
     processes: Optional[int] = None,
 ) -> List[dict]:
+    """Fig. 8 rows: CAS latency vs per-tier background thread count."""
     return _rows("fig8_sync",
                  {"platform": platform, "bg_threads": bg_threads}, processes)
 

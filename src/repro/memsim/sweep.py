@@ -9,6 +9,12 @@ environment variable for the benchmark harness).  Results come back in job
 order regardless of scheduling, and each job is deterministic given its
 seed, so serial and parallel execution are bit-identical.
 
+``run_sweep(jobs, lane="batched")`` (or ``REPRO_SWEEP_LANE=batched``)
+routes the whole batch through the vectorized sweep-scale lane
+(:mod:`repro.memsim.batched`) instead: the grid advances as one stacked
+window-lockstep computation, with automatic per-job fallback to the
+scalar DES for jobs the lane cannot express.
+
 MIKU controllers are *constructed inside the worker* (``miku=True``) rather
 than shipped across the pool: the controller is stateful, and a fresh,
 platform-calibrated instance per job is exactly what the figure runners
@@ -98,19 +104,45 @@ def default_processes() -> int:
         return 0
 
 
+def default_lane() -> str:
+    """Execution lane from ``REPRO_SWEEP_LANE`` (scalar | batched)."""
+    return os.environ.get("REPRO_SWEEP_LANE", "scalar").strip().lower() \
+        or "scalar"
+
+
 def run_sweep(
     jobs: Sequence[SimJob],
     processes: Optional[int] = None,
+    lane: Optional[str] = None,
 ) -> List[SimResult]:
     """Run ``jobs``, returning results in job order.
 
     ``processes=None`` consults ``REPRO_SWEEP_PROCS``; <=1 runs serially in
     process (no pool overhead — the right default under pytest and for
     single-job calls).
+
+    ``lane`` selects the execution engine (``REPRO_SWEEP_LANE`` when None):
+
+    * ``"scalar"`` (default) — one event-driven DES per job, bit-identical
+      to the pinned goldens, fanned over the process pool.
+    * ``"batched"`` — the vectorized sweep-scale lane
+      (:mod:`repro.memsim.batched`): the whole grid advances as one stacked
+      window-lockstep computation; jobs the lane cannot express (tiering
+      hooks, ``record_windows``) silently fall back to the scalar DES.
     """
+    if lane is None:
+        lane = default_lane()
+    if lane not in ("scalar", "batched"):
+        raise ValueError(
+            f"unknown sweep lane {lane!r}; expected 'scalar' or 'batched'"
+        )
+    jobs = list(jobs)
+    if lane == "batched":
+        from repro.memsim.batched import run_sweep_batched
+
+        return run_sweep_batched(jobs, processes)
     if processes is None:
         processes = default_processes()
-    jobs = list(jobs)
     if processes <= 1 or len(jobs) <= 1:
         return [run_job(j) for j in jobs]
     workers = min(processes, len(jobs), os.cpu_count() or 1)

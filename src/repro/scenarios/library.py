@@ -80,7 +80,9 @@ def _op_axis(default=_OPS) -> Axis:
 def _fig2_run_cell(platform, cell, processes) -> List[dict]:
     """Two-stage cell: measure the upper/lower split first, then run the
     placement schemes at the measured interleave fraction (the reason this
-    figure is a ``run_cell`` scenario, not a static grid)."""
+    figure is a ``run_cell`` scenario, not a static grid).  The internal
+    sweeps pin ``lane="scalar"``: run_cell scenarios are documented as
+    scalar-only, so ``REPRO_SWEEP_LANE`` must not leak in."""
     op = cell["op"]
     out: Dict[str, float] = {}
     up, low = run_sweep(
@@ -89,6 +91,7 @@ def _fig2_run_cell(platform, cell, processes) -> List[dict]:
             _job(platform, [bw_test("cxl", op, 16, name="a")], _BW_SIM_NS),
         ],
         processes,
+        lane="scalar",
     )
     out["upper_ddr_only"] = up.bandwidth("a")
     out["lower_cxl_only"] = low.bandwidth("a")
@@ -138,6 +141,7 @@ def _fig2_run_cell(platform, cell, processes) -> List[dict]:
             ),
         ],
         processes,
+        lane="scalar",
     )
     out["native"] = nat.bandwidth("a") + nat.bandwidth("b")
     out["interleave"] = inter.bandwidth("a") + inter.bandwidth("b")
@@ -909,6 +913,58 @@ register(Scenario(
     ),
     build=_corun3p_build,
     reduce=_corun3p_reduce,
+))
+
+
+# -- Sweep-scale co-run grid (the batched lane's showcase) --------------------
+
+
+def _corun_sweep_build(platform, cell) -> List[SimJob]:
+    op, n = cell["op"], cell["threads"]
+    wls = [
+        bw_test("ddr", op, n, name="ddr", mlp=cell["mlp"],
+                miku_managed=False),
+        bw_test("cxl", op, n, name="cxl", mlp=cell["mlp"]),
+    ]
+    return [_job(platform, wls, cell["sim_ns"], miku=cell["miku"])]
+
+
+def _corun_sweep_reduce(platform, cell, jobs, results) -> List[dict]:
+    (res,) = results
+    return [{
+        "platform": cell["platform"],
+        "op": cell["op"].value,
+        "threads": cell["threads"],
+        "mlp": cell["mlp"],
+        "miku": cell["miku"],
+        "ddr_gbps": res.bandwidth("ddr"),
+        "cxl_gbps": res.bandwidth("cxl"),
+        "restricted_windows": sum(
+            1 for d in res.decisions if d.restricted
+        ),
+    }]
+
+
+register(Scenario(
+    name="corun_sweep",
+    title="Sweep-scale co-run grid (96 cells): threads x op x MIKU x platform",
+    module="",  # registry/CLI native
+    axes=(
+        _platform_axis(("A", "B")),
+        _op_axis(),
+        Axis("threads", (2, 4, 8, 16), help="threads per co-running group"),
+        Axis("miku", (False, True), help="enable the MIKU controller"),
+        Axis("mlp", (96, 160), help="outstanding cachelines per core"),
+        Axis("sim_ns", 300_000.0, help="co-run simulated horizon"),
+    ),
+    metrics=(
+        Metric("ddr_gbps", "GB/s", "fast-tier co-run bandwidth"),
+        Metric("cxl_gbps", "GB/s", "slow-tier co-run bandwidth"),
+        Metric("restricted_windows", "", "windows MIKU spent restricting"),
+    ),
+    build=_corun_sweep_build,
+    reduce=_corun_sweep_reduce,
+    slow=True,
 ))
 
 

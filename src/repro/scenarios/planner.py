@@ -119,23 +119,40 @@ def run_scenario(
     processes: Optional[int] = None,
     *,
     trace: bool = False,
+    lane: Optional[str] = None,
 ) -> ResultTable:
     """Execute a scenario and collect its uniform result table.
 
     ``trace=True`` (grid scenarios only) turns on per-window control-plane
     telemetry recording in every job and attaches the per-cell window
     records as ``ResultTable.traces``.
+
+    ``lane="batched"`` routes the whole grid through the vectorized sweep
+    lane (:mod:`repro.memsim.batched`); jobs it cannot express fall back to
+    the scalar DES, and ``ResultTable.meta`` records the split (lane name,
+    batched vs fallback job counts, fallback reasons).  Multi-stage
+    (``run_cell``) scenarios always run scalar; the meta notes it.
     """
+    from repro.memsim.sweep import default_lane
+
     sc = _scenario(scenario)
     values = resolve_axes(sc, overrides)
     rows: List[Dict[str, Any]] = []
     traces: Optional[List[Dict[str, Any]]] = [] if trace else None
+    # Resolve the effective lane up front so meta reports what actually ran
+    # (lane=None defers to REPRO_SWEEP_LANE, exactly like run_sweep).
+    lane = lane or default_lane()
+    meta: Dict[str, Any] = {"lane": lane}
     if sc.run_cell is not None:
         if trace:
             raise ValueError(
                 f"scenario {sc.name!r} is multi-stage (run_cell); per-window "
                 "decision tracing supports grid scenarios only"
             )
+        if lane == "batched":
+            meta = {"lane": "scalar",
+                    "note": "multi-stage (run_cell) scenario; the batched "
+                            "lane applies to grid scenarios only"}
         for cell, pm in _resolved_cells(sc, values):
             rows.extend(sc.run_cell(pm, cell, processes))
     else:
@@ -150,7 +167,21 @@ def run_scenario(
                 for cell, pm, jobs in planned
             ]
         all_jobs: List[SimJob] = [j for _, _, jobs in planned for j in jobs]
-        results = run_sweep(all_jobs, processes)
+        if lane == "batched":
+            from repro.memsim.batched import partition_jobs, run_sweep_batched
+
+            partition = partition_jobs(all_jobs)
+            plans, fallbacks = partition
+            reasons = sorted({r for _, r in fallbacks})
+            meta.update(
+                batched_jobs=sum(1 for p in plans if p is not None),
+                scalar_fallback_jobs=len(fallbacks),
+                fallback_reasons=reasons,
+            )
+            results = run_sweep_batched(all_jobs, processes,
+                                        partition=partition)
+        else:
+            results = run_sweep(all_jobs, processes, lane=lane)
         i = 0
         for cell, pm, jobs in planned:
             chunk = results[i: i + len(jobs)]
@@ -170,7 +201,7 @@ def run_scenario(
                     ],
                 })
     return ResultTable(scenario=sc.name, rows=rows, params=values,
-                       traces=traces)
+                       traces=traces, meta=meta)
 
 
 def parse_set_args(

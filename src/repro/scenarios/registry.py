@@ -24,6 +24,7 @@ def register(scenario: Scenario) -> Scenario:
 
 
 def get(name: str) -> Scenario:
+    """Look up a registered scenario by ``name`` (KeyError lists all)."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -34,8 +35,10 @@ def get(name: str) -> Scenario:
 
 
 def names() -> List[str]:
+    """Registered scenario names, in declaration (presentation) order."""
     return list(_REGISTRY)
 
 
 def all_scenarios() -> List[Scenario]:
+    """All registered scenarios, in declaration (presentation) order."""
     return list(_REGISTRY.values())

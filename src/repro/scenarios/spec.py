@@ -70,6 +70,7 @@ class Axis:
         return isinstance(self.default, (tuple, list))
 
     def parse_text(self, text: str) -> Any:
+        """Parse one ``--set`` token for this axis (comma lists -> grids)."""
         sample = self.default[0] if self.is_grid else self.default
         fn = self.parse or _infer_parse(sample)
         if self.is_grid:
@@ -105,6 +106,9 @@ class Scenario:
     #: (platform, cell, jobs, results) -> List[dict] — that cell's rows.
     reduce: Optional[Callable[..., List[Dict[str, Any]]]] = None
     #: (platform, cell, processes) -> List[dict] — multi-stage escape hatch.
+    #: run_cell scenarios always execute scalar (the batched sweep lane
+    #: covers grid scenarios only); bodies that call run_sweep internally
+    #: must pin lane="scalar" so REPRO_SWEEP_LANE cannot leak in.
     run_cell: Optional[Callable[..., List[Dict[str, Any]]]] = None
     slow: bool = False  # heavy scenario: CI runs it in the non-gating lane
 
@@ -117,6 +121,7 @@ class Scenario:
             )
 
     def axis(self, name: str) -> Axis:
+        """This scenario's axis named ``name`` (KeyError lists the axes)."""
         for a in self.axes:
             if a.name == name:
                 return a
@@ -137,6 +142,22 @@ def _plain(v: Any) -> Any:
     return v
 
 
+def format_default(v: Any) -> str:
+    """One axis default as display text (enums by value, sequences comma-
+    joined, whole floats without the trailing ``.0``).
+
+    The single formatter behind both ``benchmarks/run.py --list`` and the
+    generated catalog (``docs/scenarios.md``), so the two listings cannot
+    render the same default differently."""
+    if isinstance(v, enum.Enum):
+        return str(v.value)
+    if isinstance(v, (tuple, list)):
+        return ", ".join(format_default(x) for x in v)
+    if isinstance(v, float) and v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return str(v)
+
+
 @dataclasses.dataclass
 class ResultTable:
     """A uniform result table: one scenario, ordered rows of plain dicts."""
@@ -148,6 +169,10 @@ class ResultTable:
     #: its jobs' per-tier window records) — populated only when the
     #: scenario ran with ``trace=True`` (``benchmarks/run.py --trace``).
     traces: Optional[List[Dict[str, Any]]] = None
+    #: Execution metadata: which lane ran the sweep and, for the batched
+    #: lane, how many jobs it expressed vs routed back to the scalar DES
+    #: (``fallback_reasons`` says why) — see ``run_scenario(..., lane=)``.
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         self.rows = [{k: _plain(v) for k, v in r.items()} for r in self.rows]
@@ -163,6 +188,7 @@ class ResultTable:
         return cols
 
     def to_csv(self) -> str:
+        """The rows as CSV text (union of row keys, declaration order)."""
         buf = io.StringIO()
         w = csv.DictWriter(buf, fieldnames=self.columns, restval="",
                            lineterminator="\n")
@@ -171,13 +197,13 @@ class ResultTable:
         return buf.getvalue()
 
     def to_json(self, indent: Optional[int] = 2) -> str:
+        """Scenario, params, rows (and non-empty meta) as a JSON document."""
         def default(o: Any) -> Any:
             plain = _plain(o)
             return plain if plain is not o else str(o)
 
-        return json.dumps(
-            {"scenario": self.scenario, "params": self.params,
-             "rows": self.rows},
-            indent=indent,
-            default=default,
-        )
+        payload = {"scenario": self.scenario, "params": self.params,
+                   "rows": self.rows}
+        if self.meta:
+            payload["meta"] = self.meta
+        return json.dumps(payload, indent=indent, default=default)

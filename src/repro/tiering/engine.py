@@ -71,6 +71,7 @@ class MigrationEngine:
 
     # -- queue management --------------------------------------------------
     def is_queued(self, region: str, page: int) -> bool:
+        """Whether this (region, page) already has copy traffic queued."""
         return (region, page) in self._queued
 
     def queued_promotions(self) -> int:
@@ -87,6 +88,8 @@ class MigrationEngine:
         )
 
     def enqueue(self, jobs: Iterable[MigrationJob]) -> int:
+        """Queue migration jobs (deduped per page); returns how many were
+        accepted."""
         n = 0
         for job in jobs:
             key = (job.region, job.page)
@@ -113,6 +116,7 @@ class MigrationEngine:
         return max(0, len(q) * rpp - self._credit[tier_code])
 
     def backlog_pages(self) -> int:
+        """Pages whose copy traffic has not yet completed."""
         return sum(len(q) for q in self._queues.values())
 
     # -- completion path ---------------------------------------------------
@@ -148,6 +152,7 @@ class MigrationEngine:
         return promoted, demoted
 
     def counters(self) -> Dict[str, int]:
+        """Cumulative engine counters (promoted/demoted pages, bytes, backlog)."""
         return {
             "pages_promoted": self.pages_promoted,
             "pages_demoted": self.pages_demoted,

@@ -67,6 +67,7 @@ class TieringSpec:
     mig_miku_managed: bool = True
 
     def build(self) -> "TieringHook":
+        """Construct a fresh per-sim hook (the spec itself stays picklable)."""
         return TieringHook(self)
 
 
@@ -89,6 +90,8 @@ class TieringHook:
     def migration_workloads(
         self, platform: PlatformModel
     ) -> List[WorkloadSpec]:
+        """The per-slow-tier migration pseudo-workloads (``mig-<tier>``)
+        this spec contributes to the sim's workload list."""
         return [
             WorkloadSpec(
                 name=f"{MIG_PREFIX}{tier}",
@@ -103,6 +106,8 @@ class TieringHook:
 
     # -- binding -----------------------------------------------------------
     def bind(self, sim: TieredMemorySim) -> None:
+        """Attach to a constructed sim: resolve regions, initial placement
+        vectors, and the migration workload indices."""
         spec = self.spec
         self._sim = sim
         names = sim.platform.tier_names
@@ -152,6 +157,9 @@ class TieringHook:
 
     # -- per-window pass ---------------------------------------------------
     def on_window(self, sim: TieredMemorySim) -> bool:
+        """One per-window tiering pass: sample accesses into the PageMap,
+        drain completed copies, run the policy, re-resolve placements and
+        budgets.  Returns True when routing or budgets changed."""
         assert self.pagemap is not None
         self._windows += 1
         completed = sim._stat_completed
@@ -266,6 +274,8 @@ class TieringHook:
 
     # -- result surface ----------------------------------------------------
     def summary(self) -> dict:
+        """End-of-run summary (pages promoted/demoted, migrated bytes,
+        deferrals, final fast fractions) for ``SimResult.tiering``."""
         assert self.pagemap is not None
         return {
             **self.engine.counters(),

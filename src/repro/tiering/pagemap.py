@@ -116,6 +116,7 @@ class PageRegion:
         )
 
     def resident_pages(self, tier_code: int) -> int:
+        """How many of this region's pages currently live on ``tier_code``."""
         return int(np.count_nonzero(self.tier == tier_code))
 
     def pages_on(self, tier_code: int) -> np.ndarray:
@@ -201,9 +202,11 @@ class PageMap:
 
     # -- accounting --------------------------------------------------------
     def record_window(self, name: str, n_accesses: float) -> None:
+        """Feed one window's sampled accesses into region ``name``'s hotness."""
         self.regions[name].record_window(n_accesses, self.decay)
 
     def fast_pages_used(self) -> int:
+        """Total pages resident on the fast tier across all regions."""
         return sum(r.resident_pages(0) for r in self.regions.values())
 
     def fast_fraction(self, name: str) -> float:
@@ -211,10 +214,12 @@ class PageMap:
         return float(self.regions[name].tier_fractions()[0])
 
     def placement_fractions(self, name: str) -> Dict[str, float]:
+        """Region ``name``'s live access-weighted tier fractions, by tier name."""
         fr = self.regions[name].tier_fractions()
         return {t: float(fr[i]) for i, t in enumerate(self.tier_names)}
 
     def move(self, name: str, page: int, dst_code: int) -> None:
+        """Flip one page's resident tier (called on migration completion)."""
         self.regions[name].tier[page] = dst_code
 
     def occupancy(self) -> Dict[str, int]:

@@ -56,6 +56,7 @@ class StaticPolicy:
     name = "static"
 
     def decide(self, pagemap: PageMap, ctx: PolicyContext) -> List[MigrationJob]:
+        """Never migrate (the placement-vector baseline)."""
         del pagemap, ctx
         return []
 
@@ -145,6 +146,8 @@ class HotnessLRUPolicy:
         ]
 
     def decide(self, pagemap: PageMap, ctx: PolicyContext) -> List[MigrationJob]:
+        """TPP-style: promote hottest slow pages into free fast capacity,
+        demote coldest fast pages past the watermark."""
         return (
             self._promotions(pagemap, ctx.engine)
             + self._demotions(pagemap, ctx.engine)
@@ -170,6 +173,8 @@ class MikuCoordinatedPolicy:
         self.jobs_per_budget_unit = jobs_per_budget_unit
 
     def decide(self, pagemap: PageMap, ctx: PolicyContext) -> List[MigrationJob]:
+        """Run the base policy, then defer jobs beyond the MIKU ladders'
+        per-tier migration budgets (throttled tiers issue nothing)."""
         jobs = self.base.decide(pagemap, ctx)
         if not jobs:
             return jobs
@@ -210,6 +215,8 @@ POLICIES: Dict[str, Callable[..., object]] = {
 
 
 def make_policy(name: str, **kwargs):
+    """Instantiate a registered tiering policy by name (ValueError lists
+    the registry)."""
     try:
         cls = POLICIES[name]
     except KeyError:
