@@ -110,6 +110,9 @@ def _run_scenario(name: str, set_args: list, fmt: str, jobs: int,
     if lane:
         # Lane routing summary on stderr so csv/json stdout stays clean.
         print(f"lane: {json.dumps(table.meta)}", file=sys.stderr)
+        for reason, n in table.meta.get(
+                "fallback_reason_counts", {}).items():
+            print(f"lane fallback [{n} job(s)]: {reason}", file=sys.stderr)
     if fmt == "json":
         out = table.to_json()
     else:

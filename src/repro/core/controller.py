@@ -52,7 +52,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import warnings
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.littles_law import (
     ACCESS_MIX,
@@ -773,6 +773,23 @@ class VectorMikuLadder:
             "backlogged": backlogged,
             "valid": valid,
         }
+
+    def migration_budgets(self) -> "Any":
+        """Per-(cell, unit) migration budgets from the current ladder state —
+        the vectorized twin of :meth:`SlowTierMiku.migration_budget`: the
+        MIGRATE class cap while unrestricted, zero once fine-grained rate
+        control has engaged, otherwise the current level bounded by that
+        cap.  Call after :meth:`window` to read the post-window state the
+        scalar hook sees."""
+        np = self._np
+        mig = tuple(OpClass).index(OpClass.MIGRATE)
+        cap = self.class_caps[:, :, mig]
+        lvl = self.levels_arr[self.level]
+        return np.where(
+            ~self.restricted,
+            cap,
+            np.where(self.rate < 1.0, 0.0, np.minimum(cap, lvl)),
+        ).astype(np.int64)
 
 
 # ---------------------------------------------------------------------------

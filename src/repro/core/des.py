@@ -506,6 +506,19 @@ class TieredMemorySim:
             if self._w_frac[wi] is not None:
                 vec[_DDR] = self._w_frac[wi]
                 vec[_CXL] = 1.0 - self._w_frac[wi]
+            elif self._w_cum[wi] is not None:
+                # Live n-tier routing (a tiering hook re-resolves placements
+                # into ``_w_cum`` at bind) — export the cumulative draw
+                # boundaries as per-tier fractions, not the stale spec
+                # placement.
+                prev = 0.0
+                for t in range(n_tiers):
+                    hi = (
+                        1.0 if t == n_tiers - 1
+                        else min(float(self._w_cum[wi][t]), 1.0)
+                    )
+                    vec[t] = max(0.0, hi - prev)
+                    prev = hi
             elif w.placement is not None:
                 for t, f in w.placement.items():
                     vec[self._tier_idx[t]] = f

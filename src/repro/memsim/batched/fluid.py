@@ -7,7 +7,8 @@ stations, the optional LLC station, and the shared ToR population bound.
 Two regimes per cell per window, matching the scalar dynamics:
 
 * **uncoupled** — the ToR has room: each workload runs at its own issue
-  cap (MLP / token rate) or its fair share of the stations it uses.
+  cap (MLP / token rate), clamped to the fair share of any saturated
+  station it routes traffic through.
 * **coupled** — the combined queue appetite exceeds the ToR: every
   admission is a fair per-core share (FIFO arbitration), so one λ governs
   all workloads and a saturated slow station collapses the fast tier's
@@ -25,6 +26,7 @@ once.
 from __future__ import annotations
 
 import math
+import warnings
 from typing import List, Optional
 
 import numpy as np
@@ -37,11 +39,13 @@ from repro.core.controller import (
 )
 from repro.core.des import SimResult, WorkloadStats
 from repro.core.littles_law import OpClass, TierCounters, TierEstimate
+from repro.core.substrate import _decision_jsonable
 from repro.memsim.batched import kernel
 from repro.memsim.batched.stacking import BatchGroup
+from repro.memsim.batched.tiering import VectorTiering, build_tiering
 
 _OPS = tuple(OpClass)
-_N_OUTER = 10  # wait-relaxation iterations per window
+_N_OUTER = 30  # wait-relaxation iterations per window
 _DAMP = 0.5
 
 
@@ -61,12 +65,15 @@ def build_ladder(group: BatchGroup) -> Optional[VectorMikuLadder]:
 
 
 def run_fluid(
-    group: BatchGroup, ladder: Optional[VectorMikuLadder] = None
+    group: BatchGroup,
+    ladder: Optional[VectorMikuLadder] = None,
+    tiering: Optional[VectorTiering] = None,
 ) -> List[SimResult]:
     """Run one stacked cell group to its horizons; SimResults in group order.
 
-    ``ladder`` is the group's pre-built :func:`build_ladder` result (built
-    here when omitted)."""
+    ``ladder``/``tiering`` are the group's pre-built :func:`build_ladder` /
+    :func:`~repro.memsim.batched.tiering.build_tiering` results (built here
+    when omitted)."""
     C, W, S, T = (len(group.plans), group.n_wl, group.n_st, group.n_tiers)
     llc = group.llc
     win = group.window_ns
@@ -78,12 +85,19 @@ def run_fluid(
 
     if ladder is None:
         ladder = build_ladder(group)
+    if tiering is None:
+        tiering = build_tiering(group)
+    vt = tiering
+    record_mask = np.array(
+        [bool(p.job.record_windows) for p in group.plans]
+    )
 
     # Station-shaped constants: device service per (c, w, s) with the LLC
     # column; pipeline per station (LLC has none).
     pipe_st = np.zeros((C, W, S))
     pipe_st[:, :, :T] = group.pipe[:, None, :T]
     svc = group.svc  # (C, W, S): tiers then llc
+    svc_pipe = svc + pipe_st  # per-insert station residency sans queueing
     op_onehot = np.zeros((C, W, n_ops))
     for o in range(n_ops):
         op_onehot[:, :, o] = group.op == o
@@ -95,6 +109,16 @@ def run_fluid(
     tier_cap = np.full((C, max(1, T - 1)), np.inf)
     tier_rate = np.ones((C, max(1, T - 1)))
     Wq = np.zeros((C, S))  # station waits, warm-started across windows
+    # Live issue tables written by the tiering twin: routing vectors
+    # (placement re-resolution) and effective MLP (migration issue gating),
+    # the fluid image of the scalar hook's ``_apply_placements`` /
+    # ``_w_effmlp`` writes.  Without tiering they never change.
+    tier_frac_live = group.tier_frac.copy()
+    effmlp_live = group.effmlp.copy()
+    # Under the pallas backend the whole relaxation loop runs as one jit
+    # dispatch per window (kernel.fused_window_solve); a failing jax stack
+    # falls back — once, loudly — to the numpy loop below.
+    use_fused = kernel.backend() == "pallas"
 
     # Accumulators.
     bytes_w = np.zeros((C, W))
@@ -109,6 +133,8 @@ def run_fluid(
     tor_peak = np.zeros(C)
     decisions: List[list] = [[] for _ in range(C)]
     timelines: List[List[np.ndarray]] = [[] for _ in range(C)]
+    records: List[List[dict]] = [[] for _ in range(C)]
+    fired_count = np.zeros(C, np.int64)
 
     n_seg = int(np.max(np.ceil(group.sim_ns / win - 1e-9))) if C else 0
     for k in range(n_seg):
@@ -122,7 +148,8 @@ def run_fluid(
 
         # -- routing & throttles for this window --------------------------
         frac = (
-            group.window_fracs(t0, t1) if has_phases else group.tier_frac
+            group.window_fracs(t0, t1, base=tier_frac_live)
+            if has_phases else tier_frac_live
         )  # (C, W, T)
         p = group.p_llc
         route = np.zeros((C, W, S))
@@ -142,86 +169,113 @@ def run_fluid(
             w_rate >= 1.0 - 1e-12, np.inf,
             w_rate / np.maximum(e_cost, 1e-9),
         )
-        o_eff = A * group.effmlp
+        o_eff = A * effmlp_live
         route_svc = route * svc
 
         # -- equilibrium solve (wait relaxation + water-filling) ----------
-        y = np.zeros((C, W))
-        coupled = np.zeros(C, bool)
-        R_tor = np.zeros((C, W))
-        used = route_svc > 1e-12
-        for _ in range(_N_OUTER):
-            r_sta = Wq[:, None, :] + svc + pipe_st
-            R_tor = (route * r_sta).sum(axis=2)
-            R_base = (route * (svc + pipe_st)).sum(axis=2)
-            # Issue-side caps: token-bucket rate and the MLP population
-            # (waits included — a backlogged tier slows its own issuers).
-            cap = np.minimum(y_rate, o_eff / np.maximum(R_tor, 1e-9))
-            cap = np.where(A > 0, cap, 0.0)
-            lam_s = kernel.station_lambdas(A, cap, route_svc, group.slots)
-            lam_min = np.where(used, lam_s[:, None, :], np.inf).min(axis=2)
-            # Inactive (padded) workload slots have no used station: their
-            # lam_min is +inf and A is 0 — clamp before multiplying so the
-            # product is 0, not NaN.
-            y_sta = np.where(np.isfinite(lam_min), lam_min, 1e30) \
-                * np.maximum(A, 0.0)
-            lam = kernel.global_lambda(
-                A, cap, y_sta, o_eff, R_tor, group.tor_cap, group.irq_cap
-            )
-            coupled = np.isfinite(lam)
-            lam_b = np.where(np.isfinite(lam), lam, 1e30)[:, None]
-            y_free = np.minimum(lam_b * A, cap)
-            y = np.minimum(y_free, y_sta)
-            # Queue-builders: held at their station share while their
-            # admission allowance (λ·A) and issue caps still have headroom —
-            # their queue soaks up permits up to the MLP population (minus
-            # the IRQ-staged share), which is what fills the ToR at the
-            # feasibility boundary.
-            qb = (y_sta <= lam_b * A * (1.0 + 1e-9)) & (
-                y_sta < cap * (1.0 - 1e-9)
-            )
-            unc_pop = np.minimum(o_eff, y * R_tor)
-            share = y / np.maximum(y.sum(axis=1, keepdims=True), 1e-12)
-            pop_w = np.where(
-                qb,
-                np.maximum(o_eff - group.irq_cap[:, None] * share, unc_pop),
-                unc_pop,
-            )
+        y = None
+        if use_fused:
+            try:
+                y, Wq, lam = kernel.fused_window_solve(
+                    A, y_rate, o_eff, route, route_svc, svc_pipe,
+                    group.slots, group.tor_cap, group.irq_cap, Wq,
+                    _N_OUTER, _DAMP,
+                )
+                coupled = np.isfinite(lam)
+            except Exception as ex:
+                use_fused = False
+                y = None
+                warnings.warn(
+                    f"fused pallas window solver unavailable ({ex!r}); "
+                    "falling back to the numpy relaxation loop",
+                    RuntimeWarning,
+                )
+        if y is None:
+            y = np.zeros((C, W))
+            coupled = np.zeros(C, bool)
+            R_tor = np.zeros((C, W))
+            used = route_svc > 1e-12
+            for _ in range(_N_OUTER):
+                r_sta = Wq[:, None, :] + svc_pipe
+                R_tor = (route * r_sta).sum(axis=2)
+                R_base = (route * svc_pipe).sum(axis=2)
+                # Issue-side caps: token-bucket rate and the MLP population
+                # (waits included — a backlogged tier slows its own
+                # issuers).
+                cap = np.minimum(y_rate, o_eff / np.maximum(R_tor, 1e-9))
+                cap = np.where(A > 0, cap, 0.0)
+                lam_s = kernel.station_lambdas(
+                    A, cap, route_svc, group.slots
+                )
+                lam_min = np.where(
+                    used, lam_s[:, None, :], np.inf
+                ).min(axis=2)
+                # Inactive (padded) workload slots have no used station:
+                # their lam_min is +inf and A is 0 — clamp before
+                # multiplying so the product is 0, not NaN.
+                y_sta = np.where(np.isfinite(lam_min), lam_min, 1e30) \
+                    * np.maximum(A, 0.0)
+                lam = kernel.global_lambda(
+                    A, cap, y_sta, o_eff, R_tor, group.tor_cap,
+                    group.irq_cap,
+                )
+                coupled = np.isfinite(lam)
+                lam_b = np.where(np.isfinite(lam), lam, 1e30)[:, None]
+                y_free = np.minimum(lam_b * A, cap)
+                y = np.minimum(y_free, y_sta)
+                # Queue-builders: held at their station share while their
+                # admission allowance (λ·A) and issue caps still have
+                # headroom — their queue soaks up permits up to the MLP
+                # population (minus the IRQ-staged share), which is what
+                # fills the ToR at the feasibility boundary.
+                qb = (y_sta <= lam_b * A * (1.0 + 1e-9)) & (
+                    y_sta < cap * (1.0 - 1e-9)
+                )
+                unc_pop = np.minimum(o_eff, y * R_tor)
+                share = y / np.maximum(y.sum(axis=1, keepdims=True), 1e-12)
+                pop_w = np.where(
+                    qb,
+                    np.maximum(
+                        o_eff - group.irq_cap[:, None] * share, unc_pop
+                    ),
+                    unc_pop,
+                )
 
-            # Wait relaxation: the queued population (ToR holdings beyond
-            # service + flight) sits at the saturated stations of the
-            # station-clamped workloads; Little's law converts queue depth
-            # to wait.
-            d_s = np.einsum("cw,cws->cs", y, route_svc)
-            inflow_s = np.einsum("cw,cws->cs", y, route)
-            util = d_s / np.maximum(group.slots, 1e-9)
-            sat = (util >= 0.98) & (group.slots > 0)
-            n_pop = np.minimum(pop_w.sum(axis=1), group.tor_cap)
-            base_pop = (y * R_base).sum(axis=1)
-            q_total = np.maximum(n_pop - base_pop, 0.0)
-            q_max = np.where(
-                qb, np.maximum(pop_w - y * R_base, 0.0), 0.0
-            )
-            q_sum = q_max.sum(axis=1)
-            scale = np.where(
-                q_sum > 1e-12, np.minimum(1.0, q_total / np.maximum(
-                    q_sum, 1e-12)), 0.0
-            )
-            q_w = q_max * scale[:, None]
-            w_st = np.where(sat[:, None, :], route_svc, 0.0)
-            w_norm = w_st.sum(axis=2, keepdims=True)
-            w_st = np.where(w_norm > 1e-12, w_st / np.maximum(w_norm, 1e-12),
-                            0.0)
-            q_s = np.einsum("cw,cws->cs", q_w, w_st)
-            mean_svc = d_s / np.maximum(inflow_s, 1e-12)
-            w_new = q_s * mean_svc / np.maximum(group.slots, 1e-9)
-            w_new = np.where(sat, w_new, 0.0)
-            Wq = _DAMP * Wq + (1.0 - _DAMP) * w_new
+                # Wait relaxation: the queued population (ToR holdings
+                # beyond service + flight) sits at the saturated stations
+                # of the station-clamped workloads; Little's law converts
+                # queue depth to wait.
+                d_s = np.einsum("cw,cws->cs", y, route_svc)
+                inflow_s = np.einsum("cw,cws->cs", y, route)
+                util = d_s / np.maximum(group.slots, 1e-9)
+                sat = (util >= 0.98) & (group.slots > 0)
+                n_pop = np.minimum(pop_w.sum(axis=1), group.tor_cap)
+                base_pop = (y * R_base).sum(axis=1)
+                q_total = np.maximum(n_pop - base_pop, 0.0)
+                q_max = np.where(
+                    qb, np.maximum(pop_w - y * R_base, 0.0), 0.0
+                )
+                q_sum = q_max.sum(axis=1)
+                scale = np.where(
+                    q_sum > 1e-12, np.minimum(1.0, q_total / np.maximum(
+                        q_sum, 1e-12)), 0.0
+                )
+                q_w = q_max * scale[:, None]
+                w_st = np.where(sat[:, None, :], route_svc, 0.0)
+                w_norm = w_st.sum(axis=2, keepdims=True)
+                w_st = np.where(
+                    w_norm > 1e-12, w_st / np.maximum(w_norm, 1e-12), 0.0
+                )
+                q_s = np.einsum("cw,cws->cs", q_w, w_st)
+                mean_svc = d_s / np.maximum(inflow_s, 1e-12)
+                w_new = q_s * mean_svc / np.maximum(group.slots, 1e-9)
+                w_new = np.where(sat, w_new, 0.0)
+                Wq = _DAMP * Wq + (1.0 - _DAMP) * w_new
 
         # -- accumulate window counters -----------------------------------
         dt = np.where(active, seg_len, 0.0)
         ins_w = y * dt[:, None]
-        r_sta = Wq[:, None, :] + svc + pipe_st
+        r_sta = Wq[:, None, :] + svc_pipe
         R_tor = (route * r_sta).sum(axis=2)
         y_tot = y.sum(axis=1)
         w_irq = np.where(
@@ -232,7 +286,8 @@ def run_fluid(
         ins_t += ins_dev.sum(axis=1)
         occ_dev = ins_dev * r_sta[:, :, :T]
         occ_t += occ_dev.sum(axis=1)
-        cls_t += np.einsum("cwt,cwo->cto", ins_dev, op_onehot)
+        cls_w = np.einsum("cwt,cwo->cto", ins_dev, op_onehot)
+        cls_t += cls_w
         bytes_win = ins_w * (frac * group.bytes_t).sum(axis=2)
         bytes_w += bytes_win
         completed_w += ins_w
@@ -249,28 +304,31 @@ def run_fluid(
             timelines[ci].append(((k + 1) * win, bytes_win[ci].copy()))
 
         # -- fire the control window (decisions apply to the next one) ----
-        if ladder is None or not fire.any():
+        if not fire.any():
             continue
-        f_ins = ins_dev[:, :, 0].sum(axis=1)
-        f_occ = occ_dev[:, :, 0].sum(axis=1)
-        f_cls = np.einsum("cw,cwo->co", ins_dev[:, :, 0], op_onehot)
-        s_ins = np.zeros((C, U))
-        s_occ = np.zeros((C, U))
-        s_cls = np.zeros((C, U, n_ops))
-        slow_ins_t = ins_dev.sum(axis=1)[:, 1:]  # (C, T-1)
-        slow_occ_t = occ_dev.sum(axis=1)[:, 1:]
-        slow_cls_t = np.einsum("cwt,cwo->cto", ins_dev, op_onehot)[:, 1:]
-        per_tier = ~merged
-        n_avail = min(U, T - 1)
-        s_ins[per_tier, :n_avail] = slow_ins_t[per_tier, :n_avail]
-        s_occ[per_tier, :n_avail] = slow_occ_t[per_tier, :n_avail]
-        s_cls[per_tier, :n_avail] = slow_cls_t[per_tier, :n_avail]
-        s_ins[merged, 0] = slow_ins_t[merged].sum(axis=1)
-        s_occ[merged, 0] = slow_occ_t[merged].sum(axis=1)
-        s_cls[merged, 0] = slow_cls_t[merged].sum(axis=1)
-        out = ladder.window(f_ins, f_occ, f_cls, s_ins, s_occ, s_cls)
+        out = None
+        if ladder is not None:
+            f_ins = ins_dev[:, :, 0].sum(axis=1)
+            f_occ = occ_dev[:, :, 0].sum(axis=1)
+            f_cls = cls_w[:, 0]
+            s_ins = np.zeros((C, U))
+            s_occ = np.zeros((C, U))
+            s_cls = np.zeros((C, U, n_ops))
+            slow_ins_t = ins_dev.sum(axis=1)[:, 1:]  # (C, T-1)
+            slow_occ_t = occ_dev.sum(axis=1)[:, 1:]
+            slow_cls_t = cls_w[:, 1:]
+            per_tier = ~merged
+            n_avail = min(U, T - 1)
+            s_ins[per_tier, :n_avail] = slow_ins_t[per_tier, :n_avail]
+            s_occ[per_tier, :n_avail] = slow_occ_t[per_tier, :n_avail]
+            s_cls[per_tier, :n_avail] = slow_cls_t[per_tier, :n_avail]
+            s_ins[merged, 0] = slow_ins_t[merged].sum(axis=1)
+            s_occ[merged, 0] = slow_occ_t[merged].sum(axis=1)
+            s_cls[merged, 0] = slow_cls_t[merged].sum(axis=1)
+            out = ladder.window(f_ins, f_occ, f_cls, s_ins, s_occ, s_cls)
 
         # Tier-addressed apply: per-tier caps/rates for the next window.
+        # (has_ctl implies the ladder exists, so ``out`` is never None here.)
         for ci in np.flatnonzero(fire & has_ctl):
             ns = int(n_slow_cell[ci])
             names = group.plans[ci].export["tier_names"][1:]
@@ -310,6 +368,64 @@ def run_fluid(
             decisions[ci].append(
                 TierDecisions(tiers=tuple(names), decisions=tuple(ds))
             )
+
+        # -- tiering pass: migrations, hotness, placements (post-fire) ----
+        if vt is not None:
+            if out is not None:
+                budgets = ladder.migration_budgets()
+                restr = np.asarray(out["restricted"], bool).copy()
+                if merged.any():
+                    # The merged law broadcasts its single decision to every
+                    # slow tier — same for its restricted bit.
+                    restr[merged] = restr[merged][:, :1]
+                has_budgets = has_ctl & ~merged
+                has_decisions = has_ctl
+            else:
+                budgets = restr = None
+                has_budgets = np.zeros(C, bool)
+                has_decisions = np.zeros(C, bool)
+            vt.step(
+                fire, ins_w, budgets, restr, has_budgets, has_decisions,
+                (k + 1) * win, tier_frac_live, effmlp_live,
+            )
+
+        # -- vectorized telemetry: window_record_jsonable-shaped dicts ----
+        # straight from the stacked per-window arrays (scalar schema: the
+        # ControlLoop record, with the tiering hook's block merged in).
+        fired_count += fire
+        for ci in np.flatnonzero(fire & record_mask):
+            has_t = vt is not None and vt.cell_act[ci]
+            if not has_ctl[ci] and not has_t:
+                continue  # scalar ControlLoop records nothing either
+            rec: dict = {
+                "window": int(fired_count[ci]),
+                "t_ns": float((k + 1) * win),
+            }
+            if has_ctl[ci]:
+                nt = int(group.n_tiers_cell[ci])
+                names = group.plans[ci].export["tier_names"]
+                rec["tiers"] = {
+                    names[t]: {
+                        "inserts": int(round(ins_dev[ci, :, t].sum())),
+                        "occupancy_time": float(occ_dev[ci, :, t].sum()),
+                        "class_counts": {
+                            op.value: int(round(cls_w[ci, t, o]))
+                            for o, op in enumerate(_OPS)
+                        },
+                    }
+                    for t in range(nt)
+                }
+                rec["decision"] = {
+                    t: _decision_jsonable(td)
+                    for t, td in decisions[ci][-1].items()
+                }
+            if has_t:
+                entry = vt.window_log[ci][-1]
+                rec["tiering"] = {
+                    key: v for key, v in entry.items()
+                    if key not in ("window", "t_ns")
+                }
+            records[ci].append(rec)
 
     # -- materialize SimResults -------------------------------------------
     results: List[SimResult] = []
@@ -353,7 +469,7 @@ def run_fluid(
             per_tier_occupancy_integral={
                 names[t]: float(occ_int_t[ci, t]) for t in range(nt)
             },
-            window_records=[],
-            tiering=None,
+            window_records=records[ci] if plan.job.record_windows else [],
+            tiering=vt.summary(ci) if vt is not None else None,
         ))
     return results

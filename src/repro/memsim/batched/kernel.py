@@ -21,6 +21,15 @@ rate λ (the fluid image of the DES's round-robin core arbitration):
 (``jax.lax.fori_loop`` inside one ``pl.pallas_call``; interpreted
 automatically off-TPU).  Both produce the same fixed point to float
 tolerance — ``tests/test_batched.py`` pins backend parity.
+
+:func:`fused_window_solve` goes further: under the pallas backend the
+fluid engine hands the *entire* per-window wait-relaxation loop (station
+scaling, global-λ Pallas bisection, queue-builder population
+accounting, Little's-law wait update — everything between routing setup
+and the control-window fire) to one jit-compiled function, so a window
+costs one device dispatch instead of ``n_outer`` python iterations of
+einsums.  That is what scales 1k+-cell grids: the python overhead per
+window becomes O(1) in cell count.
 """
 
 from __future__ import annotations
@@ -107,13 +116,9 @@ _pallas_solver = None
 _pallas_failed = False
 
 
-def _build_pallas_solver():
-    """Compile the bisection as one Pallas kernel (interpreted off-TPU)."""
-    import jax
-    import jax.numpy as jnp
-    from jax.experimental import pallas as pl
-
-    interpret = jax.default_backend() != "tpu"
+def _glam_kernel(jax, jnp):
+    """The global-λ bisection as a Pallas kernel body (shared by the
+    standalone :func:`global_lambda` backend and the fused window solver)."""
 
     def kernel(a_ref, cap_ref, ysta_ref, oeff_ref, rtor_ref, tor_ref,
                irq_ref, hi_ref, out_ref):
@@ -146,6 +151,18 @@ def _build_pallas_solver():
         lo = jnp.zeros_like(hi0)
         lo, _ = jax.lax.fori_loop(0, _BISECT_ITERS, body, (lo, hi0))
         out_ref[:] = jnp.where(feasible(hi0), jnp.inf, lo)
+
+    return kernel
+
+
+def _build_pallas_solver():
+    """Compile the bisection as one Pallas kernel (interpreted off-TPU)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    interpret = jax.default_backend() != "tpu"
+    kernel = _glam_kernel(jax, jnp)
 
     @jax.jit
     def solve(A, cap, y_sta, o_eff, r_tor, tor, irq, hi0):
@@ -213,4 +230,159 @@ def global_lambda(
             )
     return _global_lambda_numpy(
         A, cap, y_sta, o_eff, R_tor, tor_cap, irq_cap
+    )
+
+
+_fused_solvers: dict = {}
+
+
+def _build_fused_solver(n_outer: int, damp: float):
+    """Compile the whole wait-relaxation loop as one jit function.
+
+    The outer loop (``n_outer`` damped iterations), the station bisection,
+    and the global-λ Pallas bisection all run inside a single ``jax.jit``
+    trace, so the fluid engine pays one dispatch per window regardless of
+    cell count.  f32 throughout with ``1e30`` standing in for ``+inf``."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    interpret = jax.default_backend() != "tpu"
+    glam_kernel = _glam_kernel(jax, jnp)
+    big = 1e30
+
+    def glam(A, cap, y_sta, o_eff, r_tor, tor, irq):
+        hi0 = (jnp.minimum(cap, big)
+               / jnp.maximum(A, 1e-12)).max(axis=1, keepdims=True) + 1e-6
+        return pl.pallas_call(
+            glam_kernel,
+            out_shape=jax.ShapeDtypeStruct(hi0.shape, jnp.float32),
+            interpret=interpret,
+        )(A, cap, y_sta, o_eff, r_tor, tor, irq, hi0)
+
+    def station_lams(A, cap, route_svc, slots):
+        hi0 = (cap / jnp.maximum(A, 1e-12)).max(axis=1) + 1e-6  # (C,)
+        hi = jnp.broadcast_to(hi0[:, None], slots.shape)
+        lo = jnp.zeros_like(hi)
+
+        def demand(lam):
+            y = jnp.minimum(lam[:, None, :] * A[:, :, None], cap[:, :, None])
+            return (y * route_svc).sum(axis=1)
+
+        feasible_at_cap = demand(hi) <= slots + _EPS
+
+        def body(_, lo_hi):
+            lo, hi = lo_hi
+            mid = 0.5 * (lo + hi)
+            ok = demand(mid) <= slots + _EPS
+            return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+        lo, _ = jax.lax.fori_loop(0, _BISECT_ITERS, body, (lo, hi))
+        return jnp.where(feasible_at_cap, big, lo)
+
+    @jax.jit
+    def solve(A, y_rate, o_eff, route, route_svc, svc_pipe, slots, tor,
+              irq, Wq0):
+        # Mirrors the numpy relaxation in fluid.run_fluid line for line;
+        # tor/irq arrive as (C, 1) columns for in-kernel broadcasting.
+        R_base = (route * svc_pipe).sum(axis=2)
+        used = route_svc > 1e-12
+
+        def outer(_, state):
+            y, Wq, lam = state
+            r_sta = Wq[:, None, :] + svc_pipe
+            R_tor = (route * r_sta).sum(axis=2)
+            cap = jnp.minimum(y_rate, o_eff / jnp.maximum(R_tor, 1e-9))
+            cap = jnp.where(A > 0, cap, 0.0)
+            lam_s = station_lams(A, cap, route_svc, slots)
+            lam_min = jnp.where(used, lam_s[:, None, :], big).min(axis=2)
+            y_sta = jnp.minimum(lam_min, big) * jnp.maximum(A, 0.0)
+            lam = glam(A, cap, y_sta, o_eff, R_tor, tor, irq)  # (C, 1)
+            lam_b = jnp.minimum(lam, big)
+            y_free = jnp.minimum(lam_b * A, cap)
+            y = jnp.minimum(y_free, y_sta)
+            qb = (y_sta <= lam_b * A * (1.0 + 1e-9)) & (
+                y_sta < cap * (1.0 - 1e-9)
+            )
+            unc_pop = jnp.minimum(o_eff, y * R_tor)
+            share = y / jnp.maximum(y.sum(axis=1, keepdims=True), 1e-12)
+            pop_w = jnp.where(
+                qb, jnp.maximum(o_eff - irq * share, unc_pop), unc_pop
+            )
+            d_s = jnp.einsum("cw,cws->cs", y, route_svc)
+            inflow_s = jnp.einsum("cw,cws->cs", y, route)
+            util = d_s / jnp.maximum(slots, 1e-9)
+            sat = (util >= 0.98) & (slots > 0)
+            n_pop = jnp.minimum(pop_w.sum(axis=1), tor[:, 0])
+            base_pop = (y * R_base).sum(axis=1)
+            q_total = jnp.maximum(n_pop - base_pop, 0.0)
+            q_max = jnp.where(qb, jnp.maximum(pop_w - y * R_base, 0.0), 0.0)
+            q_sum = q_max.sum(axis=1)
+            scale = jnp.where(
+                q_sum > 1e-12,
+                jnp.minimum(1.0, q_total / jnp.maximum(q_sum, 1e-12)), 0.0,
+            )
+            q_w = q_max * scale[:, None]
+            w_st = jnp.where(sat[:, None, :], route_svc, 0.0)
+            w_norm = w_st.sum(axis=2, keepdims=True)
+            w_st = jnp.where(
+                w_norm > 1e-12, w_st / jnp.maximum(w_norm, 1e-12), 0.0
+            )
+            q_s = jnp.einsum("cw,cws->cs", q_w, w_st)
+            mean_svc = d_s / jnp.maximum(inflow_s, 1e-12)
+            w_new = q_s * mean_svc / jnp.maximum(slots, 1e-9)
+            w_new = jnp.where(sat, w_new, 0.0)
+            Wq = damp * Wq + (1.0 - damp) * w_new
+            return y, Wq, lam
+
+        y0 = jnp.zeros_like(A)
+        lam0 = jnp.full((A.shape[0], 1), jnp.inf, jnp.float32)
+        y, Wq, lam = jax.lax.fori_loop(
+            0, n_outer, outer, (y0, Wq0, lam0)
+        )
+        return y, Wq, lam[:, 0]
+
+    return solve
+
+
+def fused_window_solve(
+    A: np.ndarray,
+    y_rate: np.ndarray,
+    o_eff: np.ndarray,
+    route: np.ndarray,
+    route_svc: np.ndarray,
+    svc_pipe: np.ndarray,
+    slots: np.ndarray,
+    tor_cap: np.ndarray,
+    irq_cap: np.ndarray,
+    Wq: np.ndarray,
+    n_outer: int,
+    damp: float,
+) -> tuple:
+    """One jit dispatch for a window's full wait-relaxation loop.
+
+    Numpy in / numpy out: arrays go to f32 on device (``1e30`` standing in
+    for ``+inf`` rate caps) and come back float64.  Returns ``(y, Wq, lam)``
+    with ``lam`` the last iteration's global λ — ``+inf`` where the ToR
+    never fills, so ``np.isfinite(lam)`` stays the coupling test.  Raises
+    on any jax failure; the fluid engine catches once, warns, and reruns
+    the numpy loop.
+    """
+    import jax.numpy as jnp
+
+    key = (int(n_outer), float(damp))
+    solver = _fused_solvers.get(key)
+    if solver is None:
+        solver = _fused_solvers[key] = _build_fused_solver(*key)
+    big = 1e30
+    f32 = lambda x: jnp.asarray(np.minimum(x, big), jnp.float32)  # noqa: E731
+    y, wq, lam = solver(
+        f32(A), f32(y_rate), f32(o_eff), f32(route), f32(route_svc),
+        f32(svc_pipe), f32(slots), f32(tor_cap[:, None]),
+        f32(irq_cap[:, None]), f32(Wq),
+    )
+    return (
+        np.asarray(y, dtype=np.float64),
+        np.asarray(wq, dtype=np.float64),
+        np.asarray(lam, dtype=np.float64),
     )

@@ -1,19 +1,28 @@
 """Lane entry points: partition a job list, run it batched, fall back scalar.
 
-``run_sweep(jobs, lane="batched")`` lands here.  Jobs the lane can express
-run through the exact closed form (single-workload cells) or the stacked
-fluid engine; tiering hooks and ``record_windows`` traces route back
-through the ordinary scalar path (process pool included), silently and
-per job, and :func:`partition_jobs` reports the split so callers
-(:func:`repro.scenarios.planner.run_scenario`) can surface it in result
-metadata.  Fluid cells stack into one group per (window cadence, ladder
-rung table) pair — heterogeneous-rung grids still run batched, in
-separate groups — and any group that nevertheless fails to stack falls
-back to the scalar DES rather than aborting the sweep.
+``run_sweep(jobs, lane="batched")`` lands here.  The lane is *total* over
+the job grid: single-workload cells take the exact closed form, everything
+else — tiering hooks and ``record_windows`` telemetry included — stacks
+into the window-lockstep fluid engine, one group per (window cadence,
+ladder rung table) pair so heterogeneous-rung grids still run batched.
+Groups are further chunked into blocks of at most ``REPRO_BATCH_BLOCK``
+cells (default 1024) to cap the stacked arrays' memory footprint on
+10k+-cell grids.
+
+Fallbacks are the exception, not the rule: only a job whose *plan or
+stack* is genuinely inexpressible (heterogeneous per-tier rung tables in
+one cell, an unregistered tiering policy the vector twin can't replicate)
+reruns on the scalar DES — a failing group is re-stacked cell by cell so
+an unstackable cell never drags its group-mates to the scalar pool — and
+every one of them is recorded as an
+``(index, reason)`` pair, whether it fell at the static planning screen or
+at dynamic group stacking, so :func:`repro.scenarios.planner.run_scenario`
+can report the split in result metadata.
 """
 
 from __future__ import annotations
 
+import os
 from typing import List, Optional, Sequence, Tuple
 
 from repro.core.des import SimResult
@@ -23,17 +32,32 @@ from repro.memsim.batched.stacking import BatchGroup, CellPlan, plan_cell
 #:  [(job_index, reason), ...] for the fallbacks)
 Partition = Tuple[List[Optional[CellPlan]], List[Tuple[int, str]]]
 
+#: Cells per stacked fluid group — chunked execution caps peak memory
+#: (arrays scale with cells x workloads x stations, plus cells x regions x
+#: pages when tiering is stacked).
+_DEFAULT_BLOCK = 1024
+
+
+def batch_block() -> int:
+    """The configured chunk size (``REPRO_BATCH_BLOCK``, default 1024)."""
+    try:
+        return max(1, int(os.environ.get("REPRO_BATCH_BLOCK",
+                                         _DEFAULT_BLOCK)))
+    except ValueError:
+        return _DEFAULT_BLOCK
+
 
 def can_batch(job) -> Optional[str]:
     """Static screen: the fallback reason, or None when the lane applies.
 
-    The dynamic screen (ladder stacking) happens in :func:`partition_jobs`,
-    which actually builds the cell plan.
+    The lane is total over SimJob's surface — tiering and telemetry jobs
+    run batched too — so the static screen always passes; it is kept as
+    the explicit extension point for future job features the lane cannot
+    express.  The dynamic screen (plan construction, ladder/tiering
+    stacking) happens in :func:`partition_jobs` and
+    :func:`run_sweep_batched`.
     """
-    if job.tiering is not None:
-        return "tiering hook requires the scalar DES"
-    if job.record_windows:
-        return "record_windows telemetry requires the scalar DES"
+    del job
     return None
 
 
@@ -47,7 +71,7 @@ def partition_jobs(jobs: Sequence) -> Partition:
             try:
                 plans.append(plan_cell(job))
                 continue
-            except ValueError as ex:  # e.g. heterogeneous ladder rungs
+            except ValueError as ex:  # e.g. an invalid tiering region
                 reason = str(ex)
         plans.append(None)
         fallbacks.append((i, reason))
@@ -64,11 +88,14 @@ def run_sweep_batched(
     Single-workload cells take the exact closed form
     (:mod:`~repro.memsim.batched.exact`); the rest stack into window-lockstep
     fluid groups (:mod:`~repro.memsim.batched.fluid`, one group per control
-    cadence).  Fallback jobs run on the scalar lane — through the process
-    pool when ``processes`` says so.
+    cadence, chunked at :func:`batch_block` cells).  Fallback jobs run on
+    the scalar lane — through the process pool when ``processes`` says so —
+    and dynamic stacking failures are appended to the partition's fallback
+    list so callers holding it see the *complete* accounting.
     """
     from repro.memsim.batched import exact as exact_mod
     from repro.memsim.batched import fluid as fluid_mod
+    from repro.memsim.batched import tiering as tiering_mod
     from repro.memsim.sweep import run_sweep
 
     jobs = list(jobs)
@@ -89,30 +116,54 @@ def run_sweep_batched(
     # Group by window cadence (lockstep needs one shared cadence) AND by
     # ladder rung sequence (the vector ladder stacks one rung table per
     # group — cells with different MikuConfig.levels go to separate
-    # groups and still run batched).
+    # groups and still run batched), then chunk each group to cap memory.
     by_key: dict = {}
     scalar_idxs: List[int] = []
     for i, plan in fluid_cells:
         levels = tuple(plan.units[0].config.levels) if plan.units else ()
         key = (float(plan.export["window_ns"]), levels)
         by_key.setdefault(key, []).append((i, plan))
-    for _, cells in sorted(by_key.items()):
-        try:
-            # Stacking (array layout + vector-ladder build) is the part
-            # that can legitimately reject a group (e.g. a cell whose
-            # per-tier units mix rung tables).  Keep the net that narrow:
-            # a failure *running* the fluid engine is a bug and must
-            # surface, not silently rerun scalar.
-            group = BatchGroup(cells)
-            ladder = fluid_mod.build_ladder(group)
-        except ValueError:
-            scalar_idxs.extend(i for i, _ in cells)
-            continue
-        for idx, res in zip(group.indices,
-                            fluid_mod.run_fluid(group, ladder)):
-            results[idx] = res
+    def _stack(cells_):
+        # Stacking (array layout + vector ladder/tiering build) is the
+        # part that can legitimately reject a group (e.g. a cell whose
+        # per-tier units mix rung tables, or a tiering policy outside the
+        # vectorized registry).  Keep the net that narrow: a failure
+        # *running* the fluid engine is a bug and must surface, not
+        # silently rerun scalar.
+        group = BatchGroup(cells_)
+        ladder = fluid_mod.build_ladder(group)
+        tiering = tiering_mod.build_tiering(group)
+        return group, ladder, tiering
 
-    scalar_idxs.extend(i for i, _ in fallbacks)
+    block = batch_block()
+    for _, cells in sorted(by_key.items()):
+        for lo in range(0, len(cells), block):
+            chunk = cells[lo:lo + block]
+            try:
+                stacks = [_stack(chunk)]
+            except ValueError:
+                # One unstackable cell must not drag its group-mates to
+                # the scalar pool: re-stack each cell alone and fall back
+                # only the ones that genuinely cannot stack.
+                stacks = []
+                for cell in chunk:
+                    try:
+                        stacks.append(_stack([cell]))
+                    except ValueError as ex:
+                        scalar_idxs.append(cell[0])
+                        fallbacks.append(
+                            (cell[0], f"group stacking failed: {ex}")
+                        )
+            for group, ladder, tiering in stacks:
+                for idx, res in zip(
+                    group.indices,
+                    fluid_mod.run_fluid(group, ladder, tiering),
+                ):
+                    results[idx] = res
+
+    # Partition-time fallbacks (plan is None); dynamic stacking fallbacks
+    # were appended to ``scalar_idxs`` (and ``fallbacks``) above.
+    scalar_idxs.extend(i for i, plan in enumerate(plans) if plan is None)
     if scalar_idxs:
         for idx, res in zip(
             scalar_idxs,

@@ -31,18 +31,28 @@ class CellPlan:
     #: whether its decision broadcasts to every slow tier.
     units: list
     merged: bool
+    #: The job's bound :class:`~repro.tiering.hook.TieringHook` (None when
+    #: the job carries no tiering spec).  Bound to the planning sim exactly
+    #: like the scalar worker's hook, so the batched lane's vectorized twin
+    #: (:mod:`repro.memsim.batched.tiering`) stacks the *same* PageMap,
+    #: engine and policy state the scalar DES would start from.
+    tiering: object = None
 
 
 def plan_cell(job: SimJob) -> CellPlan:
     """Build the cell plan: construct (but never run) the sim, export its
     state, and instantiate the job's controller units via the calibration
-    factories."""
+    factories.  Jobs with a tiering spec build and bind their hook here —
+    the export then carries the migration pseudo-workloads (issue-gated
+    closed) and the live initial routing vectors."""
+    hook = job.tiering.build() if job.tiering is not None else None
     sim = TieredMemorySim(
         job.platform,
         job.workloads,
         seed=job.seed,
         granularity=job.granularity,
         window_ns=job.window_ns,
+        tiering=hook,
     )
     export = sim.export_state()
     units: list = []
@@ -63,7 +73,8 @@ def plan_cell(job: SimJob) -> CellPlan:
                                **job.miku_overrides)
             ctl._ensure_units(n_slow, slow_names)
             units = list(ctl.units[:n_slow])
-    return CellPlan(job=job, export=export, units=units, merged=merged)
+    return CellPlan(job=job, export=export, units=units, merged=merged,
+                    tiering=hook)
 
 
 class BatchGroup:
@@ -124,14 +135,18 @@ class BatchGroup:
                 [e["w_phases"][wi] if wi < nw else None for wi in range(W)]
             )
 
-    def window_fracs(self, t0: np.ndarray, t1: np.ndarray) -> np.ndarray:
+    def window_fracs(
+        self, t0: np.ndarray, t1: np.ndarray,
+        base: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
         """Per-window tier-routing fractions ``(C, W, T)``.
 
-        Static cells return :attr:`tier_frac`; phased workloads get the
-        time-weighted tier occupancy of their (cycled) phase schedule over
-        ``[t0, t1)`` — the fluid counterpart of the DES's mid-window
-        ``_phase_flip`` events."""
-        out = self.tier_frac.copy()
+        Static cells return ``base`` (default :attr:`tier_frac`; the fluid
+        engine passes its *live* routing array once tiering re-resolves
+        placements per window); phased workloads get the time-weighted tier
+        occupancy of their (cycled) phase schedule over ``[t0, t1)`` — the
+        fluid counterpart of the DES's mid-window ``_phase_flip`` events."""
+        out = (self.tier_frac if base is None else base).copy()
         for ci, row in enumerate(self.phases):
             for wi, seq in enumerate(row):
                 if seq is None:

@@ -12,8 +12,9 @@ seed, so serial and parallel execution are bit-identical.
 ``run_sweep(jobs, lane="batched")`` (or ``REPRO_SWEEP_LANE=batched``)
 routes the whole batch through the vectorized sweep-scale lane
 (:mod:`repro.memsim.batched`) instead: the grid advances as one stacked
-window-lockstep computation, with automatic per-job fallback to the
-scalar DES for jobs the lane cannot express.
+window-lockstep computation — tiering hooks and per-window telemetry
+included — with automatic per-job fallback to the scalar DES only for the
+rare job the lane genuinely cannot stack.
 
 MIKU controllers are *constructed inside the worker* (``miku=True``) rather
 than shipped across the pool: the controller is stateful, and a fresh,
@@ -127,8 +128,9 @@ def run_sweep(
       to the pinned goldens, fanned over the process pool.
     * ``"batched"`` — the vectorized sweep-scale lane
       (:mod:`repro.memsim.batched`): the whole grid advances as one stacked
-      window-lockstep computation; jobs the lane cannot express (tiering
-      hooks, ``record_windows``) silently fall back to the scalar DES.
+      window-lockstep computation, tiering hooks and ``record_windows``
+      telemetry included; only jobs the lane genuinely cannot stack (e.g.
+      an unregistered tiering policy) fall back to the scalar DES.
     """
     if lane is None:
         lane = default_lane()

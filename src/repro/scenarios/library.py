@@ -968,6 +968,32 @@ register(Scenario(
 ))
 
 
+register(Scenario(
+    name="corun_sweep_1k",
+    title="Kilo-cell co-run grid (1024 cells): the batched lane at scale",
+    module="",  # registry/CLI native
+    axes=(
+        _platform_axis(("A", "B")),
+        _op_axis((OpClass.LOAD, OpClass.STORE)),
+        Axis("threads", (1, 2, 3, 4, 6, 8, 12, 16),
+             help="threads per co-running group"),
+        Axis("miku", (False, True), help="enable the MIKU controller"),
+        Axis("mlp", (32, 40, 48, 56, 64, 80, 96, 112,
+                     128, 144, 160, 176, 192, 208, 224, 256),
+             help="outstanding cachelines per core"),
+        Axis("sim_ns", 100_000.0, help="co-run simulated horizon"),
+    ),
+    metrics=(
+        Metric("ddr_gbps", "GB/s", "fast-tier co-run bandwidth"),
+        Metric("cxl_gbps", "GB/s", "slow-tier co-run bandwidth"),
+        Metric("restricted_windows", "", "windows MIKU spent restricting"),
+    ),
+    build=_corun_sweep_build,
+    reduce=_corun_sweep_reduce,
+    slow=True,
+))
+
+
 # -- Tiering subsystem scenarios (repro.tiering) ------------------------------
 
 

@@ -171,15 +171,20 @@ def run_scenario(
             from repro.memsim.batched import partition_jobs, run_sweep_batched
 
             partition = partition_jobs(all_jobs)
-            plans, fallbacks = partition
-            reasons = sorted({r for _, r in fallbacks})
-            meta.update(
-                batched_jobs=sum(1 for p in plans if p is not None),
-                scalar_fallback_jobs=len(fallbacks),
-                fallback_reasons=reasons,
-            )
             results = run_sweep_batched(all_jobs, processes,
                                         partition=partition)
+            # Account fallbacks *after* the run: run_sweep_batched appends
+            # dynamic stacking failures to the partition's fallback list.
+            _, fallbacks = partition
+            reason_counts: Dict[str, int] = {}
+            for _, r in fallbacks:
+                reason_counts[r] = reason_counts.get(r, 0) + 1
+            meta.update(
+                batched_jobs=len(all_jobs) - len(fallbacks),
+                scalar_fallback_jobs=len(fallbacks),
+                fallback_reasons=sorted(reason_counts),
+                fallback_reason_counts=dict(sorted(reason_counts.items())),
+            )
         else:
             results = run_sweep(all_jobs, processes, lane=lane)
         i = 0

@@ -264,11 +264,13 @@ def test_corun3_pertier_equivalence_full_grid():
 # ---------------------------------------------------------------------------
 
 
-def test_fallback_reasons():
+def test_lane_is_total_over_tiering_and_telemetry():
+    # The lane no longer screens out tiering or record_windows jobs: every
+    # SimJob passes the static screen and runs batched.
     p = platform_a()
     traced = SimJob(platform=p, workloads=[bw_test("cxl", OpClass.LOAD, 4)],
                     sim_ns=60_000.0, record_windows=True, miku=True)
-    assert "record_windows" in can_batch(traced)
+    assert can_batch(traced) is None
     from repro.tiering import HotSetPattern, RegionSpec, TieringSpec
 
     spec = TieringSpec(
@@ -280,34 +282,80 @@ def test_fallback_reasons():
     tiering = SimJob(platform=p,
                      workloads=[bw_test("cxl", OpClass.LOAD, 4, name="cxl")],
                      sim_ns=60_000.0, tiering=spec)
-    assert "tiering" in can_batch(tiering)
+    assert can_batch(tiering) is None
     clean = SimJob(platform=p, workloads=[bw_test("cxl", OpClass.LOAD, 4)],
                    sim_ns=60_000.0)
     assert can_batch(clean) is None
 
     jobs = [clean, traced, tiering]
     plans, fallbacks = partition_jobs(jobs)
-    assert [i for i, _ in fallbacks] == [1, 2]
-    # Fallback jobs run the scalar DES — identical to the scalar lane.
-    batched = run_sweep_batched(jobs)
+    assert not fallbacks
+    assert all(pl is not None for pl in plans)
+    batched = run_sweep_batched(jobs, partition=(plans, fallbacks))
+    assert not fallbacks  # no dynamic stacking failures either
     scalar = run_sweep(jobs)
     for i in (1, 2):
         name = jobs[i].workloads[0].name
-        assert batched[i].bandwidth(name) == scalar[i].bandwidth(name)
-    assert batched[1].window_records  # the trace survived the routing
+        assert batched[i].bandwidth(name) == pytest.approx(
+            scalar[i].bandwidth(name), rel=0.05)
+    assert batched[1].window_records  # vectorized telemetry
+    assert batched[2].tiering is not None  # vectorized tiering summary
 
 
-def test_fallback_surfaces_in_result_table_meta():
+def test_dynamic_stacking_failure_is_recorded_and_runs_scalar():
+    # A tiering policy outside the vectorized registry plans fine (the
+    # scalar hook can run it) but can't stack — the group must fall back
+    # AND the partition's fallback list must say so.
+    from repro.tiering import HotSetPattern, RegionSpec, TieringSpec
+    from repro.tiering.policies import POLICIES
+
+    class FrozenPolicy:  # deliberately outside the vectorizable hierarchy
+        name = "frozen_test_policy"
+
+        def decide(self, pagemap, ctx):
+            del pagemap, ctx
+            return []
+
+    POLICIES[FrozenPolicy.name] = FrozenPolicy
+    try:
+        p = platform_a()
+        spec = TieringSpec(
+            regions=(RegionSpec(workload="cxl", n_pages=128,
+                                placement={"cxl": 1.0},
+                                pattern=HotSetPattern()),),
+            policy=FrozenPolicy.name,
+        )
+        job = SimJob(
+            platform=p,
+            workloads=[bw_test("cxl", OpClass.LOAD, 4, name="cxl")],
+            sim_ns=60_000.0, tiering=spec,
+        )
+        plans, fallbacks = partition_jobs([job])
+        assert not fallbacks  # the plan itself is fine
+        (b,) = run_sweep_batched([job], partition=(plans, fallbacks))
+        assert [i for i, _ in fallbacks] == [0]
+        assert "frozen_test_policy" in fallbacks[0][1]
+        (s,) = run_sweep([job])
+        # The fallback reran the scalar DES — identical, not approximate.
+        assert b.bandwidth("cxl") == s.bandwidth("cxl")
+        assert b.tiering == s.tiering
+    finally:
+        POLICIES.pop(FrozenPolicy.name, None)
+
+
+def test_zero_fallbacks_surface_in_result_table_meta():
     from repro.scenarios import run_scenario
 
-    # migrate_interference builds tiering jobs: the batched lane must
-    # route them (and only them) back to the scalar DES and say so.
+    # migrate_interference builds tiering jobs: the now-total batched lane
+    # runs all of them stacked and reports a clean split.
     table = run_scenario(
         "migrate_interference", {"sim_ns": 60_000.0}, lane="batched"
     )
     assert table.meta["lane"] == "batched"
-    assert table.meta["scalar_fallback_jobs"] == 2  # naive + miku variants
-    assert any("tiering" in r for r in table.meta["fallback_reasons"])
+    assert table.meta["scalar_fallback_jobs"] == 0
+    assert table.meta["batched_jobs"] == 3
+    assert table.meta["fallback_reasons"] == []
+    assert table.meta["fallback_reason_counts"] == {}
 
 
 def test_single_cell_grid_batched():
@@ -398,6 +446,30 @@ def test_env_lane_is_reported_in_meta(monkeypatch):
 # ---------------------------------------------------------------------------
 # Solver backends.
 # ---------------------------------------------------------------------------
+
+
+def test_fused_window_solver_matches_numpy_loop(monkeypatch):
+    """REPRO_BATCH_BACKEND=pallas routes the whole per-window relaxation
+    through kernel.fused_window_solve (one jit dispatch per window); the
+    results must match the numpy loop, and the loud scalar-loop fallback
+    must NOT fire (warnings are errors here)."""
+    pytest.importorskip("jax")
+    import warnings
+
+    p = platform_a()
+    jobs = [_corun_job(p, op, miku=m, sim_ns=150_000.0)
+            for op in _OPS[:2] for m in (False, True)]
+    base = run_sweep_batched(jobs)
+    monkeypatch.setenv("REPRO_BATCH_BACKEND", "pallas")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)
+        fused = run_sweep_batched(jobs)
+    for s, b in zip(base, fused):
+        for w in ("ddr", "cxl"):
+            assert b.bandwidth(w) == pytest.approx(s.bandwidth(w), rel=1e-4)
+        rs = sum(1 for d in s.decisions if d.restricted)
+        rb = sum(1 for d in b.decisions if d.restricted)
+        assert rs == rb
 
 
 def test_pallas_backend_matches_numpy():

@@ -1,0 +1,291 @@
+"""Vectorized tiering (batched lane) vs the scalar TieringHook.
+
+Three layers, strongest first:
+
+1. **Golden-input decision identity** — a recording shim captures the
+   exact per-window inputs the scalar hook consumed on the pinned
+   ``migrate_interference`` run (completed-request deltas, migration
+   budgets, restricted bits) and replays them through
+   :class:`~repro.memsim.batched.tiering.VectorTiering`.  The vector
+   twin's window log must equal ``tests/data/migrate_trace_goldens.json``
+   field for field: same state machine, different substrate.
+2. **Lane equivalence** — re-simulated (fluid) tiering grids stay within
+   the pinned bandwidth tolerance of the scalar DES, with zero lane
+   fallbacks.
+3. **Telemetry** — batched ``record_windows`` jobs emit the scalar
+   window-record schema, tiering block included, and ``--trace`` payloads
+   are schema-identical across lanes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.controller import Phase
+from repro.core.littles_law import OpClass
+from repro.memsim.batched.lane import run_sweep_batched
+from repro.memsim.batched.stacking import BatchGroup, plan_cell
+from repro.memsim.batched.tiering import build_tiering
+from repro.memsim.sweep import run_sweep
+from repro.scenarios import plan, run_scenario
+from repro.tiering.hook import TieringHook, TieringSpec
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+_GOLDEN_KEYS = ("promoted", "demoted", "enqueued", "deferred",
+                "backlog_pages", "migrated_bytes")
+
+
+# ---------------------------------------------------------------------------
+# 1. Golden-input decision identity.
+# ---------------------------------------------------------------------------
+
+
+class _RecordingHook(TieringHook):
+    """Scalar hook that records its per-window inputs before acting."""
+
+    def __init__(self, spec) -> None:
+        super().__init__(spec)
+        self.inputs = []
+
+    def on_window(self, sim):
+        completed = sim._stat_completed
+        deltas = {
+            w.name: c - m
+            for w, c, m in zip(sim.workloads, completed, self._stat_mark)
+        }
+        budgets = self._budgets(sim)
+        dec = self._latest_decisions(sim)
+        restricted = (
+            None if dec is None
+            else {t: d.phase == Phase.RESTRICTED for t, d in dec.items()}
+        )
+        self.inputs.append((
+            deltas,
+            None if budgets is None else dict(budgets),
+            restricted,
+        ))
+        return super().on_window(sim)
+
+
+class _RecordingSpec(TieringSpec):
+    """Spec whose built hooks register themselves for later inspection."""
+
+    hooks = []  # class-level: run_sweep builds the hook out of our hands
+
+    def build(self):
+        hook = _RecordingHook(self)
+        _RecordingSpec.hooks.append(hook)
+        return hook
+
+
+def _recording_copy(spec: TieringSpec) -> _RecordingSpec:
+    return _RecordingSpec(**{
+        f.name: getattr(spec, f.name) for f in dataclasses.fields(TieringSpec)
+    })
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(os.path.join(DATA, "migrate_trace_goldens.json")) as f:
+        return json.load(f)
+
+
+def test_vector_tiering_replays_goldens_exactly(golden):
+    """Fed the scalar run's own window inputs, VectorTiering's decisions
+    (promotions, demotions, deferrals, retirement accounting) must equal
+    the pinned golden traces field for field."""
+    ((_, _, jobs),) = plan("migrate_interference", golden["overrides"])
+    for variant, blob in golden["variants"].items():
+        job = jobs[blob["job"]]
+        assert job.tiering is not None, variant
+
+        # Scalar run with the recording shim: capture the exact inputs.
+        _RecordingSpec.hooks.clear()
+        rec_job = dataclasses.replace(job, tiering=_recording_copy(job.tiering))
+        run_sweep([rec_job], lane="scalar")
+        (hook,) = _RecordingSpec.hooks
+        assert len(hook.inputs) == len(blob["windows"]), variant
+
+        # Replay them through the vector twin (one-cell group).
+        group = BatchGroup([(0, plan_cell(job))])
+        vt = build_tiering(group)
+        assert vt is not None
+        w_names = group.plans[0].export["w_names"]
+        slow_names = vt.tier_names[0][1:]
+        frac_live = group.tier_frac.copy()
+        effmlp_live = group.effmlp.copy()
+        fire = np.array([True])
+        for k, (deltas, budgets, restricted) in enumerate(hook.inputs):
+            ins_w = np.array([[float(deltas.get(nm, 0)) for nm in w_names]])
+            has_b = np.array([budgets is not None])
+            has_d = np.array([restricted is not None])
+            b_row = np.array([[
+                float((budgets or {}).get(nm, 0)) for nm in slow_names
+            ]])
+            r_row = np.array([[
+                bool((restricted or {}).get(nm, False)) for nm in slow_names
+            ]])
+            vt.step(fire, ins_w, b_row, r_row, has_b, has_d,
+                    float(k + 1) * group.window_ns, frac_live, effmlp_live)
+
+        log = vt.window_log[0]
+        assert len(log) == len(blob["windows"]), variant
+        for got, want in zip(log, blob["windows"]):
+            assert got["window"] == want["window"], variant
+            for key in _GOLDEN_KEYS:
+                assert got[key] == want["tiering"][key], (
+                    variant, want["window"], key
+                )
+
+
+# ---------------------------------------------------------------------------
+# 2. Lane equivalence on re-simulated tiering grids (fluid tolerances).
+# ---------------------------------------------------------------------------
+
+
+def _worst_bandwidth_err(ts, tb, cols) -> float:
+    worst = 0.0
+    for rs, rb in zip(ts.rows, tb.rows):
+        for col in cols:
+            if rs[col]:
+                worst = max(worst, abs(rb[col] - rs[col]) / abs(rs[col]))
+    return worst
+
+
+def test_migrate_interference_lane_equivalence():
+    """Fluid vs DES on the migration-interference race, zero fallbacks.
+
+    Tolerances were measured on the scalar baselines and pinned with ~2x
+    margin.  The app's own traffic tracks closely (demand_only ≤0.5%,
+    naive/miku ddr within 5.2%); the loose column is the *migration
+    victim's* small cxl flow (15.8 vs 13.8 GB/s under miku, 12.6%) —
+    the fluid λ-collapse slightly over-starves the flow the scalar DES
+    starves through per-event FIFO arbitration.  What the grid is *for*
+    — the naive-degrades / MIKU-recovers contrast — must survive the
+    lane change exactly."""
+    ts = run_scenario("migrate_interference", {})
+    tb = run_scenario("migrate_interference", {}, lane="batched")
+    assert tb.meta["scalar_fallback_jobs"] == 0
+    assert tb.meta["fallback_reason_counts"] == {}
+    errs = {
+        (rs["variant"], col): abs(rb[col] - rs[col]) / abs(rs[col])
+        for rs, rb in zip(ts.rows, tb.rows)
+        for col in ("ddr_gbps", "cxl_gbps", "mig_gbps")
+        if rs[col]
+    }
+    # Uncontended cells are near-exact; the app's DDR lane is tight
+    # everywhere; only the starved victim's cxl flow runs loose.
+    for (variant, col), err in errs.items():
+        if variant == "demand_only":
+            assert err <= 0.02, (variant, col, err)
+        elif col == "ddr_gbps":
+            assert err <= 0.10, (variant, col, err)
+        else:
+            assert err <= 0.25, (variant, col, err)
+    # The headline result survives the lane change: naive migration
+    # degrades DDR, MIKU coordination recovers it.
+    rows = {r["variant"]: r for r in tb.rows}
+    assert rows["naive"]["ddr_pct_of_demand_only"] < 90.0
+    assert rows["miku"]["ddr_pct_of_demand_only"] > 97.0
+    assert rows["miku"]["deferred_jobs"] > 0
+
+
+def test_tiering_policies_lane_equivalence():
+    """Fluid vs DES on the hotness-tiering grid, zero fallbacks.
+
+    Static-placement rows are near-exact (measured 0.05%) — with tiering
+    quiescent the fluid equilibrium and the DES agree to numerical noise,
+    so they are pinned tight.  The hotness_lru rows mix routes mid-flight
+    (the app splits fast/slow while the migration engine loads the slow
+    tier), and there the fluid per-core-fair station allocation under
+    λ-collapse under-serves the mixed-route app (measured 45% low on
+    bandwidth).  That row is pinned at its measured error — it documents
+    a known fluid-model regime, not an acceptance bar — while the
+    *tiering mechanics* (placement convergence, migration activity) are
+    asserted to agree across lanes."""
+    ts = run_scenario("tiering_policies", {})
+    tb = run_scenario("tiering_policies", {}, lane="batched")
+    assert tb.meta["scalar_fallback_jobs"] == 0
+    for rs, rb in zip(ts.rows, tb.rows):
+        assert rb["policy"] == rs["policy"]
+        err = abs(rb["app_gbps"] - rs["app_gbps"]) / abs(rs["app_gbps"])
+        if rs["policy"] == "static":
+            assert err <= 0.02, (rs["platform"], err)
+            assert rb["pages_promoted"] == rs["pages_promoted"] == 0
+        else:
+            assert err <= 0.55, (rs["platform"], err)
+            # Both lanes converge the hot set onto the fast tier...
+            assert abs(rb["app_fast_fraction"] - rs["app_fast_fraction"]) \
+                <= 0.15, (rs["platform"],)
+            assert rb["app_fast_fraction"] > 0.6
+            # ...through comparable migration traffic (rates differ with
+            # the equilibrium, so counts match to a factor, not exactly).
+            assert rs["pages_promoted"] > 200 and rb["pages_promoted"] > 200
+            assert rb["pages_promoted"] <= 2 * rs["pages_promoted"]
+            assert rb["pages_demoted"] <= 2 * rs["pages_demoted"]
+
+
+# ---------------------------------------------------------------------------
+# 3. Telemetry: batched window records + cross-lane trace schema.
+# ---------------------------------------------------------------------------
+
+
+def test_batched_window_records_carry_migration_counters():
+    # The CI gating smoke in test form: one-cell batched tiering grid, the
+    # per-window records must carry the tiering block's migration counters.
+    table = run_scenario(
+        "migrate_interference", {"sim_ns": 60_000.0},
+        trace=True, lane="batched",
+    )
+    assert table.meta["scalar_fallback_jobs"] == 0
+    tiering_jobs = [
+        j for t in table.traces for j in t["jobs"]
+        if any("tiering" in rec for rec in j["windows"])
+    ]
+    assert tiering_jobs, "no batched job recorded a tiering block"
+    for j in tiering_jobs:
+        for rec in j["windows"]:
+            assert set(_GOLDEN_KEYS) <= set(rec["tiering"])
+    # At least one window actually retired pages on the batched lane.
+    assert any(
+        rec["tiering"]["promoted"] or rec["tiering"]["migrated_bytes"]
+        for j in tiering_jobs for rec in j["windows"]
+    )
+
+
+def test_trace_payload_schema_matches_across_lanes():
+    overrides = {"sim_ns": 60_000.0}
+    ts = run_scenario("migrate_interference", overrides, trace=True)
+    tb = run_scenario("migrate_interference", overrides, trace=True,
+                      lane="batched")
+    assert len(ts.traces) == len(tb.traces)
+    for cs, cb in zip(ts.traces, tb.traces):
+        assert cb["cell"] == cs["cell"]
+        assert len(cb["jobs"]) == len(cs["jobs"])
+        for js, jb in zip(cs["jobs"], cb["jobs"]):
+            assert jb["workloads"] == js["workloads"]
+            assert len(jb["windows"]) == len(js["windows"])
+            for rs, rb in zip(js["windows"], jb["windows"]):
+                assert set(rb) == set(rs)  # window/t_ns/tiers/decision/...
+                assert rb["window"] == rs["window"]
+                if "tiers" in rs:
+                    assert set(rb["tiers"]) == set(rs["tiers"])
+                    for tier, tc in rs["tiers"].items():
+                        assert set(rb["tiers"][tier]) == set(tc)
+                        assert (set(rb["tiers"][tier]["class_counts"])
+                                == set(tc["class_counts"]))
+                if "decision" in rs:
+                    assert set(rb["decision"]) == set(rs["decision"])
+                    for tier, d in rs["decision"].items():
+                        assert set(rb["decision"][tier]) == set(d)
+                if "tiering" in rs:
+                    assert set(rb["tiering"]) == set(rs["tiering"])
+    # The jsonable contract --trace relies on: both payloads serialize.
+    json.dumps(ts.traces)
+    json.dumps(tb.traces)
