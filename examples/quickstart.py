@@ -12,7 +12,9 @@ Next stop: ``examples/tiering_demo.py`` — the tiering layer (page-granular
 hotness tracking + a migration engine whose copies are real modeled
 ``MIGRATE`` traffic, coordinated with MIKU), and the
 ``migrate_interference`` / ``tiering_policies`` scenarios that exercise it
-from ``benchmarks/run.py``.
+from ``benchmarks/run.py``.  Then ``examples/fabric_demo.py`` — routed
+switch-fabric topologies (``repro.fabric``): spine-port congestion
+collapse and the per-edge MIKU ensemble that relieves it.
 """
 
 from repro.core.des import run_bw_test, run_corun

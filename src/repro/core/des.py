@@ -130,6 +130,11 @@ class WorkloadSpec:
     #: weighted interleaving over an N-tier platform — e.g. NUMA striping
     #: ``{"ddr": 0.5, "ddr_remote": 0.5}``.
     placement: Optional[Dict[str, float]] = None
+    #: Fabric host this workload's cores issue from — selects the
+    #: per-tier routes when the platform carries a routed fabric topology
+    #: (``PlatformModel.fabric``); default is the topology's first host.
+    #: Must be None on fabric-less platforms.
+    host: Optional[str] = None
 
     def effective_mlp(self, granularity: int = 1) -> int:
         """Outstanding *simulated requests* per core (macro-request units)."""
@@ -150,7 +155,19 @@ def validate_workloads(
     of silently landing on the CXL device.
     """
     known = platform.tier_names
+    fabric = getattr(platform, "fabric", None)
     for w in workloads:
+        if w.host is not None:
+            if fabric is None:
+                raise ValueError(
+                    f"workload {w.name!r}: host {w.host!r} set but the "
+                    "platform carries no fabric topology"
+                )
+            if w.host not in fabric.hosts:
+                raise UnknownTierError(
+                    w.host, tuple(fabric.hosts), kind="fabric host",
+                    known_desc="topology hosts",
+                )
         if w.placement is not None and w.ddr_fraction is not None:
             raise ValueError(
                 f"workload {w.name!r}: placement and ddr_fraction are "
@@ -222,6 +239,11 @@ class SimResult:
     #: Tiering-subsystem summary (pages promoted/demoted, migrated bytes,
     #: final placement fractions); None unless a tiering hook was installed.
     tiering: Optional[dict] = None
+    #: Fabric hop-station summary, keyed by link name: total backpressure
+    #: stall events, peak port-entry occupancy, and the port's entry limit
+    #: (macro-request units).  None unless the platform's fabric topology
+    #: put at least one port-bearing link on some route.
+    fabric: Optional[dict] = None
 
     def bandwidth(self, name: str) -> float:
         return self.stats[name].bandwidth_gbps(self.sim_ns)
@@ -255,6 +277,7 @@ class TieredMemorySim:
         latency_reservoir: int = LATENCY_RESERVOIR,
         record_windows: bool = False,
         tiering=None,
+        control_scope: str = "tier",
     ):
         self.platform = platform
         self.workloads = list(workloads)
@@ -296,8 +319,12 @@ class TieredMemorySim:
         self._seq = 0
         self._heap: List[Tuple[float, int]] = []
 
-        # Stations: [tier 0, ..., tier n-1, llc] slot counts, busy counts,
-        # FIFO queues of request ids.  Queue entries hold ToR slots.
+        # Stations: [tier 0, ..., tier n-1, llc, hop stations...] slot
+        # counts, busy counts, FIFO queues of request ids.  Queue entries
+        # hold ToR slots.  Hop stations (codes > the LLC) materialize the
+        # fabric topology's port-bearing links; with no fabric — or an
+        # all-transparent one — none exist and the station list is exactly
+        # the flat [tiers, llc] layout.
         self._st_slots = [d.total_slots for d in tiers] + [platform.llc_slots]
         self._st_busy = [0] * (self._n_tiers + 1)
         self._st_q: List[deque] = [deque() for _ in range(self._n_tiers + 1)]
@@ -432,6 +459,102 @@ class TieredMemorySim:
         # Device pipeline (return-flight) latency per tier.
         self._pipe = tuple(d.pipeline_ns for d in tiers)
 
+        # -- fabric (routed switch topology) ------------------------------
+        # ``platform.fabric`` is an optional FabricTopology, duck-typed so
+        # the core never imports repro.fabric.  Each port-bearing link
+        # becomes a hop station with a ToR-style entry limit; a request
+        # whose route crosses hops visits them in order *before* its
+        # device station, holding its ToR entry the whole way, and a full
+        # downstream port backpressures upstream hops head-of-line (see
+        # the ``_hop_*`` methods).  All-transparent topologies yield empty
+        # hop paths everywhere, ``_fabric_active`` stays False, and every
+        # fabric branch below is dead — bit-identical to no fabric.
+        fabric = getattr(platform, "fabric", None)
+        links = tuple(fabric.station_links) if fabric is not None else ()
+        self._fabric = fabric
+        self._link_names = tuple(l.name for l in links)
+        link0 = self._llc + 1  # first hop-station code
+        self._link0 = link0
+        n_st = link0 + len(links)
+        self._st_slots.extend(l.port_slots for l in links)
+        self._st_busy.extend(0 for _ in links)
+        self._st_q.extend(deque() for _ in links)
+        # Per-hop-station port state, indexed by station code (entries
+        # below link0 are padding).  ``_hop_occ`` counts entries held at
+        # the port (queued + in service, including completed requests
+        # stall-held by a full downstream port); ``_hop_stall`` queues
+        # (rid, upstream_station) waiters, upstream == -1 for admission
+        # stalls (the request holds only its ToR entry so far).
+        self._hop_limit = [0] * n_st
+        self._hop_occ = [0] * n_st
+        self._hop_svc = [0.0] * n_st
+        self._hop_stall: List[deque] = [deque() for _ in range(n_st)]
+        self._hop_stall_events = [0] * n_st
+        self._hop_peak_occ = [0] * n_st
+        for i, link in enumerate(links):
+            st = link0 + i
+            self._hop_limit[st] = max(1, link.queue_entries // self.granularity)
+            self._hop_svc[st] = link.service_ns
+        # Per-(workload, tier) hop paths: the tuple of hop station codes a
+        # request traverses, resolved from the workload host's routes.
+        if fabric is not None:
+            link_st = {l.name: link0 + i for i, l in enumerate(links)}
+            self._w_hops = [
+                tuple(
+                    tuple(link_st[l.name]
+                          for l in fabric.route(
+                              w.host if w.host is not None
+                              else fabric.hosts[0], t).hops)
+                    for t in self._tier_names
+                )
+                for w in self.workloads
+            ]
+        else:
+            self._w_hops = [((),) * self._n_tiers for _ in self.workloads]
+        self._fabric_active = any(
+            any(per_tier) for per_tier in self._w_hops
+        )
+        # Per-request hop state (dicts, not parallel arrays: rids recycle
+        # through the free-list and only fabric-routed requests pay).
+        self._hop_path: Dict[int, Tuple[int, ...]] = {}
+        self._hop_idx: Dict[int, int] = {}
+        self._hop_t: Dict[int, float] = {}   # hop-entry time (link edges)
+        self._dev_t: Dict[int, float] = {}   # device-entry time (dev edges)
+        self._fabric_log: List[dict] = []
+        self._n_windows = 0
+
+        # -- control scope ------------------------------------------------
+        # "tier": the classic per-slow-tier window/decision addressing.
+        # "edge": windows and decisions address *control edges* — one
+        # device edge per slow tier (named by the tier) then one link edge
+        # per port-bearing fabric link (declaration order, named by the
+        # link); see repro.fabric.control.edge_names.  With zero links the
+        # edge schedule degenerates to the slow-tier schedule and both
+        # scopes are bit-identical.
+        if control_scope not in ("tier", "edge"):
+            raise ValueError(
+                f"unknown control_scope {control_scope!r}; "
+                "expected 'tier' or 'edge'"
+            )
+        self._edge_scope = control_scope == "edge"
+        self._edge_names = tuple(self._tier_names[1:]) + self._link_names
+        self._edge_station = tuple(
+            list(range(1, self._n_tiers))
+            + list(range(link0, link0 + len(links)))
+        )
+        self._n_edges = len(self._edge_station)
+        # Per-link decision state, indexed by station code like _hop_*
+        # (written by ``apply`` under edge scope, folded into workload
+        # throttles by ``_recompute_throttle``).
+        self._link_cap: List[Optional[int]] = [None] * n_st
+        self._link_rate: List[float] = [1.0] * n_st
+        # Edge window accumulators (edge scope only): device edges meter
+        # device-side residency (_dev_t to retire), link edges meter
+        # port residency (_hop_t to hop exit).
+        self._e_ins = [0] * self._n_edges
+        self._e_occ = [0.0] * self._n_edges
+        self._e_cls = [[0] * len(_OPS) for _ in range(self._n_edges)]
+
         # Accounting: per-workload flat accumulators, materialized into
         # WorkloadStats at the end of the run.
         self.stats: Dict[str, WorkloadStats] = {
@@ -444,11 +567,17 @@ class TieredMemorySim:
         self._stat_res: List[List[float]] = [[] for _ in range(n)]
 
         # Tier counters: flat accumulators + a TierSetWindowedCounters the
-        # control loop reads per-tier TierWindow deltas from.
-        self._counters = TierSetWindowedCounters(names=self._tier_names)
+        # control loop reads per-tier TierWindow deltas from.  Under edge
+        # scope the window names are [fast tier, *edges]; device edges are
+        # named by their tier, so the degenerate (zero-link) schedule is
+        # the tier schedule and windows are bit-identical across scopes.
+        cnames = (
+            (self._tier_names[0],) + self._edge_names
+            if self._edge_scope else self._tier_names
+        )
+        self._counters = TierSetWindowedCounters(names=cnames)
         self.tier_counters = {
-            t: self._counters.tiers[i]
-            for i, t in enumerate(self._tier_names)
+            t: self._counters.tiers[i] for i, t in enumerate(cnames)
         }
         self._tc_ins = [0] * self._n_tiers
         self._tc_occ = [0.0] * self._n_tiers
@@ -554,6 +683,24 @@ class TieredMemorySim:
         }
 
     def _materialize_counters(self) -> None:
+        if self._edge_scope:
+            # [fast tier, *edges]: index 0 from the fast tier's
+            # accumulators, the rest from the edge accumulators.
+            tiers = self._counters.tiers
+            fast = tiers[0]
+            fast.inserts = self._tc_ins[0]
+            fast.occupancy_time = self._tc_occ[0]
+            cls0 = self._tc_cls[0]
+            for i, op in enumerate(_OPS):
+                fast.class_counts[op] = cls0[i]
+            for e in range(self._n_edges):
+                tc = tiers[1 + e]
+                tc.inserts = self._e_ins[e]
+                tc.occupancy_time = self._e_occ[e]
+                cls = self._e_cls[e]
+                for i, op in enumerate(_OPS):
+                    tc.class_counts[op] = cls[i]
+            return
         for code, tc in enumerate(self._counters.tiers):
             tc.inserts = self._tc_ins[code]
             tc.occupancy_time = self._tc_occ[code]
@@ -575,15 +722,33 @@ class TieredMemorySim:
         n = self._n_tiers
         if isinstance(decision, TierDecisions):
             ds = decision.decisions
-            if len(ds) != n - 1:
+            if self._edge_scope:
+                # Edge-addressed: decisions in edge-schedule order (device
+                # edges land on their tier's cap/rate, link edges on their
+                # port's — _recompute_throttle folds both per workload).
+                if len(ds) != self._n_edges:
+                    raise ValueError(
+                        f"edge-addressed decision has {len(ds)} edge(s); "
+                        f"platform has {self._n_edges} control edge(s)"
+                    )
+                for e, d in enumerate(ds):
+                    st = self._edge_station[e]
+                    if st < n:
+                        self._tier_cap[st] = d.max_concurrency
+                        self._tier_rate[st] = d.rate_factor
+                    else:
+                        self._link_cap[st] = d.max_concurrency
+                        self._link_rate[st] = d.rate_factor
+            elif len(ds) != n - 1:
                 raise ValueError(
                     f"tier-addressed decision has {len(ds)} tier(s); "
                     f"platform has {n - 1} slow tier(s)"
                 )
-            for code in range(1, n):
-                d = ds[code - 1]
-                self._tier_cap[code] = d.max_concurrency
-                self._tier_rate[code] = d.rate_factor
+            else:
+                for code in range(1, n):
+                    d = ds[code - 1]
+                    self._tier_cap[code] = d.max_concurrency
+                    self._tier_rate[code] = d.rate_factor
         else:
             for code in range(1, n):
                 self._tier_cap[code] = decision.max_concurrency
@@ -637,9 +802,130 @@ class TieredMemorySim:
             tr = self._tier_rate[c]
             if tr < rate:
                 rate = tr
+        if self._fabric_active:
+            # Fold in the link edges on this workload's routes to the
+            # touched slow tiers — a workload obeys every ladder its
+            # requests flow through (edge scope writes _link_cap/_rate;
+            # tier scope leaves them at the unrestricted defaults).
+            w_hops = self._w_hops[wi]
+            for c in codes:
+                for st in w_hops[c]:
+                    lc = self._link_cap[st]
+                    if lc is not None and (cap is None or lc < cap):
+                        cap = lc
+                    lr = self._link_rate[st]
+                    if lr < rate:
+                        rate = lr
         self._limit[wi] = cap
         self._rate[wi] = rate
         self._unthrottled[wi] = rate >= 1.0
+
+    # -- fabric hop stations --------------------------------------------------
+    # A fabric-routed request admitted to the ToR traverses its hop
+    # stations in route order before entering its tier's device station,
+    # holding its ToR entry (and IRQ-freed core slot accounting) exactly
+    # like a flat request.  Each hop has a port entry limit (_hop_limit):
+    # a request may only move onto a hop with a free entry; otherwise it
+    # *stalls in place* — at admission time holding only its ToR entry,
+    # or mid-route holding its upstream hop's server slot (head-of-line
+    # backpressure: the stalled request blocks that server until the
+    # downstream port frees an entry).
+
+    def _hop_admit(self, rid: int, hops: Tuple[int, ...]) -> None:
+        """Route a freshly-admitted request onto its first fabric hop (or
+        stall it at the ingress port, holding only its ToR entry)."""
+        self._hop_path[rid] = hops
+        first = hops[0]
+        if self._hop_occ[first] < self._hop_limit[first]:
+            self._hop_idx[rid] = 0
+            self._hop_enter(rid, first)
+        else:
+            self._hop_idx[rid] = -1  # not on the fabric yet
+            self._hop_stall[first].append((rid, -1))
+            self._hop_stall_events[first] += 1
+
+    def _hop_enter(self, rid: int, station: int) -> None:
+        """Occupy one port entry at ``station`` and start (or queue for)
+        its service; service time is the link's per-cacheline rate times
+        the request's macro granularity."""
+        occ = self._hop_occ[station] + 1
+        self._hop_occ[station] = occ
+        if occ > self._hop_peak_occ[station]:
+            self._hop_peak_occ[station] = occ
+        self._hop_t[rid] = self.now
+        self._r_station[rid] = station
+        service = self._hop_svc[station] * self._w_g[self._r_wl[rid]]
+        self._r_service[rid] = service
+        if self._st_busy[station] < self._st_slots[station]:
+            self._st_busy[station] += 1
+            self._push(self.now + service, _EV_COMPLETE, rid)
+        else:
+            self._st_q[station].append(rid)
+
+    def _hop_complete(self, rid: int, station: int) -> None:
+        """Service done at a hop: advance to the next hop or the device —
+        unless the downstream port is full, in which case the request
+        stalls holding this hop's server slot (HoL backpressure)."""
+        hops = self._hop_path[rid]
+        i = self._hop_idx[rid] + 1
+        if i < len(hops):
+            nxt = hops[i]
+            if self._hop_occ[nxt] >= self._hop_limit[nxt]:
+                self._hop_stall[nxt].append((rid, station))
+                self._hop_stall_events[nxt] += 1
+                return
+            self._hop_leave(rid, station)
+            self._hop_idx[rid] = i
+            self._hop_enter(rid, nxt)
+            return
+        # Last hop done: leave the fabric, enter the tier device station.
+        self._hop_leave(rid, station)
+        del self._hop_path[rid], self._hop_idx[rid]
+        tier = self._r_tier[rid]
+        if self._edge_scope:
+            self._dev_t[rid] = self.now
+        self._r_station[rid] = tier
+        service = self._w_svc[self._r_wl[rid]][tier]
+        self._r_service[rid] = service
+        if self._st_busy[tier] < self._st_slots[tier]:
+            self._st_busy[tier] += 1
+            self._push(self.now + service, _EV_COMPLETE, rid)
+        else:
+            self._st_q[tier].append(rid)
+
+    def _hop_leave(self, rid: int, station: int) -> None:
+        """Release the server slot and port entry at ``station`` (pulling
+        the next queued request into service) and wake stalled upstream
+        waiters into the freed entry."""
+        q = self._st_q[station]
+        if q:
+            nxt = q.popleft()
+            self._push(self.now + self._r_service[nxt], _EV_COMPLETE, nxt)
+        else:
+            self._st_busy[station] -= 1
+        self._hop_occ[station] -= 1
+        if self._edge_scope:
+            e = self._n_tiers - 1 + (station - self._link0)
+            self._e_ins[e] += 1
+            self._e_occ[e] += self.now - self._hop_t[rid]
+            self._e_cls[e][self._w_op[self._r_wl[rid]]] += 1
+        del self._hop_t[rid]
+        if self._hop_stall[station]:
+            self._hop_unstall(station)
+
+    def _hop_unstall(self, station: int) -> None:
+        """Admit stalled waiters into freed entries at ``station``; waking
+        a mid-route waiter frees its upstream slot, which can cascade
+        further unstalls up the route."""
+        stall = self._hop_stall[station]
+        while stall and self._hop_occ[station] < self._hop_limit[station]:
+            rid, upstream = stall.popleft()
+            if upstream >= 0:
+                self._hop_idx[rid] += 1
+                self._hop_leave(rid, upstream)
+            else:  # admission stall: first entry onto the fabric
+                self._hop_idx[rid] = 0
+            self._hop_enter(rid, station)
 
     # -- event plumbing -------------------------------------------------------
     def _push(self, t: float, kind: int, arg: int) -> None:
@@ -767,6 +1053,8 @@ class TieredMemorySim:
         free = self._r_free
         tier_inflight = self._tier_inflight
         llc = self._llc
+        fabric_on = self._fabric_active
+        w_hops = self._w_hops
         while irq and self.tor_used < cap:
             rid = irq.popleft()
             self.tor_used += 1
@@ -789,22 +1077,26 @@ class TieredMemorySim:
             else:
                 station = tier
                 service = svc[wi][tier]
-            r_station[rid] = station
-            r_service[rid] = service
-            if st_busy[station] < st_slots[station]:
-                st_busy[station] += 1
-                self._seq += 1
-                push(
-                    heap,
-                    (
-                        now + service,
-                        (self._seq << _SEQ_SHIFT)
-                        | (_EV_COMPLETE << _KIND_SHIFT)
-                        | rid,
-                    ),
-                )
+            if fabric_on and station != llc and w_hops[wi][tier]:
+                # Routed: traverse the fabric hops before the device.
+                self._hop_admit(rid, w_hops[wi][tier])
             else:
-                st_q[station].append(rid)
+                r_station[rid] = station
+                r_service[rid] = service
+                if st_busy[station] < st_slots[station]:
+                    st_busy[station] += 1
+                    self._seq += 1
+                    push(
+                        heap,
+                        (
+                            now + service,
+                            (self._seq << _SEQ_SHIFT)
+                            | (_EV_COMPLETE << _KIND_SHIFT)
+                            | rid,
+                        ),
+                    )
+                else:
+                    st_q[station].append(rid)
             # Refill freed IRQ space (inlined _fill_irq: identical
             # round-robin arbitration, shared pointer).
             if len(irq) < irq_cap:
@@ -876,6 +1168,13 @@ class TieredMemorySim:
             self._tc_ins[tier] += 1
             self._tc_occ[tier] += residency
             self._tc_cls[tier][self._w_op[wi]] += 1
+            if self._edge_scope and tier != _DDR:
+                # Device edge: device-side residency only (see the inlined
+                # copy in run()).
+                dres = now - self._dev_t.pop(rid, self._r_ttor[rid])
+                self._e_ins[tier - 1] += 1
+                self._e_occ[tier - 1] += dres
+                self._e_cls[tier - 1][self._w_op[wi]] += 1
         # Account workload stats.
         self._stat_completed[wi] += 1
         nbytes = self._w_bytes[wi][tier]
@@ -924,6 +1223,27 @@ class TieredMemorySim:
         # applies the decision (see ``apply``); with no controller it still
         # keeps the window cadence for the timeline flush below.
         self.control.fire()
+        self._n_windows += 1
+        if self._fabric_active and self._record_windows:
+            # Per-hop port telemetry, sampled at the window boundary.  The
+            # window index matches ControlLoop's record indexing (1-based)
+            # and is kept by the sim itself: with no controller the loop
+            # records nothing, so this log alone carries the trace.
+            self._fabric_log.append({
+                "window": self._n_windows,
+                "t_ns": self.now,
+                "links": {
+                    name: {
+                        "queued": len(self._st_q[self._link0 + i]),
+                        "in_service": self._st_busy[self._link0 + i],
+                        "occupancy": self._hop_occ[self._link0 + i],
+                        "stalled": len(self._hop_stall[self._link0 + i]),
+                        "stall_events":
+                            self._hop_stall_events[self._link0 + i],
+                    }
+                    for i, name in enumerate(self._link_names)
+                },
+            })
         if self._tiering is not None:
             # Per-window tiering pass: sample accesses into the PageMap, run
             # the migration policy, re-resolve placement vectors, gate the
@@ -987,6 +1307,11 @@ class TieredMemorySim:
         cum_of = self._w_cum
         unthrottled = self._unthrottled
         llc = self._llc
+        fabric_on = self._fabric_active
+        w_hops = self._w_hops
+        edge_on = self._edge_scope
+        e_ins, e_occ, e_cls = self._e_ins, self._e_occ, self._e_cls
+        dev_t = self._dev_t
         while heap:
             t, packed = pop(heap)
             if t > sim_ns:
@@ -1006,6 +1331,14 @@ class TieredMemorySim:
                     tc_ins[tier] += 1
                     tc_occ[tier] += residency
                     tc_cls[tier][w_op[wi]] += 1
+                    if edge_on and tier != _DDR:
+                        # Device edge: device-side residency only (from
+                        # _dev_t when the request crossed fabric hops;
+                        # falls back to full ToR residency — identical —
+                        # on hop-free routes).
+                        e_ins[tier - 1] += 1
+                        e_occ[tier - 1] += t - dev_t.pop(rid, r_ttor[rid])
+                        e_cls[tier - 1][w_op[wi]] += 1
                 stat_completed[wi] += 1
                 nbytes = w_bytes[wi][tier]
                 stat_bytes[wi] += nbytes
@@ -1048,16 +1381,20 @@ class TieredMemorySim:
                     else:
                         station = atier
                         service = svc[awi][atier]
-                    r_station[arid] = station
-                    r_service[arid] = service
-                    if st_busy[station] < st_slots[station]:
-                        st_busy[station] += 1
-                        seq = self._seq + 1
-                        self._seq = seq
-                        push(heap, (t + service,
-                                    (seq << _SEQ_SHIFT) | complete_bits | arid))
+                    if fabric_on and station != llc and w_hops[awi][atier]:
+                        self._hop_admit(arid, w_hops[awi][atier])
                     else:
-                        st_q[station].append(arid)
+                        r_station[arid] = station
+                        r_service[arid] = service
+                        if st_busy[station] < st_slots[station]:
+                            st_busy[station] += 1
+                            seq = self._seq + 1
+                            self._seq = seq
+                            push(heap,
+                                 (t + service,
+                                  (seq << _SEQ_SHIFT) | complete_bits | arid))
+                        else:
+                            st_q[station].append(arid)
                     if len(irq) < irq_cap:
                         ptr = self._rr_ptr
                         misses = 0
@@ -1116,6 +1453,11 @@ class TieredMemorySim:
                 # queued request, start the return flight ------------------
                 rid = packed & amask
                 station = r_station[rid]
+                if station > llc:
+                    # Fabric hop done: advance along the route (or stall
+                    # holding this hop's server under backpressure).
+                    self._hop_complete(rid, station)
+                    continue
                 q = st_q[station]
                 if q:
                     nxt = q.popleft()
@@ -1179,12 +1521,38 @@ class TieredMemorySim:
             tiering=(
                 self._tiering.summary() if self._tiering is not None else None
             ),
+            fabric=(
+                {
+                    name: {
+                        "stall_events":
+                            self._hop_stall_events[self._link0 + i],
+                        "peak_occupancy":
+                            self._hop_peak_occ[self._link0 + i],
+                        "entry_limit": self._hop_limit[self._link0 + i],
+                    }
+                    for i, name in enumerate(self._link_names)
+                }
+                if self._fabric_active else None
+            ),
         )
 
     def _window_records(self) -> List[dict]:
         if not self._record_windows:
             return []
         records = [window_record_jsonable(r) for r in self.control.records]
+        if self._fabric_log:
+            # Merge the per-hop port telemetry in by window index,
+            # synthesizing base records for windows the control loop never
+            # recorded (no controller — same model as the tiering merge).
+            by_idx = {r["window"]: r for r in records}
+            for entry in self._fabric_log:
+                rec = by_idx.get(entry["window"])
+                if rec is None:
+                    rec = {"window": entry["window"], "t_ns": entry["t_ns"]}
+                    by_idx[entry["window"]] = rec
+                    records.append(rec)
+                rec["fabric"] = entry["links"]
+            records.sort(key=lambda r: r["window"])
         if self._tiering is None:
             return records
         # Merge the tiering hook's per-window migration counters in by window

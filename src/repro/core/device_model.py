@@ -32,7 +32,7 @@ These reproduce the paper's observed ratios; they are inputs, not claims.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.core.littles_law import ACCESS_MIX, OpClass
 
@@ -40,15 +40,30 @@ CACHELINE = 64  # bytes
 
 
 class UnknownTierError(ValueError):
-    """A workload or lookup named a tier the platform does not have."""
+    """A workload or lookup named a tier (or link/host) its target lacks.
 
-    def __init__(self, tier: str, known: Tuple[str, ...]):
+    The message always lists every known name so a typo'd scenario fails
+    with the fix in hand.  ``kind``/``known_desc`` let the non-tier
+    namespaces that reuse this error — the transfer queue's per-link
+    accessors, the fabric topology's host/device lookups — name *their*
+    namespace instead of claiming the argument was a memory tier.
+    """
+
+    def __init__(
+        self,
+        tier: str,
+        known: Tuple[str, ...],
+        *,
+        kind: str = "memory tier",
+        known_desc: str = "platform tiers",
+    ):
         super().__init__(
-            f"unknown memory tier {tier!r}; platform tiers are "
+            f"unknown {kind} {tier!r}; {known_desc} are "
             f"{', '.join(known)}"
         )
         self.tier = tier
-        self.known = known
+        self.known = tuple(known)
+        self.kind = kind
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,6 +195,12 @@ class PlatformModel:
     llc_slots: int
     llc_capacity_mb: float
     extra_tiers: Tuple[DeviceModel, ...] = ()
+    #: Optional routed switch-fabric topology
+    #: (:class:`repro.fabric.topology.FabricTopology` — typed ``object``
+    #: here so the core never imports the fabric package).  ``None``, and
+    #: topologies whose links are all transparent, mean every tier hangs
+    #: directly off the host: the classic flat-station platform.
+    fabric: Optional[object] = None
 
     def __post_init__(self):
         # Frozen dataclass: cache the tier lookup tables once (device_for

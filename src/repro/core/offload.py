@@ -147,9 +147,15 @@ class TransferQueue:
 
     def _check_tier(self, tier: str) -> None:
         """Unknown slow-link names are a loud error (the DES already does
-        this at construction; the queue used to fall back silently)."""
+        this at construction; the queue used to fall back silently).  The
+        message names the *link* namespace — this queue's links, not the
+        platform's tiers — and lists every known link name."""
         if tier not in self.slow_tiers:
-            raise UnknownTierError(tier, ("fast", *self.slow_tiers))
+            raise UnknownTierError(
+                tier, ("fast", *self.slow_tiers),
+                kind="transfer link",
+                known_desc="this queue's links",
+            )
 
     def decision_for(self, tier: str = "slow") -> Decision:
         """The decision governing one slow link: its own tier-addressed

@@ -50,14 +50,24 @@ def batch_block() -> int:
 def can_batch(job) -> Optional[str]:
     """Static screen: the fallback reason, or None when the lane applies.
 
-    The lane is total over SimJob's surface — tiering and telemetry jobs
-    run batched too — so the static screen always passes; it is kept as
-    the explicit extension point for future job features the lane cannot
-    express.  The dynamic screen (plan construction, ladder/tiering
-    stacking) happens in :func:`partition_jobs` and
+    The lane is total over the *flat-station* SimJob surface — tiering
+    and telemetry jobs run batched too.  Fabric jobs are the exception:
+    a platform whose topology puts port-bearing links on some route (and
+    likewise the ``peredge`` control law built for such routes) needs the
+    multi-hop/backpressure scalar DES, so those jobs fall back with the
+    explicit ``"fabric_topology"`` reason — surfaced in
+    ``fallback_reason_counts`` and the stderr per-reason summary, never
+    silently.  Degenerate all-transparent topologies have no hops and
+    batch normally.  The dynamic screen (plan construction,
+    ladder/tiering stacking) happens in :func:`partition_jobs` and
     :func:`run_sweep_batched`.
     """
-    del job
+    fabric = getattr(job.platform, "fabric", None)
+    if fabric is not None and fabric.has_hops:
+        return "fabric_topology"
+    if getattr(job, "miku", False) and \
+            getattr(job, "miku_law", None) == "peredge":
+        return "fabric_topology"
     return None
 
 

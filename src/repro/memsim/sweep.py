@@ -52,8 +52,12 @@ class SimJob:
     miku: bool = False
     miku_overrides: Dict[str, float] = dataclasses.field(default_factory=dict)
     #: Which decision law ``miku=True`` builds: "pertier" (the per-slow-tier
-    #: ensemble, default) or "merged" (the explicit MergedSlowPolicy
-    #: baseline — one CXL-calibrated ladder over the folded slow deltas).
+    #: ensemble, default), "merged" (the explicit MergedSlowPolicy
+    #: baseline — one CXL-calibrated ladder over the folded slow deltas),
+    #: or "peredge" (the fabric generalization: one ladder per control
+    #: edge — device edges plus port-bearing link edges — driving the sim
+    #: with ``control_scope="edge"``; identical to "pertier" on
+    #: fabric-less platforms).
     miku_law: str = "pertier"
     #: Record per-window control telemetry into SimResult.window_records
     #: (the ``benchmarks/run.py --trace`` payload).
@@ -67,10 +71,10 @@ class SimJob:
         # than deep inside a pool worker: unknown tier names raise
         # UnknownTierError here.
         validate_workloads(self.platform, self.workloads)
-        if self.miku_law not in ("pertier", "merged"):
+        if self.miku_law not in ("pertier", "merged", "peredge"):
             raise ValueError(
                 f"unknown miku_law {self.miku_law!r}; "
-                "expected 'pertier' or 'merged'"
+                "expected 'pertier', 'merged' or 'peredge'"
             )
 
 
@@ -78,12 +82,19 @@ def run_job(job: SimJob) -> SimResult:
     """Execute one job (the worker entry point; also the serial path)."""
     controller = None
     if job.miku:
-        from repro.memsim.calibration import default_miku, merged_miku
+        if job.miku_law == "peredge":
+            from repro.fabric import peredge_miku
 
-        build = merged_miku if job.miku_law == "merged" else default_miku
-        controller = build(
-            job.platform, job.granularity, **job.miku_overrides
-        )
+            controller = peredge_miku(
+                job.platform, job.granularity, **job.miku_overrides
+            )
+        else:
+            from repro.memsim.calibration import default_miku, merged_miku
+
+            build = merged_miku if job.miku_law == "merged" else default_miku
+            controller = build(
+                job.platform, job.granularity, **job.miku_overrides
+            )
     sim = TieredMemorySim(
         job.platform,
         job.workloads,
@@ -93,6 +104,8 @@ def run_job(job: SimJob) -> SimResult:
         window_ns=job.window_ns,
         record_windows=job.record_windows,
         tiering=job.tiering.build() if job.tiering is not None else None,
+        control_scope="edge" if job.miku and job.miku_law == "peredge"
+        else "tier",
     )
     return sim.run(job.sim_ns)
 

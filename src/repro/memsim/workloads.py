@@ -20,9 +20,11 @@ def bw_test(
     llc_alloc_mb: float = 0.0,
     phases: Optional[Sequence[Tuple[float, str]]] = None,
     ddr_fraction: Optional[float] = None,
+    host: Optional[str] = None,
 ) -> WorkloadSpec:
     """lmbench-style sequential bandwidth test: ``n_threads`` cores, each a
-    1 GB non-overlapping region (WSS >> LLC, so all accesses miss)."""
+    1 GB non-overlapping region (WSS >> LLC, so all accesses miss).
+    ``host`` pins the issuing fabric host on routed-topology platforms."""
     return WorkloadSpec(
         name=name or f"bw-{tier}-{op.value}-{n_threads}t",
         op=op,
@@ -34,6 +36,7 @@ def bw_test(
         phases=phases,
         miku_managed=miku_managed,
         ddr_fraction=ddr_fraction,
+        host=host,
     )
 
 

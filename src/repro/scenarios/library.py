@@ -13,6 +13,14 @@ while CXL traffic co-runs), and ``corun3_pertier`` (per-slow-tier MIKU
 ladders vs the merged-slow broadcast law on the three-tier co-run — the
 per-tier vector contract's demonstrator: independent DDR recovery with
 *different* ladders per slow tier).
+
+Three more exercise the routed fabric layer (:mod:`repro.fabric`):
+``fabric_spine_congestion`` (two hosts share a spine downlink — racing
+collapses DDR through ToR monopolization by spine-stalled requests,
+per-edge MIKU recovers it), ``fabric_port_overflow`` (the port-queue
+limit vs ToR limit crossover behind one switch port), and ``fabric_miku``
+(asymmetric uplinks: per-tier throttling punishes the innocent host,
+per-edge throttles only the congested route).
 """
 
 from __future__ import annotations
@@ -22,6 +30,9 @@ from typing import Dict, List, Optional
 from repro.core.des import WorkloadSpec
 from repro.core.device_model import PlatformModel
 from repro.core.littles_law import DEMAND_CLASSES, OpClass
+# Importing the fabric package also registers the "A-direct"/"A-spine"
+# platforms into PLATFORMS for the benchmark CLI.
+from repro.fabric import single_switch_platform, spine_leaf_platform
 from repro.memsim.sweep import SimJob, run_sweep
 from repro.memsim.workloads import (
     alternating_bw_pair,
@@ -1220,4 +1231,233 @@ register(Scenario(
     ),
     build=_numa_build,
     reduce=_numa_reduce,
+))
+
+
+# -- Fabric scenarios (repro.fabric: routed switch topologies) ----------------
+# These scenarios carry no platform axis: each cell *builds* its platform
+# from topology knob axes via the fabric factories (importing repro.fabric
+# above also registers the named "A-direct"/"A-spine" platforms for the
+# CLI).  Fabric jobs run scalar-only — the batched lane screens them out
+# with the explicit "fabric_topology" fallback reason.
+
+_FABRIC_SIM_NS = 300_000.0
+
+
+def _fabric_spine_build(platform, cell) -> List[SimJob]:
+    del platform  # built from the topology axes, not the platform axis
+    op, n, law = cell["op"], cell["n_threads"], cell["law"]
+    pm = spine_leaf_platform(
+        spine_slots=cell["spine_slots"],
+        spine_service_ns=cell["spine_service_ns"],
+    )
+    ddr = bw_test("ddr", op, n, name="ddr", miku_managed=False,
+                  host="host0")
+    cxl0 = bw_test("cxl", op, n, name="cxl0", host="host0")
+    cxl1 = bw_test("cxl", op, n, name="cxl1", host="host1")
+    return [
+        _job(pm, [ddr], _BW_SIM_NS),
+        _job(pm, [cxl0], _BW_SIM_NS),
+        _job(pm, [ddr, cxl0, cxl1], cell["sim_ns"],
+             miku=law != "racing",
+             miku_law="peredge" if law != "racing" else "pertier"),
+    ]
+
+
+def _fabric_spine_reduce(platform, cell, jobs, results) -> List[dict]:
+    del platform, jobs
+    ddr_alone, cxl_alone, corun = results
+    fab = corun.fabric or {}
+    spine = fab.get("spine-cxl", {})
+    row = {
+        "law": cell["law"],
+        "op": cell["op"].value,
+        "ddr_alone_gbps": ddr_alone.bandwidth("ddr"),
+        "cxl_alone_gbps": cxl_alone.bandwidth("cxl0"),
+        "ddr_corun_gbps": corun.bandwidth("ddr"),
+        "cxl0_corun_gbps": corun.bandwidth("cxl0"),
+        "cxl1_corun_gbps": corun.bandwidth("cxl1"),
+        "ddr_pct_of_alone": 100.0 * corun.bandwidth("ddr")
+        / max(ddr_alone.bandwidth("ddr"), 1e-9),
+        "tor_peak": corun.tor_peak,
+        "spine_stall_events": spine.get("stall_events", 0),
+        "spine_peak_occupancy": spine.get("peak_occupancy", 0),
+    }
+    if cell["law"] == "peredge" and corun.decisions:
+        row["spine_restricted_windows"] = sum(
+            1 for d in corun.decisions
+            if d.for_tier("spine-cxl").restricted
+        )
+    else:
+        row["spine_restricted_windows"] = 0
+    return [row]
+
+
+register(Scenario(
+    name="fabric_spine_congestion",
+    title="Two hosts share a spine downlink: congestion collapse vs "
+          "per-edge MIKU recovery",
+    module="",  # registry/CLI native
+    axes=(
+        _op_axis(OpClass.LOAD),
+        Axis("law", ("racing", "peredge"),
+             help="control law: racing (no controller) or the per-edge "
+                  "ladder ensemble"),
+        Axis("n_threads", 16, help="threads per workload"),
+        Axis("spine_slots", 8, help="shared spine downlink port servers"),
+        Axis("spine_service_ns", 36.0,
+             help="spine per-cacheline service time"),
+        Axis("sim_ns", _FABRIC_SIM_NS, help="simulated horizon"),
+    ),
+    metrics=(
+        Metric("ddr_corun_gbps", "GB/s",
+               "DDR under spine-stalled CXL ToR monopolization"),
+        Metric("ddr_pct_of_alone", "%",
+               "racing collapses DDR; per-edge MIKU recovers it"),
+        Metric("spine_stall_events", "",
+               "backpressure stalls at the shared spine port"),
+        Metric("spine_restricted_windows", "",
+               "windows the spine edge ladder spent restricted"),
+    ),
+    build=_fabric_spine_build,
+    reduce=_fabric_spine_reduce,
+))
+
+
+def _fabric_port_build(platform, cell) -> List[SimJob]:
+    del platform
+    pm = single_switch_platform(
+        port_slots=cell["port_slots"],
+        port_service_ns=cell["port_service_ns"],
+        port_queue=cell["port_queue"],
+    )
+    wl = bw_test("cxl", cell["op"], cell["n_threads"], name="cxl",
+                 host="host0")
+    return [_job(pm, [wl], cell["sim_ns"])]
+
+
+def _fabric_port_reduce(platform, cell, jobs, results) -> List[dict]:
+    del platform, jobs
+    (res,) = results
+    port = (res.fabric or {}).get("sw0-cxl", {})
+    return [{
+        "op": cell["op"].value,
+        "port_queue": cell["port_queue"],
+        "cxl_gbps": res.bandwidth("cxl"),
+        "tor_peak": res.tor_peak,
+        "port_peak_occupancy": port.get("peak_occupancy", 0),
+        "port_entry_limit": port.get("entry_limit", 0),
+        "port_stall_events": port.get("stall_events", 0),
+        "port_limited": int(
+            port.get("peak_occupancy", 0) >= port.get("entry_limit", 0)
+        ),
+    }]
+
+
+register(Scenario(
+    name="fabric_port_overflow",
+    title="Port-queue limit vs ToR limit crossover behind one switch port",
+    module="",  # registry/CLI native
+    axes=(
+        _op_axis(OpClass.LOAD),
+        Axis("port_queue", (64, 256, 1024, 2048),
+             help="switch port entry limit (cachelines; ToR is 2048)"),
+        Axis("port_slots", 8, help="switch port servers"),
+        Axis("port_service_ns", 36.0,
+             help="port per-cacheline service time"),
+        Axis("n_threads", 8, help="CXL workload thread count"),
+        Axis("sim_ns", _BW_SIM_NS, help="simulated horizon"),
+    ),
+    metrics=(
+        Metric("cxl_gbps", "GB/s", "port-service-bound throughput"),
+        Metric("port_peak_occupancy", "",
+               "== entry limit while the port binds; < once the ToR does"),
+        Metric("port_stall_events", "",
+               "admission backpressure events (0 once the ToR binds)"),
+        Metric("port_limited", "", "1 while the port queue is the binding "
+               "limit, 0 past the crossover"),
+    ),
+    build=_fabric_port_build,
+    reduce=_fabric_port_reduce,
+))
+
+
+def _fabric_miku_build(platform, cell) -> List[SimJob]:
+    del platform
+    op, n, law = cell["op"], cell["n_threads"], cell["law"]
+    # Narrow uplink1 (host1) behind a wide spine: host1's CXL stream is
+    # the congestion source, host0's is innocent.
+    pm = spine_leaf_platform(
+        uplink_slots=(16, cell["narrow_slots"]),
+        uplink_service_ns=(18.0, cell["narrow_service_ns"]),
+        spine_slots=14,
+        spine_service_ns=18.0,
+    )
+    ddr = bw_test("ddr", op, n, name="ddr", miku_managed=False,
+                  host="host0")
+    cxl0 = bw_test("cxl", op, n, name="cxl0", host="host0")
+    cxl1 = bw_test("cxl", op, n, name="cxl1", host="host1")
+    return [
+        _job(pm, [cxl0], _BW_SIM_NS),
+        _job(pm, [ddr, cxl0, cxl1], cell["sim_ns"],
+             miku=law != "racing",
+             miku_law=law if law != "racing" else "pertier"),
+    ]
+
+
+def _fabric_miku_reduce(platform, cell, jobs, results) -> List[dict]:
+    del platform, jobs
+    cxl0_alone, corun = results
+    law = cell["law"]
+    row = {
+        "law": law,
+        "op": cell["op"].value,
+        "ddr_corun_gbps": corun.bandwidth("ddr"),
+        "cxl0_corun_gbps": corun.bandwidth("cxl0"),
+        "cxl1_corun_gbps": corun.bandwidth("cxl1"),
+        "cxl0_alone_gbps": cxl0_alone.bandwidth("cxl0"),
+        "cxl0_pct_of_alone": 100.0 * corun.bandwidth("cxl0")
+        / max(cxl0_alone.bandwidth("cxl0"), 1e-9),
+        "tor_peak": corun.tor_peak,
+    }
+    # Where did the restriction land: the whole cxl tier (pertier punishes
+    # the innocent host too) or just the congested uplink edge (peredge)?
+    cxl_restricted = uplink1_restricted = 0
+    for d in corun.decisions:
+        if "cxl" in d.tiers and d.for_tier("cxl").restricted:
+            cxl_restricted += 1
+        if "uplink1" in d.tiers and d.for_tier("uplink1").restricted:
+            uplink1_restricted += 1
+    row["cxl_restricted_windows"] = cxl_restricted
+    row["uplink1_restricted_windows"] = uplink1_restricted
+    return [row]
+
+
+register(Scenario(
+    name="fabric_miku",
+    title="Asymmetric uplinks: per-edge ladders throttle only the "
+          "congested route",
+    module="",  # registry/CLI native
+    axes=(
+        _op_axis(OpClass.LOAD),
+        Axis("law", ("racing", "pertier", "peredge"),
+             help="control law under asymmetric uplink congestion"),
+        Axis("n_threads", 16, help="threads per workload"),
+        Axis("narrow_slots", 4, help="host1 uplink port servers"),
+        Axis("narrow_service_ns", 36.0,
+             help="host1 uplink per-cacheline service time"),
+        Axis("sim_ns", _FABRIC_SIM_NS, help="simulated horizon"),
+    ),
+    metrics=(
+        Metric("ddr_corun_gbps", "GB/s", "fast tier held near solo"),
+        Metric("cxl0_pct_of_alone", "%",
+               "the innocent host's CXL bandwidth — pertier punishes it, "
+               "peredge spares it"),
+        Metric("cxl_restricted_windows", "",
+               "windows the whole cxl tier spent restricted"),
+        Metric("uplink1_restricted_windows", "",
+               "windows only the congested uplink spent restricted"),
+    ),
+    build=_fabric_miku_build,
+    reduce=_fabric_miku_reduce,
 ))

@@ -3,8 +3,9 @@
 Three guarantees:
 
 * every exported symbol on the public surface (``repro.scenarios``,
-  ``repro.tiering``, ``repro.memsim``, ``repro.memsim.batched``, the
-  control-plane classes) carries a docstring — public methods included;
+  ``repro.tiering``, ``repro.memsim``, ``repro.memsim.batched``,
+  ``repro.fabric``, the control-plane classes) carries a docstring —
+  public methods included;
 * the generated scenario catalog contains every registered scenario, and
   the committed ``docs/scenarios.md`` is byte-identical to a fresh
   generation (the same check CI runs — the registry cannot drift from its
@@ -28,6 +29,7 @@ _PUBLIC_MODULES = (
     "repro.tiering",
     "repro.memsim",
     "repro.memsim.batched",
+    "repro.fabric",
 )
 
 

@@ -1,0 +1,427 @@
+"""Fabric-layer contract tests (repro.fabric: routed switch topologies,
+per-hop backpressure, per-edge MIKU).
+
+Five contracts:
+
+1. **Topology validation** — malformed graphs (zero-capacity ports,
+   unreachable devices, cycles, duplicate/dangling names) fail loudly at
+   construction, with messages naming the offending node/link.
+2. **Degenerate bit-identity** — an all-transparent (direct) topology and
+   the ``peredge`` law on it reproduce the flat-station DES *exactly*:
+   identical stats, event ordering, decisions, and telemetry as the plain
+   platform under ``pertier``.  The fabric layer is a strict superset.
+3. **Backpressure physics** — a port-bearing link enforces its entry limit
+   (peak occupancy == limit, stall events > 0 while the port binds) and the
+   limit stops binding once the queue out-sizes demand.
+4. **Golden per-edge traces** — the canonical spine co-run under the
+   per-edge ensemble reproduces the recorded decision + fabric telemetry
+   trace (``tests/data/fabric_trace_goldens.json``), both replayed law-only
+   through :class:`~repro.core.substrate.ReplaySubstrate` and re-simulated
+   end to end.
+5. **Error-message regressions** — unknown fabric hosts/devices and unknown
+   transfer-queue links name their namespace and every known name.
+"""
+
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.core.controller import TierDecisions
+from repro.core.des import TieredMemorySim, validate_workloads
+from repro.core.device_model import UnknownTierError, platform_a
+from repro.core.littles_law import OpClass, TierCounters, TierWindow
+from repro.core.substrate import ControlLoop, ReplaySubstrate
+from repro.fabric import (
+    FabricTopology,
+    Link,
+    TopologyError,
+    direct,
+    direct_platform,
+    edge_names,
+    peredge_miku,
+    single_switch,
+    single_switch_platform,
+    spine_leaf,
+    spine_leaf_platform,
+)
+from repro.memsim.calibration import default_miku
+from repro.memsim.sweep import SimJob, run_job
+from repro.memsim.workloads import bw_test
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+
+# -- topology validation ------------------------------------------------------
+
+
+def test_direct_topology_is_all_transparent():
+    topo = direct(("ddr", "cxl"))
+    assert topo.hosts == ("host0",)
+    assert topo.devices == ("ddr", "cxl")
+    assert not topo.has_hops and topo.station_links == ()
+    for t in ("ddr", "cxl"):
+        assert topo.route("host0", t).hops == ()
+
+
+def test_single_switch_routes_through_one_port():
+    topo = single_switch(("ddr", "cxl"), routed=("cxl",),
+                         port_slots=8, service_ns=36.0, queue_entries=1024)
+    assert topo.route("host0", "ddr").hops == ()
+    (hop,) = topo.route("host0", "cxl").hops
+    assert hop.name == "sw0-cxl" and hop.port_slots == 8
+    assert [l.name for l in topo.station_links] == ["sw0-cxl"]
+
+
+def test_spine_leaf_shares_the_spine_port():
+    topo = spine_leaf(("ddr", "cxl"), routed=("cxl",), n_hosts=2)
+    assert topo.hosts == ("host0", "host1")
+    for h, up in (("host0", "uplink0"), ("host1", "uplink1")):
+        names = [l.name for l in topo.route(h, "cxl").hops]
+        assert names == [up, "spine-cxl"]  # shared spine downlink
+        assert topo.route(h, "ddr").hops == ()
+
+
+def test_zero_capacity_port_rejected():
+    with pytest.raises(TopologyError, match="declares a zero-capacity port"):
+        FabricTopology(
+            hosts=("host0",), devices=("cxl",),
+            links=(Link("bad", "host0", "cxl", port_slots=4,
+                        service_ns=0.0, queue_entries=0),),
+        )
+
+
+def test_unreachable_device_rejected():
+    with pytest.raises(TopologyError, match="is unreachable from host"):
+        FabricTopology(
+            hosts=("host0",), devices=("ddr", "cxl"), switches=("sw0",),
+            links=(Link("host0-ddr", "host0", "ddr"),
+                   Link("sw0-cxl", "sw0", "cxl")),  # nothing feeds sw0
+        )
+
+
+def test_cycle_rejected():
+    with pytest.raises(TopologyError, match="has a cycle through link"):
+        FabricTopology(
+            hosts=("host0",), devices=("cxl",), switches=("sw0", "sw1"),
+            links=(Link("in", "host0", "sw0"),
+                   Link("a", "sw0", "sw1"),
+                   Link("b", "sw1", "sw0"),
+                   Link("out", "sw0", "cxl")),
+        )
+
+
+def test_duplicate_and_dangling_names_rejected():
+    with pytest.raises(TopologyError):
+        FabricTopology(hosts=("host0", "host0"), devices=("cxl",),
+                       links=(Link("l", "host0", "cxl"),))
+    with pytest.raises(TopologyError):
+        FabricTopology(hosts=("host0",), devices=("cxl",),
+                       links=(Link("l", "host0", "nowhere"),))
+
+
+def test_unknown_fabric_host_and_device_messages():
+    topo = spine_leaf(("ddr", "cxl"), routed=("cxl",))
+    with pytest.raises(UnknownTierError, match="fabric host") as ei:
+        topo.route("host9", "cxl")
+    assert "topology hosts" in str(ei.value)
+    assert "host0" in str(ei.value) and "host1" in str(ei.value)
+    with pytest.raises(UnknownTierError, match="fabric device") as ei:
+        topo.route("host0", "pmem")
+    assert "topology devices" in str(ei.value)
+
+
+def test_validate_workloads_checks_hosts():
+    pm = spine_leaf_platform()
+    validate_workloads(pm, [bw_test("cxl", OpClass.LOAD, 2, host="host1")])
+    with pytest.raises(UnknownTierError, match="topology hosts"):
+        validate_workloads(pm, [bw_test("cxl", OpClass.LOAD, 2,
+                                        host="host7")])
+    with pytest.raises(ValueError, match="no fabric topology"):
+        validate_workloads(platform_a(),
+                           [bw_test("cxl", OpClass.LOAD, 2, host="host0")])
+
+
+def test_transfer_queue_unknown_link_message():
+    from repro.core.offload import TransferQueue
+
+    q = TransferQueue()
+    with pytest.raises(UnknownTierError, match="transfer link") as ei:
+        q.slow_inflight("warp_drive")
+    msg = str(ei.value)
+    assert "this queue's links" in msg and "fast" in msg and "slow" in msg
+
+
+# -- degenerate bit-identity --------------------------------------------------
+
+
+def _run_pair(op, n_threads, seed, sim_ns=120_000.0):
+    """The same co-run on the plain platform (pertier) and on its direct
+    fabric twin (peredge, host-pinned): every observable must match."""
+    plain, fab = platform_a(), direct_platform()
+    out = []
+    for pm, law, host in ((plain, "pertier", None), (fab, "peredge", "host0")):
+        wls = [bw_test("ddr", op, n_threads, name="ddr",
+                       miku_managed=False, host=host),
+               bw_test("cxl", op, n_threads, name="cxl", host=host)]
+        ctl = (peredge_miku(pm, 4) if law == "peredge"
+               else default_miku(pm, 4))
+        sim = TieredMemorySim(pm, wls, seed=seed, granularity=4,
+                              controller=ctl, window_ns=10_000.0,
+                              record_windows=True,
+                              control_scope="edge" if law == "peredge"
+                              else "tier")
+        out.append(sim.run(sim_ns))
+    return out
+
+
+def _assert_bit_identical(plain, fab):
+    assert fab.fabric is None  # no port-bearing links -> no hop stations
+    for name in plain.stats:
+        p, f = plain.stats[name], fab.stats[name]
+        assert (p.completed, p.bytes, p.latency_sum, p.latency_count) == \
+            (f.completed, f.bytes, f.latency_sum, f.latency_count), name
+    assert plain.tor_peak == fab.tor_peak
+    assert plain.tor_occupancy_integral == fab.tor_occupancy_integral
+    assert plain.tor_inserts == fab.tor_inserts
+    assert plain.per_tier_occupancy_integral == \
+        fab.per_tier_occupancy_integral
+    assert len(plain.decisions) == len(fab.decisions)
+    for dp, df in zip(plain.decisions, fab.decisions):
+        assert dp.tiers == df.tiers == ("cxl",)  # edge set degenerates
+        assert (dp.for_tier("cxl").max_concurrency,
+                dp.for_tier("cxl").rate_factor,
+                dp.for_tier("cxl").phase) == \
+            (df.for_tier("cxl").max_concurrency,
+             df.for_tier("cxl").rate_factor,
+             df.for_tier("cxl").phase)
+
+
+def test_direct_fabric_is_bit_identical_to_flat_stations():
+    """An all-transparent topology compiles to zero hop stations: the DES
+    must produce the *identical* event chain — stats, ToR telemetry,
+    decision sequence — as the fabric-less platform it wraps."""
+    plain, fab = _run_pair(OpClass.LOAD, 8, seed=0)
+    _assert_bit_identical(plain, fab)
+    # window records match too (decision telemetry, window for window)
+    assert len(plain.window_records) == len(fab.window_records)
+    for rp, rf in zip(plain.window_records, fab.window_records):
+        assert rp == rf
+
+
+@pytest.mark.parametrize("op,n,seed", [
+    (OpClass.STORE, 4, 1),
+    (OpClass.NT_STORE, 16, 2),
+    (OpClass.LOAD, 2, 3),
+])
+def test_direct_fabric_bit_identity_across_seeds(op, n, seed):
+    plain, fab = _run_pair(op, n, seed, sim_ns=60_000.0)
+    _assert_bit_identical(plain, fab)
+
+
+def test_peredge_degenerates_to_pertier_on_linkless_platform():
+    """On a platform whose fabric has no port-bearing links, the per-edge
+    ensemble *is* the per-tier ensemble: same edges, same calibration,
+    same decisions on identical windows."""
+    pm = direct_platform()
+    assert edge_names(pm) == ("cxl",)
+    per_edge, per_tier = peredge_miku(pm, 4), default_miku(platform_a(), 4)
+    fast, slow = TierCounters(), TierCounters()
+    for _ in range(50):
+        fast.record(OpClass.LOAD, 100.0)
+        slow.record(OpClass.LOAD, 5000.0)
+    win = TierWindow((fast, slow), ("ddr", "cxl"))
+    de = per_edge.window(win)
+    dt = per_tier.window(win)
+    assert isinstance(de, TierDecisions) and de.tiers == dt.tiers == ("cxl",)
+    assert (de.for_tier("cxl").max_concurrency,
+            de.for_tier("cxl").rate_factor) == \
+        (dt.for_tier("cxl").max_concurrency, dt.for_tier("cxl").rate_factor)
+
+
+def test_hypothesis_one_hop_routes_match_flat_chain():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(op=st.sampled_from(list(OpClass)),
+           n=st.integers(1, 12), seed=st.integers(0, 2**16))
+    @settings(max_examples=5, deadline=None)
+    def prop(op, n, seed):
+        plain, fab = _run_pair(op, n, seed, sim_ns=40_000.0)
+        _assert_bit_identical(plain, fab)
+
+    prop()
+
+
+# -- backpressure physics -----------------------------------------------------
+
+
+def _port_job(port_queue, n_threads=8):
+    pm = single_switch_platform(port_slots=8, port_service_ns=36.0,
+                                port_queue=port_queue)
+    wl = bw_test("cxl", OpClass.LOAD, n_threads, name="cxl", host="host0")
+    return SimJob(platform=pm, workloads=[wl], sim_ns=120_000.0, seed=0)
+
+
+def test_port_entry_limit_binds_and_releases():
+    tight = run_job(_port_job(64))
+    port = tight.fabric["sw0-cxl"]
+    assert port["entry_limit"] == 64 // 4  # macro-request granularity
+    assert port["peak_occupancy"] == port["entry_limit"]  # limit binds
+    assert port["stall_events"] > 0  # head-of-line backpressure fired
+    roomy = run_job(_port_job(2048))
+    port = roomy.fabric["sw0-cxl"]
+    assert port["peak_occupancy"] < port["entry_limit"]  # ToR binds instead
+    assert port["stall_events"] == 0
+    # the port was the bottleneck: relieving it raises delivered bandwidth
+    assert roomy.bandwidth("cxl") >= tight.bandwidth("cxl")
+
+
+def test_fabric_summary_only_on_port_bearing_routes():
+    res = run_job(SimJob(platform=direct_platform(),
+                         workloads=[bw_test("cxl", OpClass.LOAD, 2,
+                                            name="cxl", host="host0")],
+                         sim_ns=40_000.0))
+    assert res.fabric is None
+
+
+# -- batched-lane fallback (explicit, never silent) ---------------------------
+
+
+def test_batched_lane_falls_back_on_fabric_jobs():
+    from repro.memsim.batched.lane import can_batch, partition_jobs
+    from repro.memsim.sweep import run_sweep
+
+    fab_job = _port_job(1024)
+    assert can_batch(fab_job) == "fabric_topology"
+    # peredge law alone (even on a hopless platform) routes scalar too
+    edge_job = SimJob(platform=direct_platform(),
+                      workloads=[bw_test("cxl", OpClass.LOAD, 2, name="cxl")],
+                      sim_ns=40_000.0, miku=True, miku_law="peredge")
+    assert can_batch(edge_job) == "fabric_topology"
+    plans, fallbacks = partition_jobs([fab_job, edge_job])
+    assert plans == [None, None]
+    assert [r for _, r in fallbacks] == ["fabric_topology"] * 2
+    # ...and the lane still returns correct results via the scalar path
+    batched = run_sweep([fab_job], lane="batched")[0]
+    scalar = run_sweep([fab_job], lane="scalar")[0]
+    assert batched.fabric == scalar.fabric
+    assert batched.bandwidth("cxl") == scalar.bandwidth("cxl")
+
+
+# -- golden per-edge decision + telemetry trace -------------------------------
+
+
+def _load_fabric_golden():
+    with open(os.path.join(DATA, "fabric_trace_goldens.json")) as f:
+        return json.load(f)
+
+
+def _counters(d):
+    return TierCounters(
+        inserts=d["inserts"],
+        occupancy_time=d["occupancy_time"],
+        class_counts={OpClass(k): v for k, v in d["class_counts"].items()},
+    )
+
+
+def _assert_edge_decisions_match(decisions, golden_windows, names):
+    assert len(decisions) == len(golden_windows)
+    for i, (d, w) in enumerate(zip(decisions, golden_windows)):
+        assert isinstance(d, TierDecisions) and d.tiers == names, i
+        for e in names:
+            de, ge = d.for_tier(e), w["decision"][e]
+            assert de.max_concurrency == ge["max_concurrency"], (i, e)
+            assert de.rate_factor == ge["rate_factor"], (i, e)
+            assert de.phase.value == ge["phase"], (i, e)
+
+
+def test_replayed_fabric_trace_reproduces_golden_decisions():
+    blob = _load_fabric_golden()
+    cnames = tuple(blob["counter_names"])
+    edges = tuple(blob["edge_names"])
+    deltas = [
+        TierWindow(tuple(_counters(w["tiers"][n]) for n in cnames), cnames)
+        for w in blob["windows"]
+    ]
+    sub = ReplaySubstrate(deltas)
+    loop = ControlLoop(sub, peredge_miku(spine_leaf_platform(), 4),
+                       window_ns=1.0)
+    while not sub.exhausted:
+        loop.fire()
+    _assert_edge_decisions_match(loop.decisions, blob["windows"], edges)
+
+
+def test_live_spine_corun_reproduces_golden_trace():
+    """End to end: the canonical spine co-run re-simulated under the
+    per-edge ensemble emits the recorded decision sequence, window
+    telemetry (fabric blocks included), and fabric summary."""
+    blob = _load_fabric_golden()
+    pm = spine_leaf_platform()
+    assert pm.name == blob["platform"]
+    op, n = OpClass(blob["op"]), blob["n_threads"]
+    wls = [bw_test("ddr", op, n, name="ddr", miku_managed=False,
+                   host="host0"),
+           bw_test("cxl", op, n, name="cxl0", host="host0"),
+           bw_test("cxl", op, n, name="cxl1", host="host1")]
+    sim = TieredMemorySim(pm, wls, seed=0, granularity=4,
+                          controller=peredge_miku(pm, 4),
+                          window_ns=blob["window_ns"], record_windows=True,
+                          control_scope="edge")
+    res = sim.run(blob["sim_ns"])
+    _assert_edge_decisions_match(res.decisions, blob["windows"],
+                                 tuple(blob["edge_names"]))
+    assert res.fabric == blob["fabric"]
+    assert res.window_records == blob["windows"]
+    for name, bw in blob["bandwidths"].items():
+        assert res.bandwidth(name) == pytest.approx(bw, rel=1e-12)
+
+
+def test_golden_spine_trace_shows_congestion_and_relief():
+    """The pinned trace itself demonstrates the physics: the shared spine
+    port saturates (peak == limit, stalls), the per-edge ladder restricts
+    the congested *link* edges — tightest on the spine — while the CXL
+    *device* edge (healthy once the fabric is throttled) stays open."""
+    blob = _load_fabric_golden()
+    spine = blob["fabric"]["spine-cxl"]
+    assert spine["peak_occupancy"] == spine["entry_limit"]
+    assert spine["stall_events"] > 0
+
+    def restricted(e):
+        return sum(1 for w in blob["windows"]
+                   if w["decision"][e]["phase"] == "restricted")
+
+    def mean_cap(e, top=16.0):
+        caps = [w["decision"][e]["max_concurrency"] for w in blob["windows"]]
+        return sum(top if c is None else c for c in caps) / len(caps)
+
+    n = len(blob["windows"])
+    assert restricted("spine-cxl") == n  # the congested edge, every window
+    assert restricted("cxl") == 0  # the device edge is not the problem
+    assert mean_cap("spine-cxl") < mean_cap("uplink0")  # tightest at spine
+    assert mean_cap("spine-cxl") < mean_cap("cxl")
+    # per-window fabric telemetry is present and well-formed
+    for w in blob["windows"]:
+        assert set(w["fabric"]) == {"uplink0", "uplink1", "spine-cxl"}
+        for entry in w["fabric"].values():
+            assert set(entry) == {"queued", "in_service", "occupancy",
+                                  "stalled", "stall_events"}
+
+
+# -- scenario acceptance ------------------------------------------------------
+
+
+def test_fabric_spine_congestion_scenario_acceptance():
+    """CLI-runnable demonstrator: racing collapses DDR via ToR
+    monopolization by spine-stalled requests; the per-edge ladder on the
+    spine edge recovers it."""
+    from repro.scenarios import run_scenario
+
+    table = run_scenario("fabric_spine_congestion", {})
+    rows = {r["law"]: r for r in table.rows}
+    racing, peredge = rows["racing"], rows["peredge"]
+    assert racing["ddr_pct_of_alone"] < 10.0  # congestion collapse
+    assert peredge["ddr_pct_of_alone"] > 60.0  # per-edge MIKU relief
+    assert peredge["spine_restricted_windows"] > 0
+    assert racing["spine_stall_events"] > peredge["spine_stall_events"]
