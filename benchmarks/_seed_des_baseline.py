@@ -46,7 +46,7 @@ import dataclasses
 import heapq
 import random
 from collections import deque
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.controller import Decision, MikuController
 from repro.core.device_model import DeviceModel, PlatformModel

@@ -3,7 +3,7 @@ steps on the serving engine; the one non-DES figure)."""
 
 from repro.scenarios import run_scenario
 
-from benchmarks.common import Row, timed
+from benchmarks.common import timed
 
 
 def run() -> list:

@@ -2,7 +2,7 @@
 
 from repro.scenarios import run_scenario
 
-from benchmarks.common import Row, timed
+from benchmarks.common import timed
 
 
 def run() -> list:

@@ -6,7 +6,7 @@ from repro.core.littles_law import OpClass
 from repro.core.mva import analyze
 from repro.scenarios import run_scenario
 
-from benchmarks.common import Row, timed
+from benchmarks.common import timed
 
 
 def run() -> list:

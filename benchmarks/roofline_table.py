@@ -14,9 +14,8 @@ from typing import Optional
 
 from repro.configs import SHAPES, get_arch
 from repro.roofline.analysis import V5E, model_flops
-from repro.roofline.hlo_costs import HloCost
 
-from benchmarks.common import Row, timed
+from benchmarks.common import Row
 
 _DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
                              "dryrun_baseline.json")

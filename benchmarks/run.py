@@ -101,9 +101,20 @@ def _run_scenario(name: str, set_args: list, fmt: str, jobs: int,
                   trace: str = "", lane: str = "") -> None:
     import json
 
-    from repro.scenarios import get, parse_set_args, run_scenario
+    from repro.scenarios import (
+        UnknownScenarioError,
+        get,
+        parse_set_args,
+        run_scenario,
+    )
 
-    sc = get(name)
+    try:
+        sc = get(name)
+    except UnknownScenarioError as ex:
+        # Typos exit non-zero with near-miss suggestions instead of a
+        # traceback (the message lists every registered name too).
+        print(f"error: {ex}", file=sys.stderr)
+        sys.exit(2)
     overrides = parse_set_args(sc, set_args)
     table = run_scenario(sc, overrides, processes=jobs if jobs > 1 else None,
                          trace=bool(trace), lane=lane or None)
@@ -170,7 +181,19 @@ def main() -> None:
                     help="with --scenario: sweep execution lane (batched = "
                          "vectorized repro.memsim.batched; inexpressible "
                          "jobs fall back to the scalar DES)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run with the runtime sanitizer "
+                         "(repro.analysis): per-window invariant checks "
+                         "on every simulation; violations raise.  Forces "
+                         "the scalar DES.  Equivalent to REPRO_SANITIZE=1.")
     args = ap.parse_args()
+
+    if args.sanitize:
+        # The env switch (not a SimJob field) so every sim in the process —
+        # scenario sweeps, figure modules, TransferQueue benchmarks — is
+        # sanitized, including ones built in pool workers, which inherit
+        # the environment.
+        os.environ["REPRO_SANITIZE"] = "1"
 
     if args.list_scenarios:
         if args.format == "json":

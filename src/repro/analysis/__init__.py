@@ -1,0 +1,28 @@
+"""repro.analysis — the two-pass correctness-tooling subsystem.
+
+Pass 1 (:mod:`repro.analysis.lint`) is a repo-specific AST lint run as
+``python -m repro.analysis lint``; pass 2 (:mod:`repro.analysis.sanitizer`)
+is the runtime simulation sanitizer enabled per job
+(``SimJob(sanitize=True)``), per sim (``TieredMemorySim(...,
+sanitize=True)``), or process-wide (``REPRO_SANITIZE=1``; ``=record`` to
+accumulate violations instead of raising).  See ``docs/analysis.md``.
+"""
+
+from repro.core.invariants import (
+    InvariantViolation,
+    require,
+    sanitize_enabled,
+)
+
+from repro.analysis.lint import Finding, run_lint
+from repro.analysis.sanitizer import DesSanitizer, QueueSanitizer
+
+__all__ = [
+    "DesSanitizer",
+    "Finding",
+    "InvariantViolation",
+    "QueueSanitizer",
+    "require",
+    "run_lint",
+    "sanitize_enabled",
+]

@@ -61,9 +61,9 @@ from repro.core.littles_law import (
     OpClass,
     TierCounters,
     TierEstimate,
-    TierWindow,
     merge_tier_counters,
 )
+from repro.core.invariants import require
 
 
 class Phase(enum.Enum):
@@ -774,7 +774,7 @@ class VectorMikuLadder:
             "valid": valid,
         }
 
-    def migration_budgets(self) -> "Any":
+    def migration_budgets(self) -> Any:
         """Per-(cell, unit) migration budgets from the current ladder state —
         the vectorized twin of :meth:`SlowTierMiku.migration_budget`: the
         MIGRATE class cap while unrestricted, zero once fine-grained rate
@@ -834,7 +834,13 @@ class StragglerGovernor:
         self._rate = [1.0] * n_hosts
 
     def window(self, step_times: Sequence[float]) -> list:
-        assert len(step_times) == self.n_hosts
+        require(
+            len(step_times) == self.n_hosts,
+            "host-count",
+            "one step time per host required",
+            expected=self.n_hosts,
+            got=len(step_times),
+        )
         for h, t in enumerate(step_times):
             if t <= 0:  # host missed the window entirely: worst signal
                 self._bad_windows[h] += 1

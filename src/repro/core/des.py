@@ -54,11 +54,8 @@ from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.controller import Decision, MikuController, TierDecisions
-from repro.core.device_model import (
-    DeviceModel,
-    PlatformModel,
-    UnknownTierError,
-)
+from repro.core.device_model import PlatformModel, UnknownTierError
+from repro.core.invariants import InvariantViolation, sanitize_enabled
 from repro.core.littles_law import OpClass, TierCounters, TierWindow
 from repro.core.substrate import (
     ControlLoop,
@@ -244,6 +241,10 @@ class SimResult:
     #: (macro-request units).  None unless the platform's fabric topology
     #: put at least one port-bearing link on some route.
     fabric: Optional[dict] = None
+    #: Runtime-sanitizer summary (windows checked, per-tier admission/retire
+    #: counters, recorded violations); None unless the sim ran with
+    #: ``sanitize`` enabled (see :mod:`repro.analysis.sanitizer`).
+    sanitizer: Optional[dict] = None
 
     def bandwidth(self, name: str) -> float:
         return self.stats[name].bandwidth_gbps(self.sim_ns)
@@ -278,6 +279,7 @@ class TieredMemorySim:
         record_windows: bool = False,
         tiering=None,
         control_scope: str = "tier",
+        sanitize=None,
     ):
         self.platform = platform
         self.workloads = list(workloads)
@@ -596,6 +598,25 @@ class TieredMemorySim:
         self._timeline_bucket_ns = window_ns
         self._timeline_acc = [0.0] * n
         self._timeline_next = self._timeline_bucket_ns
+
+        # -- runtime sanitizer --------------------------------------------
+        # ``sanitize``: None consults REPRO_SANITIZE; True / "raise" checks
+        # every window and raises structured InvariantViolations; "record"
+        # accumulates them into SimResult.sanitizer instead.  The sanitizer
+        # lives in repro.analysis (imported lazily: the core never depends
+        # on the analysis layer unless a sim actually asks for checking).
+        if sanitize is None:
+            sanitize = sanitize_enabled()
+        if sanitize:
+            from repro.analysis.sanitizer import DesSanitizer
+
+            mode = sanitize if isinstance(sanitize, str) else "raise"
+            self._san: Optional[DesSanitizer] = DesSanitizer(
+                self._n_tiers, mode=mode
+            )
+            self._counters.attach_sanitizer(self._san.check_counter_deltas)
+        else:
+            self._san = None
 
         if tiering is not None:
             tiering.bind(self)
@@ -1055,6 +1076,7 @@ class TieredMemorySim:
         llc = self._llc
         fabric_on = self._fabric_active
         w_hops = self._w_hops
+        san = self._san
         while irq and self.tor_used < cap:
             rid = irq.popleft()
             self.tor_used += 1
@@ -1063,6 +1085,8 @@ class TieredMemorySim:
             self.tor_inserts += 1
             tier = r_tier[rid]
             tier_inflight[tier] += 1
+            if san is not None:
+                san.adm[tier] += 1
             r_ttor[rid] = now
             # Route (inlined): sync → LLC bounce; else LLC lottery, else
             # the tier device.
@@ -1161,6 +1185,8 @@ class TieredMemorySim:
         self.tor_used -= 1
         tier = self._r_tier[rid]
         self._tier_inflight[tier] -= 1
+        if self._san is not None:
+            self._san.ret[tier] += 1
         wi = self._r_wl[rid]
         residency = now - self._r_ttor[rid]
         self._occ_tier[tier] += residency
@@ -1210,7 +1236,17 @@ class TieredMemorySim:
 
     def _phase_flip(self, wi: int) -> None:
         seq = self._phase_seq[wi]
-        assert seq is not None
+        if seq is None:
+            # Structured (python -O-proof) replacement for the old assert:
+            # a phase event for a schedule-less workload is a corrupted
+            # event stream.
+            raise InvariantViolation(
+                "phase-schedule",
+                f"phase-flip event for workload "
+                f"{self.workloads[wi].name!r}, which has no phase schedule",
+                window=self._n_windows + 1,
+                context={"workload": wi},
+            )
         self._phase_idx[wi] = (self._phase_idx[wi] + 1) % len(seq)
         dur, tier_code = seq[self._phase_idx[wi]]
         self._phase_tier[wi] = tier_code
@@ -1219,6 +1255,13 @@ class TieredMemorySim:
         self._refill_issue(wi)
 
     def _window(self) -> None:
+        # Sanitizer pass first: the window boundary is the quiescent point
+        # where every conservation identity must hold exactly (and where
+        # fault-injection mutations land).  The control loop's ``fire``
+        # may legitimately skip counters_delta (no controller), so the
+        # counter checks live here, not only in the delta hook.
+        if self._san is not None:
+            self._san.on_window(self, self._n_windows + 1)
         # The control loop consumes counter deltas, runs the controller, and
         # applies the decision (see ``apply``); with no controller it still
         # keeps the window cadence for the timeline flush below.
@@ -1312,6 +1355,11 @@ class TieredMemorySim:
         edge_on = self._edge_scope
         e_ins, e_occ, e_cls = self._e_ins, self._e_occ, self._e_cls
         dev_t = self._dev_t
+        # Sanitizer binding: None-guarded on the retire / admission paths
+        # only, so the un-sanitized hot path pays one pointer compare per
+        # request transition, nothing per event (the event-order check
+        # scans the pending heap at window boundaries instead).
+        san = self._san
         while heap:
             t, packed = pop(heap)
             if t > sim_ns:
@@ -1324,6 +1372,8 @@ class TieredMemorySim:
                 tor_used = self.tor_used - 1
                 tier = r_tier[rid]
                 tier_inflight[tier] -= 1
+                if san is not None:
+                    san.ret[tier] += 1
                 wi = r_wl[rid]
                 residency = t - r_ttor[rid]
                 occ_tier[tier] += residency
@@ -1369,6 +1419,8 @@ class TieredMemorySim:
                     self.tor_inserts += 1
                     atier = r_tier[arid]
                     tier_inflight[atier] += 1
+                    if san is not None:
+                        san.adm[atier] += 1
                     r_ttor[arid] = t
                     awi = r_wl[arid]
                     p = phit[awi]
@@ -1496,6 +1548,8 @@ class TieredMemorySim:
             if rid not in dead:
                 occ_tier[r_tier[rid]] += sim_ns - r_ttor[rid]
         self.tor_occupancy_integral = sum(occ_tier)
+        if san is not None:
+            san.check_final(self)
         self._materialize_counters()
         # Materialize flat accumulators into the public WorkloadStats.
         for wi, w in enumerate(self.workloads):
@@ -1533,6 +1587,9 @@ class TieredMemorySim:
                     for i, name in enumerate(self._link_names)
                 }
                 if self._fabric_active else None
+            ),
+            sanitizer=(
+                self._san.summary(self) if self._san is not None else None
             ),
         )
 

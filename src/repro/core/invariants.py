@@ -1,0 +1,93 @@
+"""Structured invariant errors for the simulation sanitizer layer.
+
+This is the one leaf module both the core engines and the analysis
+subsystem share: :class:`InvariantViolation` is what every sanitizer check
+raises (carrying the window index and station/link context the golden
+tests never surface), and :func:`require` replaces bare ``assert``
+statements on correctness-critical paths — unlike ``assert``, it survives
+``python -O``.
+
+The module deliberately imports nothing from the rest of the package so
+``repro.core`` never gains a dependency on ``repro.analysis``; the
+analysis package re-exports these names.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+
+class InvariantViolation(RuntimeError):
+    """A mechanically-checked simulation invariant failed.
+
+    Attributes carry the context a raw assert loses: which named check
+    fired (``check``), at which control window (``window``), at which
+    station/link (``station``), plus free-form key/value context.
+    """
+
+    def __init__(
+        self,
+        check: str,
+        message: str,
+        *,
+        window: Optional[int] = None,
+        station: Optional[Any] = None,
+        context: Optional[Dict[str, Any]] = None,
+    ) -> None:
+        self.check = check
+        self.window = window
+        self.station = station
+        self.context = dict(context or {})
+        parts = [f"[{check}]"]
+        if window is not None:
+            parts.append(f"window {window}")
+        if station is not None:
+            parts.append(f"station {station}")
+        head = " ".join(parts)
+        detail = ""
+        if self.context:
+            detail = " (" + ", ".join(
+                f"{k}={v!r}" for k, v in sorted(self.context.items())
+            ) + ")"
+        super().__init__(f"{head}: {message}{detail}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-safe form for ``SimResult.sanitizer`` / telemetry."""
+        return {
+            "check": self.check,
+            "window": self.window,
+            "station": self.station,
+            "message": str(self),
+            "context": dict(self.context),
+        }
+
+
+def require(
+    cond: bool,
+    check: str,
+    message: str,
+    *,
+    window: Optional[int] = None,
+    station: Optional[Any] = None,
+    **context: Any,
+) -> None:
+    """``assert`` that ``python -O`` cannot strip: raise a structured
+    :class:`InvariantViolation` when ``cond`` is false."""
+    if not cond:
+        raise InvariantViolation(
+            check, message, window=window, station=station, context=context
+        )
+
+
+def sanitize_enabled() -> Optional[str]:
+    """The process-wide sanitizer switch (``REPRO_SANITIZE``).
+
+    Returns None when unset/empty/``0``; the string ``"record"`` selects
+    record-only mode (violations accumulate into ``SimResult.sanitizer``
+    instead of raising); any other value means raise-on-violation.
+    """
+    val = os.environ.get("REPRO_SANITIZE", "").strip()
+    if val in ("", "0"):
+        return None
+    return "record" if val.lower() == "record" else "raise"

@@ -1,4 +1,4 @@
-"""Little's-Law service-time estimation — the measurement half of MIKU (paper §5.2, Eq. 1).
+"""Little's-Law service-time estimation — MIKU's measurement half (§5.2, Eq. 1).
 
 The paper measures two cumulative uncore events on Intel EMR:
 
@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 
 class OpClass(enum.Enum):

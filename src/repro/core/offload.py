@@ -30,10 +30,10 @@ import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 
 from repro.core.controller import Decision, MikuController, TierDecisions
 from repro.core.device_model import UnknownTierError
+from repro.core.invariants import sanitize_enabled
 from repro.core.littles_law import OpClass, TierCounters, TierWindow
 from repro.core.substrate import ControlLoop, TierSetWindowedCounters
 from repro.core.tiers import (
@@ -103,6 +103,7 @@ class TransferQueue:
         controller: Optional[MikuController] = None,
         window_ns: float = 1_000_000.0,
         extra_slow: Sequence[TierSpec] = (),
+        sanitize=None,
     ):
         self.fast = fast
         self.slow = slow
@@ -133,6 +134,19 @@ class TransferQueue:
         self.control = ControlLoop(
             self, controller, window_ns=window_ns, record=False
         )
+        # Runtime sanitizer (repro.analysis): per-link transfer/byte
+        # conservation after every ``advance``.  None consults
+        # REPRO_SANITIZE, mirroring the DES.
+        if sanitize is None:
+            sanitize = sanitize_enabled()
+        if sanitize:
+            from repro.analysis.sanitizer import QueueSanitizer
+
+            mode = sanitize if isinstance(sanitize, str) else "raise"
+            self._san: Optional[QueueSanitizer] = QueueSanitizer(mode=mode)
+            self._counters.attach_sanitizer(self._san.check_counter_deltas)
+        else:
+            self._san = None
 
     # -- substrate protocol -------------------------------------------------
     @property
@@ -232,6 +246,7 @@ class TransferQueue:
         )
         done = max(self.now, link_free)
         dones: List[float] = []
+        san = self._san
         for i in range(n_chunks):
             done = done + service
             if cap is None or i < cap:
@@ -239,6 +254,8 @@ class TransferQueue:
             else:
                 enq = dones[i - cap]
             self._inflight.append(_InFlight(chunk, op, tier, enq, done))
+            if san is not None:
+                san.on_submit(tier, chunk)
             dones.append(done)
         return done
 
@@ -286,7 +303,11 @@ class TransferQueue:
                 ]
                 for f in done:
                     self.counters[f.tier].record(f.op, f.t_complete - f.t_enqueue)
+                    if self._san is not None:
+                        self._san.on_complete(f.tier, f.nbytes)
         self.now = target
+        if self._san is not None:
+            self._san.check(self)
 
     @property
     def decision(self) -> Decision:

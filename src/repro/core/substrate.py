@@ -111,7 +111,7 @@ class TierSetWindowedCounters:
     instead of merging at the substrate.
     """
 
-    __slots__ = ("tiers", "names", "_marks", "_merged")
+    __slots__ = ("tiers", "names", "_marks", "_merged", "_sanitizer")
 
     _warned_merged = False  # process-wide: the deprecation fires once
 
@@ -130,6 +130,7 @@ class TierSetWindowedCounters:
         self.tiers = [TierCounters() for _ in range(n_tiers)]
         self._marks = [t.snapshot() for t in self.tiers]
         self._merged = merged
+        self._sanitizer: Optional[Callable[..., None]] = None
         if merged and not TierSetWindowedCounters._warned_merged:
             TierSetWindowedCounters._warned_merged = True
             warnings.warn(
@@ -147,9 +148,18 @@ class TierSetWindowedCounters:
         (deprecated): the legacy ``(fast, merged-slow)`` pair."""
         ds = [t.delta(m) for t, m in zip(self.tiers, self._marks)]
         self._marks = [t.snapshot() for t in self.tiers]
+        if self._sanitizer is not None:
+            # Sanitizer hook (repro.analysis): window deltas handed to the
+            # decision law must be non-negative — a negative delta means
+            # someone rewound a cumulative counter mid-window.
+            self._sanitizer(self.names, ds)
         if self._merged:
             return ds[0], merge_tier_counters(ds[1:])
         return TierWindow(ds, self.names)
+
+    def attach_sanitizer(self, hook: Callable[..., None]) -> None:
+        """Install a per-delta check hook (``hook(names, deltas)``)."""
+        self._sanitizer = hook
 
     def reset(self) -> None:
         self.tiers = [TierCounters() for _ in self.tiers]

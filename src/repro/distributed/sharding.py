@@ -70,7 +70,8 @@ def _base_rules(extra: Dict[str, List[Candidate]]) -> Dict[str, List[Candidate]]
         #: decode can choose a cache layout independently of weight TP)
         "cache_heads": ["model"],
         "cache_dim": ["model"],
-        "embed_act": [],  # residual-stream feature dim: replicated (TP acts on heads/ffn)
+        # residual-stream feature dim: replicated (TP acts on heads/ffn)
+        "embed_act": [],
         #: MoE dispatch buffer capacity dim: sharded over the batch axes so
         #: the expert einsums are local (E over model x C over data) — the
         #: alternative (replicated C) makes GSPMD partial-sum the FSDP

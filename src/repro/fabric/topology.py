@@ -23,7 +23,7 @@ a port but gives it no slots/queue/service) all raise
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 from repro.core.device_model import UnknownTierError
 

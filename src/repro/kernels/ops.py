@@ -11,7 +11,6 @@ sizes up to the sublane multiple.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

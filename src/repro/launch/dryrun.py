@@ -29,19 +29,18 @@ import json
 import re
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.configs import ARCH_IDS, SHAPES, ArchSpec, Shape, get_arch, input_specs
+from repro.configs import ARCH_IDS, SHAPES, ArchSpec, Shape, get_arch
 from repro.distributed.autosharding import logical_sharding_context
 from repro.distributed.sharding import (
     partition_spec_for,
     rules_for_shape,
     tree_shardings,
-    TRAIN_RULES,
 )
 from repro.launch.mesh import make_production_mesh
 from repro.models.transformer import TransformerLM

@@ -28,6 +28,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.invariants import require
+
 from repro.core.des import LATENCY_RESERVOIR, SimResult, WorkloadStats
 from repro.core.littles_law import OpClass, TierCounters
 from repro.memsim.batched.stacking import CellPlan
@@ -126,7 +128,12 @@ def run_exact(plan: CellPlan) -> SimResult:
     """Execute one eligible cell in closed form; see the module docstring."""
     e = plan.export
     regime = exact_regime(plan)
-    assert regime is not None
+    require(
+        regime is not None,
+        "exact-regime",
+        "run_exact called on a cell outside both closed-form regimes; "
+        "the lane must route such cells to the fluid engine",
+    )
     tier = _single_tier(e)
     sim_ns = float(plan.job.sim_ns)
     window_ns = float(e["window_ns"])

@@ -26,6 +26,7 @@ import os
 from typing import List, Optional, Sequence, Tuple
 
 from repro.core.des import SimResult
+from repro.core.invariants import require, sanitize_enabled
 from repro.memsim.batched.stacking import BatchGroup, CellPlan, plan_cell
 
 #: (plans aligned with the job list — None where the job fell back,
@@ -68,6 +69,15 @@ def can_batch(job) -> Optional[str]:
     if getattr(job, "miku", False) and \
             getattr(job, "miku_law", None) == "peredge":
         return "fabric_topology"
+    # Sanitized jobs need the instrumented scalar DES: the fluid/exact
+    # engines have no event stream or per-window queue state to check.
+    # job.sanitize=None defers to the process-wide REPRO_SANITIZE switch;
+    # an explicit False opts the job back into the batched lane.
+    san = getattr(job, "sanitize", None)
+    if san is None:
+        san = sanitize_enabled()
+    if san:
+        return "sanitize"
     return None
 
 
@@ -181,5 +191,11 @@ def run_sweep_batched(
                       lane="scalar"),
         ):
             results[idx] = res
-    assert all(r is not None for r in results)
+    require(
+        all(r is not None for r in results),
+        "lane-total",
+        "batched lane dropped jobs: every job must land a result via the "
+        "exact, fluid, or scalar-fallback path",
+        missing=[i for i, r in enumerate(results) if r is None],
+    )
     return results  # type: ignore[return-value]

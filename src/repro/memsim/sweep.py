@@ -65,6 +65,12 @@ class SimJob:
     #: Optional :class:`repro.tiering.TieringSpec` — the worker builds a
     #: fresh hook per sim (stateful, like MIKU controllers).
     tiering: Optional[object] = None
+    #: Runtime sanitizer (:mod:`repro.analysis.sanitizer`): True/"raise"
+    #: checks invariants every window and raises on violation, "record"
+    #: accumulates into ``SimResult.sanitizer``; None (default) consults
+    #: the ``REPRO_SANITIZE`` environment switch.  Sanitized jobs always
+    #: run on the scalar DES (the batched lane cannot be instrumented).
+    sanitize: Optional[object] = None
 
     def __post_init__(self):
         # Fail at job construction (with the platform's tier list) rather
@@ -106,6 +112,7 @@ def run_job(job: SimJob) -> SimResult:
         tiering=job.tiering.build() if job.tiering is not None else None,
         control_scope="edge" if job.miku and job.miku_law == "peredge"
         else "tier",
+        sanitize=job.sanitize,
     )
     return sim.run(job.sim_ns)
 

@@ -14,7 +14,7 @@ explicit shard_map dispatch where profitable.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,9 +50,15 @@ def moe_init(
     }
     if shared_expert_ff > 0:
         params["shared"] = {
-            "w_gate": dense_init(ksg, d_model, lead + (d_model, shared_expert_ff), dtype),
-            "w_up": dense_init(ksu, d_model, lead + (d_model, shared_expert_ff), dtype),
-            "w_down": dense_init(ksd, shared_expert_ff, lead + (shared_expert_ff, d_model), dtype),
+            "w_gate": dense_init(
+                ksg, d_model, lead + (d_model, shared_expert_ff), dtype
+            ),
+            "w_up": dense_init(
+                ksu, d_model, lead + (d_model, shared_expert_ff), dtype
+            ),
+            "w_down": dense_init(
+                ksd, shared_expert_ff, lead + (shared_expert_ff, d_model), dtype
+            ),
         }
         axes["shared"] = {
             "w_gate": lead_ax + ("embed", "ffn"),

@@ -16,7 +16,6 @@ params, D = tokens; N_active for MoE) and 2·N_active·D for prefill/decode
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
 
 from repro.configs import ArchSpec, Shape
 from repro.roofline.hlo_costs import HloCost

@@ -27,7 +27,13 @@ from repro.scenarios.planner import (
     resolve_platform,
     run_scenario,
 )
-from repro.scenarios.registry import all_scenarios, get, names, register
+from repro.scenarios.registry import (
+    UnknownScenarioError,
+    all_scenarios,
+    get,
+    names,
+    register,
+)
 from repro.scenarios.spec import Axis, Metric, ResultTable, Scenario
 
 del _library
@@ -37,6 +43,7 @@ __all__ = [
     "Metric",
     "ResultTable",
     "Scenario",
+    "UnknownScenarioError",
     "all_scenarios",
     "expand_cells",
     "get",

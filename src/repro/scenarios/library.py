@@ -25,7 +25,7 @@ per-edge throttles only the congested route).
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.core.des import WorkloadSpec
 from repro.core.device_model import PlatformModel

@@ -8,11 +8,34 @@ and the module list cannot drift.
 
 from __future__ import annotations
 
+import difflib
 from typing import Dict, List
 
 from repro.scenarios.spec import Scenario
 
 _REGISTRY: Dict[str, Scenario] = {}
+
+
+class UnknownScenarioError(KeyError):
+    """Raised by :func:`get` for an unregistered name.
+
+    Subclasses KeyError so existing ``except KeyError`` callers keep
+    working, but overrides ``__str__`` (KeyError quotes its lone arg) so
+    the message — including close-match suggestions — prints cleanly.
+    """
+
+    def __init__(self, name: str, known: List[str]):
+        self.name = name
+        self.known = known
+        self.suggestions = difflib.get_close_matches(name, known, n=3)
+        msg = f"unknown scenario {name!r}"
+        if self.suggestions:
+            msg += "; did you mean: " + ", ".join(self.suggestions) + "?"
+        msg += f"\nregistered scenarios: {', '.join(known)}"
+        super().__init__(msg)
+
+    def __str__(self) -> str:
+        return self.args[0]
 
 
 def register(scenario: Scenario) -> Scenario:
@@ -24,14 +47,15 @@ def register(scenario: Scenario) -> Scenario:
 
 
 def get(name: str) -> Scenario:
-    """Look up a registered scenario by ``name`` (KeyError lists all)."""
+    """Look up a registered scenario by ``name``.
+
+    Unknown names raise :class:`UnknownScenarioError` (a KeyError) whose
+    message lists near-miss suggestions and every registered name.
+    """
     try:
         return _REGISTRY[name]
     except KeyError:
-        raise KeyError(
-            f"unknown scenario {name!r}; registered scenarios: "
-            f"{', '.join(names())}"
-        ) from None
+        raise UnknownScenarioError(name, names()) from None
 
 
 def names() -> List[str]:

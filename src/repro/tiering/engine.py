@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, Iterable, List, Set, Tuple
+from typing import Deque, Dict, Iterable, Set, Tuple
 
 from repro.tiering.pagemap import PageMap
 

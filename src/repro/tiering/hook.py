@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.controller import TierDecisions
 from repro.core.des import TieredMemorySim, WorkloadSpec
+from repro.core.invariants import require
 from repro.core.device_model import PlatformModel
 from repro.core.littles_law import OpClass
 from repro.tiering.engine import MigrationEngine
@@ -160,7 +161,8 @@ class TieringHook:
         """One per-window tiering pass: sample accesses into the PageMap,
         drain completed copies, run the policy, re-resolve placements and
         budgets.  Returns True when routing or budgets changed."""
-        assert self.pagemap is not None
+        require(self.pagemap is not None, "tiering-bind",
+                "on_window before bind(): the hook has no PageMap yet")
         self._windows += 1
         completed = sim._stat_completed
         deltas = [c - m for c, m in zip(completed, self._stat_mark)]
@@ -241,7 +243,8 @@ class TieringHook:
         single-draw ``ddr_fraction`` fast path).  Returns whether any
         routing entry actually changed (a static policy's steady state
         changes nothing — no re-pump needed)."""
-        assert self.pagemap is not None
+        require(self.pagemap is not None, "tiering-bind",
+                "_apply_placements before bind(): the hook has no PageMap")
         n = sim._n_tiers
         changed = False
         for name, wi in self._region_wi.items():
@@ -276,7 +279,8 @@ class TieringHook:
     def summary(self) -> dict:
         """End-of-run summary (pages promoted/demoted, migrated bytes,
         deferrals, final fast fractions) for ``SimResult.tiering``."""
-        assert self.pagemap is not None
+        require(self.pagemap is not None, "tiering-bind",
+                "summary() before bind(): the hook has no PageMap")
         return {
             **self.engine.counters(),
             "policy": self.policy.name,

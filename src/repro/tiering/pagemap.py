@@ -22,7 +22,7 @@ routing vector, so migrating a page genuinely moves its future accesses.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -12,14 +12,13 @@ bounded and gives the scheduler independent chunks to overlap.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.autosharding import constrain
-from repro.models.transformer import ModelConfig, TransformerLM
+from repro.models.transformer import TransformerLM
 from repro.optim.adamw import AdamW, OptState, clip_by_global_norm
 
 

@@ -1,0 +1,415 @@
+"""repro.analysis: lint-rule units, twin parity, and sanitizer fault
+injection.
+
+The fault-injection tests are the core contract: each one corrupts a live
+simulation's state through :meth:`DesSanitizer.add_mutation` and asserts
+the *intended* check — and only it — fires (check order is part of the
+sanitizer's API: the first check that can see a corruption names it).
+"""
+
+import ast
+import subprocess
+import sys
+import time
+from pathlib import Path
+from types import SimpleNamespace
+
+import pytest
+
+from repro.analysis import (
+    DesSanitizer,
+    InvariantViolation,
+    QueueSanitizer,
+    run_lint,
+    sanitize_enabled,
+)
+from repro.analysis.lint import (
+    compare_twin_surfaces,
+    rule_counter_mutation,
+    rule_deprecated_surface,
+    rule_nondeterminism,
+    rule_scenario_pickle_ast,
+    twin_pairs,
+)
+from repro.core.des import TieredMemorySim, WorkloadSpec
+from repro.core.device_model import platform_a
+from repro.core.littles_law import OpClass
+from repro.core.offload import TransferQueue
+from repro.fabric import spine_leaf_platform
+from repro.memsim.batched.lane import can_batch
+from repro.memsim.sweep import SimJob, run_job
+from repro.memsim.workloads import bw_test
+from repro.scenarios import UnknownScenarioError, all_scenarios, get, \
+    run_scenario
+from repro.tiering import HotSetPattern, RegionSpec, TieringSpec
+
+P = platform_a()
+REPO = Path(__file__).resolve().parents[1]
+
+
+# -- lint rule units ----------------------------------------------------------
+
+
+def _findings(rule, src, rel):
+    return rule(ast.parse(src), rel)
+
+
+def test_counter_mutation_rule_fires_outside_substrate():
+    src = "def f(tc):\n    tc.inserts += 1\n"
+    found = _findings(rule_counter_mutation, src, "tiering/foo.py")
+    assert [f.rule for f in found] == ["counter-mutation"]
+    assert found[0].line == 2
+
+
+def test_counter_mutation_rule_covers_assignment_and_subscript():
+    src = (
+        "def f(tc):\n"
+        "    tc.occupancy_time = 0.0\n"
+        "    tc.class_counts[op] = 3\n"
+    )
+    found = _findings(rule_counter_mutation, src, "core/des.py")
+    assert len(found) == 2
+
+
+def test_counter_mutation_rule_allows_substrate_and_materializers():
+    src = "def f(tc):\n    tc.inserts += 1\n"
+    assert _findings(rule_counter_mutation, src, "core/substrate.py") == []
+    allowed = "def _materialize_counters(tc):\n    tc.inserts += 1\n"
+    assert _findings(rule_counter_mutation, allowed, "core/des.py") == []
+
+
+def test_nondeterminism_rule_fires_on_unseeded_sources():
+    src = (
+        "def f():\n"
+        "    x = random.random()\n"
+        "    t = time.time()\n"
+        "    y = np.random.rand(3)\n"
+        "    rng = np.random.default_rng()\n"
+    )
+    found = _findings(rule_nondeterminism, src, "core/foo.py")
+    assert len(found) == 4
+    assert all(f.rule == "nondeterminism" for f in found)
+
+
+def test_nondeterminism_rule_allows_seeded_rng_and_non_sim_paths():
+    ok = "def f(seed):\n    return np.random.default_rng(seed)\n"
+    assert _findings(rule_nondeterminism, ok, "core/foo.py") == []
+    bad = "def f():\n    return random.random()\n"
+    # models/ is not a sim hot path: kernels may use jax PRNG conventions.
+    assert _findings(rule_nondeterminism, bad, "models/foo.py") == []
+
+
+def test_deprecated_surface_rule():
+    src = "d = ctl.window(fast, slow)\n"
+    found = _findings(rule_deprecated_surface, src, "memsim/foo.py")
+    assert [f.rule for f in found] == ["deprecated-surface"]
+    # The shim implementation module is the one allowed caller.
+    assert _findings(rule_deprecated_surface, src, "core/controller.py") == []
+    merged = "c = TierSetWindowedCounters(names, merged=True)\n"
+    assert len(_findings(
+        rule_deprecated_surface, merged, "memsim/foo.py")) == 1
+    assert _findings(
+        rule_deprecated_surface, merged, "core/substrate.py") == []
+
+
+def test_scenario_pickle_ast_rule():
+    src = "Scenario(name='x', build=lambda c: c)\n"
+    found = _findings(rule_scenario_pickle_ast, src, "scenarios/foo.py")
+    assert [f.rule for f in found] == ["scenario-pickle"]
+    # Outside scenarios/ the rule does not apply.
+    assert _findings(rule_scenario_pickle_ast, src, "core/foo.py") == []
+
+
+def test_twin_parity_catches_injected_one_sided_knob():
+    label, fields, consumed, extra, path, line = twin_pairs()[0]
+    assert compare_twin_surfaces(
+        label, fields, consumed, extra_allowed=extra, path=path, line=line
+    ) == []
+    # A knob added to the scalar config but never consumed by the vector
+    # twin must fail analysis.
+    found = compare_twin_surfaces(
+        label, fields | {"new_knob"}, consumed,
+        extra_allowed=extra, path=path, line=line,
+    )
+    assert len(found) == 1 and "new_knob" in found[0].message
+    # ...and so must a vector-side read with no scalar field behind it.
+    found = compare_twin_surfaces(
+        label, fields, consumed | {"phantom"},
+        extra_allowed=extra, path=path, line=line,
+    )
+    assert len(found) == 1 and "phantom" in found[0].message
+
+
+def test_repo_lint_is_green():
+    assert run_lint() == []
+
+
+# -- sanitizer fault injection ------------------------------------------------
+
+
+def _run_mutated(mutation, window=1, platform=None, tiering=None):
+    sim = TieredMemorySim(
+        platform or P, [bw_test("cxl", OpClass.LOAD, 8)], seed=0,
+        sanitize=True, tiering=tiering,
+    )
+    sim._san.add_mutation(window, mutation)
+    with pytest.raises(InvariantViolation) as ei:
+        sim.run(60_000.0)
+    return ei.value
+
+
+def test_injected_retire_miscount_trips_conservation():
+    def corrupt(s):
+        s._stat_completed[0] += 3
+    assert _run_mutated(corrupt).check == "conservation"
+
+
+def test_injected_double_free_trips_free_list():
+    def corrupt(s):
+        s._r_free.extend([123456, 123456])
+    err = _run_mutated(corrupt)
+    assert err.check == "free-list"
+    assert err.window == 1
+
+
+def test_injected_negative_tokens_trip_token_bucket():
+    def corrupt(s):
+        s._tokens[0] = -1.0
+    assert _run_mutated(corrupt).check == "token-bucket"
+
+
+def test_injected_past_event_trips_event_order():
+    def corrupt(s):
+        s._push(s.now - 5_000.0, 3, 0)  # an _EV_TOKEN scheduled in the past
+    assert _run_mutated(corrupt).check == "event-order"
+
+
+def test_injected_counter_rollback_trips_counter_monotone():
+    def corrupt(s):
+        s._tc_ins[1] = 0
+    # Window 2: the mark from window 1's pass is already set.
+    assert _run_mutated(corrupt, window=2).check == "counter-monotone"
+
+
+def test_injected_port_overflow_trips_entry_limit():
+    def corrupt(s):
+        st = s._link0
+        s._hop_occ[st] = s._hop_limit[st] + 1
+    err = _run_mutated(corrupt, platform=spine_leaf_platform())
+    assert err.check == "entry-limit"
+    assert err.station is not None
+
+
+def test_injected_backpressure_cycle_trips_stall_cycle():
+    def corrupt(s):
+        u, v = s._link0, s._link0 + 1
+        for st in (u, v):
+            s._st_q[st].clear()
+            s._st_busy[st] = 1
+            s._hop_occ[st] = 1
+            s._hop_stall[st].clear()
+        # u's lone busy server waits on v and vice versa: a frozen cycle
+        # no completion event can ever drain.
+        s._hop_stall[u].append((1, v))
+        s._hop_stall[v].append((2, u))
+    err = _run_mutated(corrupt, platform=spine_leaf_platform())
+    assert err.check == "stall-cycle"
+    assert err.context["cycle"]
+
+
+def test_injected_negative_credit_trips_migrate_debt():
+    spec = TieringSpec(
+        regions=(RegionSpec(
+            workload="app", n_pages=256, placement={"cxl": 1.0},
+            pattern=HotSetPattern(hot_fraction=0.25, hot_weight=0.9),
+        ),),
+        fast_capacity_pages=128,
+    )
+    sim = TieredMemorySim(
+        P, [WorkloadSpec(name="app", op=OpClass.LOAD, tier="cxl", n_cores=8)],
+        seed=0, sanitize=True, tiering=spec.build(),
+    )
+    sim._san.add_mutation(
+        2, lambda s: s._tiering.engine._credit.__setitem__(1, -1)
+    )
+    with pytest.raises(InvariantViolation) as ei:
+        sim.run(60_000.0)
+    assert ei.value.check == "migrate-debt"
+
+
+def test_phase_flip_without_schedule_is_structured():
+    sim = TieredMemorySim(P, [bw_test("cxl", OpClass.LOAD, 8)], seed=0)
+    with pytest.raises(InvariantViolation) as ei:
+        sim._phase_flip(0)
+    assert ei.value.check == "phase-schedule"
+
+
+def test_record_mode_accumulates_and_completes():
+    sim = TieredMemorySim(
+        P, [bw_test("cxl", OpClass.LOAD, 8)], seed=0, sanitize="record"
+    )
+    sim._san.add_mutation(1, lambda s: s._tokens.__setitem__(0, -1.0))
+    res = sim.run(60_000.0)
+    assert res.sanitizer["mode"] == "record"
+    checks = {v["check"] for v in res.sanitizer["violations"]}
+    assert "token-bucket" in checks
+    assert res.sanitizer["windows_checked"] >= 1
+
+
+def test_counter_delta_hook_flags_negative_window_delta():
+    san = DesSanitizer(2, mode="record")
+    bad = SimpleNamespace(inserts=-1, occupancy_time=0.0)
+    ok = SimpleNamespace(inserts=3, occupancy_time=1.0)
+    san.check_counter_deltas(("ddr", "cxl"), (ok, bad))
+    assert [v.check for v in san.violations] == ["counter-delta"]
+    assert san.violations[0].station == "cxl"
+
+
+def test_sanitizer_mode_validation():
+    with pytest.raises(ValueError, match="unknown sanitizer mode"):
+        DesSanitizer(2, mode="explode")
+
+
+def test_sanitize_enabled_env_parsing(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert sanitize_enabled() is None
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert sanitize_enabled() is None
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled() == "raise"
+    monkeypatch.setenv("REPRO_SANITIZE", "record")
+    assert sanitize_enabled() == "record"
+
+
+# -- clean runs stay clean ----------------------------------------------------
+
+
+def test_sanitized_run_is_bit_identical_and_clean():
+    wl = [bw_test("ddr", OpClass.LOAD, 8), bw_test("cxl", OpClass.LOAD, 8)]
+    plain = TieredMemorySim(P, wl, seed=0).run(200_000.0)
+    sim = TieredMemorySim(P, wl, seed=0, sanitize=True)
+    checked = sim.run(200_000.0)
+    assert checked.sanitizer["violations"] == []
+    assert checked.sanitizer["windows_checked"] >= 10
+    assert checked.tor_inserts == plain.tor_inserts
+    assert checked.tor_occupancy_integral == plain.tor_occupancy_integral
+    for name, st in plain.stats.items():
+        assert checked.stats[name] == st
+    assert plain.sanitizer is None
+
+
+def test_simjob_sanitize_plumbs_to_result():
+    job = SimJob(P, [bw_test("cxl", OpClass.LOAD, 8)], sim_ns=60_000.0,
+                 sanitize=True)
+    res = run_job(job)
+    assert res.sanitizer is not None
+    assert res.sanitizer["violations"] == []
+    assert sum(res.sanitizer["retired"]) > 0
+
+
+def test_can_batch_screens_sanitized_jobs(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    job = SimJob(P, [bw_test("cxl", OpClass.LOAD, 8)], sim_ns=60_000.0)
+    assert can_batch(job) is None
+    assert can_batch(
+        SimJob(P, [bw_test("cxl", OpClass.LOAD, 8)], sim_ns=60_000.0,
+               sanitize=True)
+    ) == "sanitize"
+    # sanitize=None defers to the env; an explicit False opts back in.
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert can_batch(job) == "sanitize"
+    assert can_batch(
+        SimJob(P, [bw_test("cxl", OpClass.LOAD, 8)], sim_ns=60_000.0,
+               sanitize=False)
+    ) is None
+
+
+@pytest.mark.slow
+def test_sanitizer_overhead_is_bounded():
+    wl = [bw_test("ddr", OpClass.LOAD, 16), bw_test("cxl", OpClass.LOAD, 16)]
+    horizon = 500_000.0
+    t0 = time.perf_counter()
+    TieredMemorySim(P, wl, seed=0).run(horizon)
+    plain = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    TieredMemorySim(P, wl, seed=0, sanitize=True).run(horizon)
+    checked = time.perf_counter() - t0
+    # Measured ~1.12x; 1.5x leaves headroom for noisy CI machines.
+    assert checked < plain * 1.5 + 0.05
+
+
+# -- transfer queue -----------------------------------------------------------
+
+
+def test_transfer_queue_sanitized_clean_run():
+    q = TransferQueue(sanitize=True)
+    q.submit_slow_stream(1 << 20, 4)
+    q.advance(10_000_000.0)
+    assert q._san.summary()["violations"] == []
+    assert q._san.summary()["submitted"] == {"slow": 4}
+
+
+def test_transfer_queue_lost_transfer_trips_link_conservation():
+    q = TransferQueue(sanitize=True)
+    q.submit_slow_stream(1 << 20, 4)
+    q._inflight.pop()  # a transfer vanishes without completing
+    with pytest.raises(InvariantViolation) as ei:
+        q.advance(10_000_000.0)
+    assert ei.value.check == "link-conservation"
+    assert ei.value.station == "slow"
+
+
+def test_queue_sanitizer_counter_delta_hook():
+    san = QueueSanitizer(mode="record")
+    bad = SimpleNamespace(inserts=0, occupancy_time=-2.0)
+    san.check_counter_deltas(("fast", "slow"), (bad,))
+    assert [v.check for v in san.violations] == ["counter-delta"]
+
+
+# -- scenario registry / harness surface --------------------------------------
+
+
+def test_unknown_scenario_suggests_near_misses():
+    with pytest.raises(UnknownScenarioError) as ei:
+        get("fabric_spine_congstion")
+    err = ei.value
+    assert isinstance(err, KeyError)
+    assert "fabric_spine_congestion" in err.suggestions
+    assert "did you mean" in str(err)
+    # Gibberish still lists the registry, without bogus suggestions.
+    with pytest.raises(UnknownScenarioError) as ei:
+        get("zzzzzz")
+    assert ei.value.suggestions == []
+    assert "registered scenarios:" in str(ei.value)
+
+
+def test_run_py_unknown_scenario_exits_2():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "benchmarks" / "run.py"),
+         "--scenario", "fabric_spine_congstion"],
+        capture_output=True, text=True, cwd=REPO,
+    )
+    assert proc.returncode == 2
+    assert "unknown scenario" in proc.stderr
+    assert "fabric_spine_congestion" in proc.stderr
+
+
+# -- every scenario stays clean one-cell under the sanitizer ------------------
+
+_HEAVY = {"fig2_tiering", "fig10_miku", "fig11_llm"}
+
+
+@pytest.mark.parametrize(
+    "name",
+    [pytest.param(sc.name,
+                  marks=[pytest.mark.slow] if sc.name in _HEAVY else [])
+     for sc in all_scenarios()],
+)
+def test_scenario_one_cell_sanitized(name, monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    sc = get(name)
+    overrides = {a.name: a.default[0] for a in sc.axes if a.is_grid}
+    if any(a.name == "sim_ns" for a in sc.axes):
+        overrides["sim_ns"] = 60_000.0
+    table = run_scenario(sc, overrides)
+    assert table.rows  # a clean sanitized run produced its result table

@@ -27,8 +27,6 @@ import numpy as np
 import pytest
 
 from repro.core.controller import Phase
-from repro.core.littles_law import OpClass
-from repro.memsim.batched.lane import run_sweep_batched
 from repro.memsim.batched.stacking import BatchGroup, plan_cell
 from repro.memsim.batched.tiering import build_tiering
 from repro.memsim.sweep import run_sweep

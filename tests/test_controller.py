@@ -1,7 +1,5 @@
 """MIKU controller state-machine tests (paper §5.2 throttling ladder)."""
 
-import pytest
-
 from repro.core.controller import (
     MikuConfig,
     MikuController,

@@ -22,7 +22,6 @@ Five contracts:
    transfer-queue links name their namespace and every known name.
 """
 
-import dataclasses
 import json
 import os
 

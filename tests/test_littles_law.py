@@ -1,7 +1,5 @@
 """Estimator unit + property tests (paper Eq. 1)."""
 
-import math
-
 import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st

@@ -1,6 +1,5 @@
 """MVA solver: cross-validation vs DES + monotonicity properties."""
 
-import jax.numpy as jnp
 import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st

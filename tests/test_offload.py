@@ -5,9 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.littles_law import OpClass
 from repro.core.offload import HostOffloader, TransferQueue
-from repro.core.tiers import TieredLayout, host_offload_supported
+from repro.core.tiers import TieredLayout
 
 
 def test_offload_roundtrip_real_arrays():

@@ -26,7 +26,6 @@ import pytest
 
 from repro.core.controller import (
     Decision,
-    MergedSlowPolicy,
     MikuController,
     Phase,
     TierDecisions,

@@ -1,13 +1,9 @@
 """Mamba2 SSD: chunked scan vs naive recurrence; decode consistency."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs import get_arch
 from repro.kernels.ref import ssd_scan_ref
 from repro.models.ssm import (
     init_ssm_state,
@@ -16,11 +12,7 @@ from repro.models.ssm import (
     ssm_forward,
     ssm_init,
     ssm_step,
-    _causal_depthwise_conv,
-    _prep_inputs,
-    _split_proj,
 )
-from repro.models.transformer import TransformerLM
 
 KEY = jax.random.PRNGKey(0)
 

@@ -12,7 +12,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.des import run_bw_test, run_corun
 from repro.core.device_model import platform_a
