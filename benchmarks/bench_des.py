@@ -238,6 +238,57 @@ def bench_sweep_1k() -> dict:
     }
 
 
+def bench_obs(reps: int = 4) -> dict:
+    """Observability overhead A/B: the fig5 co-run config with tracing +
+    histograms + profiling off vs on, interleaved reps.
+
+    Two gates: (a) the instrumented run must cost < 10% wall time over the
+    plain run; (b) the instrumented run's simulation outcome (bandwidth,
+    latency sums, ToR inserts) must be *bit-identical* — the deterministic
+    sampler draws no random numbers, so observability must never perturb
+    the simulation."""
+    import dataclasses
+
+    from repro.memsim.sweep import SimJob, run_job
+    from repro.memsim.workloads import bw_test
+
+    p = platform_a()
+    wls = [
+        bw_test("ddr", OpClass.LOAD, 16, name="ddr", miku_managed=False),
+        bw_test("cxl", OpClass.LOAD, 16, name="cxl"),
+    ]
+    base = SimJob(platform=p, workloads=wls, sim_ns=300_000.0, miku=True)
+    obs = dataclasses.replace(
+        base, trace=64, latency_hist=True, profile=True
+    )
+    off_t, on_t = [], []
+    r_off = r_on = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r_off = run_job(base)
+        off_t.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        r_on = run_job(obs)
+        on_t.append(time.perf_counter() - t0)
+    identical = all(
+        r_off.stats[w].bytes == r_on.stats[w].bytes
+        and r_off.stats[w].latency_sum == r_on.stats[w].latency_sum
+        and r_off.stats[w].completed == r_on.stats[w].completed
+        for w in ("ddr", "cxl")
+    ) and r_off.tor_inserts == r_on.tor_inserts
+    overhead = (min(on_t) / max(min(off_t), 1e-9) - 1.0) * 100.0
+    return {
+        "config": "fig5_corun_load_16t_300us",
+        "plain_wall_s": round(min(off_t), 4),
+        "instrumented_wall_s": round(min(on_t), 4),
+        "obs_overhead_pct": round(overhead, 2),
+        "obs_within_10pct": overhead < 10.0,
+        "obs_bit_identical": identical,
+        "traced_requests": r_on.trace["n_traced"],
+        "phase_profile": r_on.profile,
+    }
+
+
 def check_fast_path_overhead(out: dict, snapshot_path: str) -> dict:
     """Two-tier fast-path overhead gate for the per-tier contract.
 
@@ -271,12 +322,29 @@ def main() -> None:
                     help="run only the 1024-cell grid A/B/C (numpy + pallas "
                          "batched vs scalar pool; no file write) and gate on "
                          "the <=8%% cross-lane bound — the CI slow-lane job")
+    ap.add_argument("--obs", action="store_true",
+                    help="run only the observability overhead A/B (tracing/"
+                         "histograms/profiler on vs off; no file write) and "
+                         "gate on <10%% overhead + bit-identical outcomes — "
+                         "the CI gating-lane obs smoke")
     args = ap.parse_args()
     snapshot = os.path.join(_REPO_ROOT, "BENCH_des.json")
     if args.smoke:
         out = {"bench": "des_fast_path_smoke", **bench_ab(2)}
         out.update(check_fast_path_overhead(out, snapshot))
         print(json.dumps(out, indent=2))
+        return
+    if args.obs:
+        out = {"bench": "des_obs_overhead", **bench_obs(max(args.reps, 3))}
+        print(json.dumps(out, indent=2))
+        assert out["obs_bit_identical"], (
+            "observability instrumentation perturbed the simulation "
+            "(bandwidth/latency/ToR counters differ with tracing on)"
+        )
+        assert out["obs_within_10pct"], (
+            f"observability instrumentation added {out['obs_overhead_pct']}% "
+            "wall time on the co-run config (>10% budget)"
+        )
         return
     if args.sweep_1k:
         out = {"bench": "des_sweep_1k", **bench_sweep_1k()}
@@ -293,6 +361,7 @@ def main() -> None:
     out.update(check_fast_path_overhead(out, snapshot))
     out["sweep_lanes"] = bench_sweep_lanes()
     out["sweep_1k"] = bench_sweep_1k()
+    out["observability"] = bench_obs(args.reps)
     print(json.dumps(out, indent=2))
     if out["speedup_vs_seed"] < 2.0:
         print("WARNING: speedup below the 2x acceptance bar "
@@ -307,6 +376,14 @@ def main() -> None:
         "batched lanes off the scalar DES on the 1024-cell grid "
         "(decision flips or aligned-p95 out of bounds); snapshot left "
         "untouched"
+    )
+    assert out["observability"]["obs_bit_identical"], (
+        "observability instrumentation perturbed the simulation; "
+        "snapshot left untouched"
+    )
+    assert out["observability"]["obs_within_10pct"], (
+        f"observability added {out['observability']['obs_overhead_pct']}% "
+        "on the co-run config (>10% budget); snapshot left untouched"
     )
     # Gate BEFORE writing: a failing run must not replace the snapshot it
     # was compared against (the baseline would self-ratchet downward).

@@ -11,6 +11,12 @@
 #      --format) plus NAME.trace.json next to each other:
 #        PYTHONPATH=src python benchmarks/run.py --scenario corun3_pertier \
 #            --set law=pertier --trace corun3_pertier
+#      --perfetto NAME samples request-lifecycle span chains and writes
+#      NAME.perfetto.json (Chrome trace-event JSON; see
+#      docs/observability.md):
+#        PYTHONPATH=src python benchmarks/run.py \
+#            --scenario fabric_spine_congestion --set law=peredge \
+#            --perfetto spine
 #
 #   2. Figure mode (legacy) — run the paper-figure modules, printing
 #      ``name,us_per_call,derived`` CSV:
@@ -97,8 +103,42 @@ def _list_scenarios(fmt: str = "csv") -> None:
             print(f"    metrics: {', '.join(m.name for m in sc.metrics)}")
 
 
+def _write_perfetto(table, name: str) -> None:
+    """Flatten per-cell span payloads into one Chrome trace-event file."""
+    import json
+
+    from repro.obs.trace import to_chrome
+
+    records = []
+    for ci, cell in enumerate(table.request_traces or []):
+        for job in cell["jobs"]:
+            payload = job["trace"]
+            if not payload:
+                continue
+            for rec in payload["requests"]:
+                # One trace process per (cell, job, workload) so grid cells
+                # stay distinguishable in the Perfetto UI.
+                records.append({
+                    **rec,
+                    "workload":
+                        f"cell{ci}/job{job['job']}/{rec['workload']}",
+                })
+    path = f"{name}.perfetto.json"
+    if not records:
+        # No request retired while sampled (e.g. a horizon shorter than one
+        # service time): an empty trace would just confuse Perfetto — say
+        # so instead of writing it.
+        print(f"no request-lifecycle spans were recorded, skipping {path}")
+        return
+    with open(path, "w") as f:
+        json.dump(to_chrome(records), f, indent=1)
+        f.write("\n")
+    print(f"wrote {path} ({len(records)} traced requests)")
+
+
 def _run_scenario(name: str, set_args: list, fmt: str, jobs: int,
-                  trace: str = "", lane: str = "") -> None:
+                  trace: str = "", lane: str = "", perfetto: str = "",
+                  profile: bool = False) -> None:
     import json
 
     from repro.scenarios import (
@@ -117,7 +157,13 @@ def _run_scenario(name: str, set_args: list, fmt: str, jobs: int,
         sys.exit(2)
     overrides = parse_set_args(sc, set_args)
     table = run_scenario(sc, overrides, processes=jobs if jobs > 1 else None,
-                         trace=bool(trace), lane=lane or None)
+                         trace=bool(trace), lane=lane or None,
+                         perfetto=bool(perfetto), profile=profile)
+    if perfetto:
+        _write_perfetto(table, perfetto)
+    if profile:
+        print(f"profile: {json.dumps(table.meta.get('profile', {}))}",
+              file=sys.stderr)
     if lane:
         # Lane routing summary on stderr so csv/json stdout stays clean.
         print(f"lane: {json.dumps(table.meta)}", file=sys.stderr)
@@ -177,6 +223,15 @@ def main() -> None:
                     help="with --scenario: record per-window per-tier "
                          "decision telemetry; write NAME.csv/.json and "
                          "NAME.trace.json")
+    ap.add_argument("--perfetto", default="", metavar="NAME",
+                    help="with --scenario: sample request-lifecycle span "
+                         "chains (every 16th admission, scalar DES) and "
+                         "write NAME.perfetto.json — Chrome trace-event "
+                         "JSON loadable in Perfetto/chrome://tracing")
+    ap.add_argument("--profile", action="store_true",
+                    help="with --scenario: print a wall-clock phase "
+                         "profile (plan/sweep/reduce + per-job event-loop "
+                         "split) and the observability counters to stderr")
     ap.add_argument("--lane", choices=("scalar", "batched"), default="",
                     help="with --scenario: sweep execution lane (batched = "
                          "vectorized repro.memsim.batched; inexpressible "
@@ -205,7 +260,7 @@ def main() -> None:
         ap.error("--format md is only valid with --list")
     if args.scenario:
         _run_scenario(args.scenario, args.set_args, args.format, args.jobs,
-                      args.trace, args.lane)
+                      args.trace, args.lane, args.perfetto, args.profile)
         return
     if args.set_args:
         ap.error("--set requires --scenario")
@@ -213,6 +268,10 @@ def main() -> None:
         ap.error("--trace requires --scenario")
     if args.lane:
         ap.error("--lane requires --scenario")
+    if args.perfetto:
+        ap.error("--perfetto requires --scenario")
+    if args.profile:
+        ap.error("--profile requires --scenario")
 
     from benchmarks.common import emit
 

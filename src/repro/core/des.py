@@ -56,7 +56,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.controller import Decision, MikuController, TierDecisions
 from repro.core.device_model import PlatformModel, UnknownTierError
 from repro.core.invariants import InvariantViolation, sanitize_enabled
-from repro.core.littles_law import OpClass, TierCounters, TierWindow
+from repro.core.littles_law import (
+    OpClass,
+    TierCounters,
+    TierWindow,
+    linear_percentile,
+)
 from repro.core.substrate import (
     ControlLoop,
     TierSetWindowedCounters,
@@ -202,16 +207,21 @@ class WorkloadStats:
     latency_samples: List[float] = dataclasses.field(default_factory=list)
     # timeline of (t_ns, bytes_completed_in_bucket) for bandwidth-over-time
     timeline: List[Tuple[float, float]] = dataclasses.field(default_factory=list)
+    #: Mergeable log-bucketed latency histogram over *all* completed
+    #: requests (:class:`repro.obs.histogram.LatencyHistogram`); None
+    #: unless the sim ran with ``latency_hist=True``.
+    latency_hist: Optional[object] = None
 
     def mean_latency_ns(self) -> float:
         return self.latency_sum / max(1, self.latency_count)
 
     def percentile_ns(self, q: float) -> float:
+        """Reservoir percentile with linear interpolation between order
+        statistics (rank ``q * (n - 1)``; see
+        :func:`repro.core.littles_law.linear_percentile`)."""
         if not self.latency_samples:
             return 0.0
-        xs = sorted(self.latency_samples)
-        idx = min(len(xs) - 1, int(q * len(xs)))
-        return xs[idx]
+        return linear_percentile(sorted(self.latency_samples), q)
 
     def bandwidth_gbps(self, sim_ns: float) -> float:
         return self.bytes / sim_ns  # B/ns == GB/s
@@ -245,6 +255,17 @@ class SimResult:
     #: counters, recorded violations); None unless the sim ran with
     #: ``sanitize`` enabled (see :mod:`repro.analysis.sanitizer`).
     sanitizer: Optional[dict] = None
+    #: Per-tier mergeable latency histograms (full request latency keyed by
+    #: the request's tier; LLC hits count toward their tier).  None unless
+    #: the sim ran with ``latency_hist=True``.
+    tier_latency_hist: Optional[dict] = None
+    #: Sampled request-lifecycle trace payload (finalized span records;
+    #: see :meth:`repro.obs.trace.RequestTracer.run_payload`).  None unless
+    #: the sim ran with ``trace`` enabled.
+    trace: Optional[dict] = None
+    #: Wall-clock phase profile (setup / event_loop / window_pass seconds);
+    #: None unless a :class:`repro.obs.metrics.PhaseProfiler` was attached.
+    profile: Optional[dict] = None
 
     def bandwidth(self, name: str) -> float:
         return self.stats[name].bandwidth_gbps(self.sim_ns)
@@ -280,6 +301,9 @@ class TieredMemorySim:
         tiering=None,
         control_scope: str = "tier",
         sanitize=None,
+        latency_hist: bool = False,
+        trace=0,
+        profiler=None,
     ):
         self.platform = platform
         self.workloads = list(workloads)
@@ -348,6 +372,11 @@ class TieredMemorySim:
         self._r_ttor: List[float] = []
         self._r_service: List[float] = []
         self._r_free: List[int] = []
+        # Per-rid is-being-traced flag (1 iff the rid is in the tracer's
+        # live dict): a bytearray index is cheaper than a dict membership
+        # test on the per-event hook guards.  Maintained even with tracing
+        # off — one append per *allocated* rid, nothing per event.
+        self._r_traced = bytearray()
 
         # Round-robin arbitration order over every (workload, core) pair:
         # real cores are open-loop instruction streams that re-attempt IRQ
@@ -618,6 +647,59 @@ class TieredMemorySim:
         else:
             self._san = None
 
+        # -- observability (repro.obs) ------------------------------------
+        # ``latency_hist``: collect every retire latency into plain per-
+        # (workload, tier) lists (bucketing is deferred to end-of-run
+        # materialization, off the hot path); ``trace``: 1-in-N sampled
+        # request-lifecycle tracing (an int N or a TraceConfig), keyed on
+        # the tor_inserts counter so the sampler draws no random numbers;
+        # ``profiler``: an attached PhaseProfiler for wall-clock phase
+        # accounting.  All default off; the disabled paths cost one int /
+        # pointer compare per transition and stay bit-identical to the
+        # pinned goldens.  Like the sanitizer, repro.obs is imported
+        # lazily — the core never depends on it unless a sim asks.
+        self._prof = profiler
+        if latency_hist:
+            # One flat list per (workload, tier) pair: the retire hot path
+            # pays a single cached bound-``append`` call, and the workload /
+            # tier / per-window histograms are all exact merges of these
+            # shared sublists (bucket counts and water marks are
+            # order-independent).
+            self._lat_wt: Optional[List[List[List[float]]]] = [
+                [[] for _ in range(self._n_tiers)] for _ in self.workloads
+            ]
+            self._lat_ap: Optional[List[list]] = [
+                [lst.append for lst in row] for row in self._lat_wt
+            ]
+        else:
+            self._lat_wt = None
+            self._lat_ap = None
+        #: (window index, t_ns, per-(workload, tier) sample counts)
+        #: snapshots taken at window boundaries — slices of the flat sample
+        #: lists, so the per-window histograms merge back to the full
+        #: histogram exactly.
+        self._hist_marks: List[Tuple[int, float, List[List[int]]]] = []
+        if trace:
+            from repro.obs.trace import RequestTracer, TraceConfig
+
+            cfg = (
+                trace
+                if isinstance(trace, TraceConfig)
+                else TraceConfig(sample_every=int(trace))
+            )
+            self._tracer: Optional[RequestTracer] = RequestTracer(
+                cfg,
+                workload_names=[w.name for w in self.workloads],
+                station_names=(
+                    list(self._tier_names) + ["llc"] + list(self._link_names)
+                ),
+                tier_names=list(self._tier_names),
+            )
+            self._tr_every = cfg.sample_every
+        else:
+            self._tracer = None
+            self._tr_every = 0
+
         if tiering is not None:
             tiering.bind(self)
 
@@ -864,6 +946,9 @@ class TieredMemorySim:
             self._hop_idx[rid] = -1  # not on the fabric yet
             self._hop_stall[first].append((rid, -1))
             self._hop_stall_events[first] += 1
+            tr = self._tracer
+            if tr is not None and self._r_traced[rid]:
+                tr.stall(rid, first, self.now)
 
     def _hop_enter(self, rid: int, station: int) -> None:
         """Occupy one port entry at ``station`` and start (or queue for)
@@ -877,6 +962,9 @@ class TieredMemorySim:
         self._r_station[rid] = station
         service = self._hop_svc[station] * self._w_g[self._r_wl[rid]]
         self._r_service[rid] = service
+        tr = self._tracer
+        if tr is not None and self._r_traced[rid]:
+            tr.station_enter(rid, station, self.now)
         if self._st_busy[station] < self._st_slots[station]:
             self._st_busy[station] += 1
             self._push(self.now + service, _EV_COMPLETE, rid)
@@ -887,6 +975,9 @@ class TieredMemorySim:
         """Service done at a hop: advance to the next hop or the device —
         unless the downstream port is full, in which case the request
         stalls holding this hop's server slot (HoL backpressure)."""
+        tr = self._tracer
+        if tr is not None and self._r_traced[rid]:
+            tr.service_done(rid, station, self.now, self._r_service[rid])
         hops = self._hop_path[rid]
         i = self._hop_idx[rid] + 1
         if i < len(hops):
@@ -894,6 +985,8 @@ class TieredMemorySim:
             if self._hop_occ[nxt] >= self._hop_limit[nxt]:
                 self._hop_stall[nxt].append((rid, station))
                 self._hop_stall_events[nxt] += 1
+                if tr is not None and self._r_traced[rid]:
+                    tr.stall(rid, nxt, self.now)
                 return
             self._hop_leave(rid, station)
             self._hop_idx[rid] = i
@@ -908,6 +1001,8 @@ class TieredMemorySim:
         self._r_station[rid] = tier
         service = self._w_svc[self._r_wl[rid]][tier]
         self._r_service[rid] = service
+        if tr is not None and self._r_traced[rid]:
+            tr.station_enter(rid, tier, self.now)
         if self._st_busy[tier] < self._st_slots[tier]:
             self._st_busy[tier] += 1
             self._push(self.now + service, _EV_COMPLETE, rid)
@@ -1034,6 +1129,7 @@ class TieredMemorySim:
                 self._r_tissue.append(self.now)
                 self._r_ttor.append(0.0)
                 self._r_service.append(0.0)
+                self._r_traced.append(0)
             out[gi] += 1
             irq.append(rid)
             misses = 0
@@ -1077,6 +1173,9 @@ class TieredMemorySim:
         fabric_on = self._fabric_active
         w_hops = self._w_hops
         san = self._san
+        tr_every = self._tr_every
+        tracer = self._tracer
+        r_traced = self._r_traced
         while irq and self.tor_used < cap:
             rid = irq.popleft()
             self.tor_used += 1
@@ -1088,6 +1187,11 @@ class TieredMemorySim:
             if san is not None:
                 san.adm[tier] += 1
             r_ttor[rid] = now
+            # Deterministic 1-in-N trace sampling, keyed on the insert
+            # counter (no RNG draws — the tracing-off sim is bit-identical).
+            if tr_every and (self.tor_inserts - 1) % tr_every == 0:
+                if tracer.admit(rid, r_wl[rid], tier, r_tissue[rid], now):
+                    r_traced[rid] = 1
             # Route (inlined): sync → LLC bounce; else LLC lottery, else
             # the tier device.
             wi = r_wl[rid]
@@ -1107,6 +1211,8 @@ class TieredMemorySim:
             else:
                 r_station[rid] = station
                 r_service[rid] = service
+                if tr_every and r_traced[rid]:
+                    tracer.station_enter(rid, station, now)
                 if st_busy[station] < st_slots[station]:
                     st_busy[station] += 1
                     self._seq += 1
@@ -1171,6 +1277,7 @@ class TieredMemorySim:
                         r_tissue.append(now)
                         r_ttor.append(0.0)
                         r_service.append(0.0)
+                        r_traced.append(0)
                     out[gi] += 1
                     irq.append(nrid)
                     misses = 0
@@ -1219,6 +1326,11 @@ class TieredMemorySim:
             j = int(self._res_random() * cnt)
             if j < k:
                 res[j] = latency
+        if self._lat_ap is not None:
+            self._lat_ap[wi][tier](latency)
+        if self._tr_every and self._r_traced[rid]:
+            self._tracer.retire(rid, now)
+            self._r_traced[rid] = 0
         # Core slot freed: reissue (round-robin with everyone else), admit.
         self._out[self._r_gi[rid]] -= 1
         self._r_free.append(rid)
@@ -1260,6 +1372,9 @@ class TieredMemorySim:
         # fault-injection mutations land).  The control loop's ``fire``
         # may legitimately skip counters_delta (no controller), so the
         # counter checks live here, not only in the delta hook.
+        prof = self._prof
+        if prof is not None:
+            _pt0 = prof.clock()
         if self._san is not None:
             self._san.on_window(self, self._n_windows + 1)
         # The control loop consumes counter deltas, runs the controller, and
@@ -1267,6 +1382,15 @@ class TieredMemorySim:
         # keeps the window cadence for the timeline flush below.
         self.control.fire()
         self._n_windows += 1
+        if self._lat_wt is not None and self._record_windows:
+            # Snapshot per-(workload, tier) sample counts: per-window
+            # histograms are built from these exact slices at
+            # materialization, so merging them reproduces the full
+            # histogram bucket-for-bucket.
+            self._hist_marks.append(
+                (self._n_windows, self.now,
+                 [[len(s) for s in row] for row in self._lat_wt])
+            )
         if self._fabric_active and self._record_windows:
             # Per-hop port telemetry, sampled at the window boundary.  The
             # window index matches ControlLoop's record indexing (1-based)
@@ -1303,6 +1427,8 @@ class TieredMemorySim:
                 acc[wi] = 0.0
             self._timeline_next += self._timeline_bucket_ns
         self._push(self.control.next_window_ns, _EV_WINDOW, 0)
+        if prof is not None:
+            prof.add("window_pass", prof.clock() - _pt0)
 
     # -- run --------------------------------------------------------------------
     def run(self, sim_ns: float) -> SimResult:
@@ -1360,6 +1486,19 @@ class TieredMemorySim:
         # request transition, nothing per event (the event-order check
         # scans the pending heap at window boundaries instead).
         san = self._san
+        # Observability bindings (same discipline): tracing-off pays one
+        # int-truthiness test per admission/retire, histograms-off one
+        # pointer compare per retire.  ``r_traced`` is the per-rid traced
+        # flag (bytearray indexing beats a dict membership test on the
+        # per-event hook guards).
+        tr_every = self._tr_every
+        tracer = self._tracer
+        tr_limit = tracer.config.limit if tracer is not None else 0
+        r_traced = self._r_traced
+        lat_ap = self._lat_ap
+        prof = self._prof
+        if prof is not None:
+            _rl0 = prof.clock()
         while heap:
             t, packed = pop(heap)
             if t > sim_ns:
@@ -1404,6 +1543,19 @@ class TieredMemorySim:
                     j = int(res_random() * cnt)
                     if j < rk:
                         res[j] = latency
+                if lat_ap is not None:
+                    lat_ap[wi][tier](latency)
+                if tr_every and r_traced[rid]:
+                    tracer.retire(rid, t)
+                    r_traced[rid] = 0
+                    if not tracer.live and len(tracer.done) >= tr_limit:
+                        # Sample budget exhausted: done+live is monotone at
+                        # the limit, so no future admission can ever be
+                        # admitted, and with no live spans left every hook
+                        # is a no-op — drop the loop back to the
+                        # tracing-off fast path.  ``n_dropped`` is
+                        # recomputed in closed form at materialization.
+                        tr_every = 0
                 out[r_gi[rid]] -= 1
                 free.append(rid)
                 if len(irq) < irq_cap:
@@ -1422,6 +1574,10 @@ class TieredMemorySim:
                     if san is not None:
                         san.adm[atier] += 1
                     r_ttor[arid] = t
+                    if tr_every and (self.tor_inserts - 1) % tr_every == 0:
+                        if tracer.admit(arid, r_wl[arid], atier,
+                                        r_tissue[arid], t):
+                            r_traced[arid] = 1
                     awi = r_wl[arid]
                     p = phit[awi]
                     if p == 2.0:
@@ -1438,6 +1594,8 @@ class TieredMemorySim:
                     else:
                         r_station[arid] = station
                         r_service[arid] = service
+                        if tr_every and r_traced[arid]:
+                            tracer.station_enter(arid, station, t)
                         if st_busy[station] < st_slots[station]:
                             st_busy[station] += 1
                             seq = self._seq + 1
@@ -1495,6 +1653,7 @@ class TieredMemorySim:
                                 r_tissue.append(t)
                                 r_ttor.append(0.0)
                                 r_service.append(0.0)
+                                r_traced.append(0)
                             out[gi] += 1
                             irq.append(nrid)
                             misses = 0
@@ -1510,6 +1669,8 @@ class TieredMemorySim:
                     # holding this hop's server under backpressure).
                     self._hop_complete(rid, station)
                     continue
+                if tr_every and r_traced[rid]:
+                    tracer.service_done(rid, station, t, r_service[rid])
                 q = st_q[station]
                 if q:
                     nxt = q.popleft()
@@ -1538,6 +1699,8 @@ class TieredMemorySim:
                 wi = packed & amask
                 self._token_wait[wi] = False
                 self._refill_issue(wi)
+        if prof is not None:
+            prof.add("event_loop", prof.clock() - _rl0)
         self.now = sim_ns
         # Charge partial residency for requests still holding ToR entries at
         # the horizon (admitted = allocated minus free-list minus staged in
@@ -1559,6 +1722,46 @@ class TieredMemorySim:
             st.latency_sum = self._stat_latsum[wi]
             st.latency_count = self._stat_latcnt[wi]
             st.latency_samples = self._stat_res[wi]
+        # Bucket the raw latency lists into mergeable histograms (deferred
+        # off the hot path — one ``from_samples`` pass per (workload, tier)
+        # sublist; the workload and tier histograms are exact merges of the
+        # shared sub-histograms).
+        tier_hists = None
+        lat_wt = self._lat_wt
+        if lat_wt is not None:
+            from repro.obs.histogram import LatencyHistogram, merge_all
+
+            sub = [
+                [LatencyHistogram.from_samples(lst) for lst in row]
+                for row in lat_wt
+            ]
+            for wi, w in enumerate(self.workloads):
+                self.stats[w.name].latency_hist = merge_all(sub[wi])
+            tier_hists = {
+                name: merge_all(row[i] for row in sub)
+                for i, name in enumerate(self._tier_names)
+            }
+        # Fleet metrics: cumulative run counters on the process-default
+        # registry (a handful of dict lookups per *run*, not per event).
+        from repro.obs.metrics import default_registry
+
+        reg = default_registry()
+        reg.counter("des.runs").inc()
+        reg.counter("des.requests").inc(float(sum(self._stat_completed)))
+        reg.counter("des.tor_inserts").inc(float(self.tor_inserts))
+        reg.counter("des.windows").inc(float(self._n_windows))
+        if tracer is not None:
+            reg.counter("des.traced_requests").inc(float(len(tracer.done)))
+            # Closed-form dropped count: the sampler hits exactly the
+            # (k*every + 1)th ToR inserts, and every hit either landed in
+            # done/live or was dropped at the limit.  (The run loop stops
+            # calling ``admit`` once the budget is exhausted, so the
+            # tracer's own running count under-counts.)
+            every = tracer.config.sample_every
+            sampled = (
+                (self.tor_inserts - 1) // every + 1 if self.tor_inserts else 0
+            )
+            tracer.dropped = sampled - len(tracer.done) - len(tracer.live)
         return SimResult(
             sim_ns=sim_ns,
             stats=self.stats,
@@ -1591,12 +1794,44 @@ class TieredMemorySim:
             sanitizer=(
                 self._san.summary(self) if self._san is not None else None
             ),
+            tier_latency_hist=tier_hists,
+            trace=(tracer.run_payload() if tracer is not None else None),
+            profile=(prof.snapshot() if prof is not None else None),
         )
 
     def _window_records(self) -> List[dict]:
         if not self._record_windows:
             return []
         records = [window_record_jsonable(r) for r in self.control.records]
+        if self._hist_marks:
+            # Per-window latency histograms from the sample-count snapshots
+            # taken at each window boundary: window w's histogram is built
+            # from the exact slice of retire latencies that landed in w, so
+            # merging the per-window histograms reproduces the full-run
+            # histogram bucket-for-bucket (same by-window-index merge model
+            # as the fabric log below).
+            from repro.obs.histogram import LatencyHistogram, merge_all
+
+            by_idx = {r["window"]: r for r in records}
+            n_tiers = self._n_tiers
+            prev = [[0] * n_tiers for _ in self.workloads]
+            for widx, t_ns, lens in self._hist_marks:
+                rec = by_idx.get(widx)
+                if rec is None:
+                    rec = {"window": widx, "t_ns": t_ns}
+                    by_idx[widx] = rec
+                    records.append(rec)
+                rec["latency_hist"] = {
+                    w.name: merge_all(
+                        LatencyHistogram.from_samples(
+                            self._lat_wt[wi][t][prev[wi][t]:lens[wi][t]]
+                        )
+                        for t in range(n_tiers)
+                    ).to_jsonable()
+                    for wi, w in enumerate(self.workloads)
+                }
+                prev = lens
+            records.sort(key=lambda r: r["window"])
         if self._fabric_log:
             # Merge the per-hop port telemetry in by window index,
             # synthesizing base records for windows the control loop never

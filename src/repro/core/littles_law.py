@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 
 class OpClass(enum.Enum):
@@ -138,6 +138,28 @@ class TierCounters:
         if total == 0:
             return (1.0, 0.0)
         return (reads / total, writes / total)
+
+
+def linear_percentile(sorted_xs: "Sequence[float]", q: float) -> float:
+    """Order statistic with linear interpolation (numpy's default rule).
+
+    ``sorted_xs`` must be sorted ascending.  The rank is ``q * (n - 1)``;
+    a fractional rank interpolates linearly between the two bracketing
+    order statistics.  This is the percentile rule shared by the latency
+    reservoir (:meth:`repro.core.des.WorkloadStats.percentile_ns`) and the
+    :class:`repro.obs.histogram.LatencyHistogram` read-back, so the two
+    are comparable within the histogram's bucket tolerance.
+    """
+    n = len(sorted_xs)
+    if n == 0:
+        return 0.0
+    r = min(max(q, 0.0), 1.0) * (n - 1)
+    lo = int(r)
+    if lo >= n - 1:
+        return float(sorted_xs[-1])
+    frac = r - lo
+    a = float(sorted_xs[lo])
+    return a + (float(sorted_xs[lo + 1]) - a) * frac
 
 
 def merge_tier_counters(counters: "Sequence[TierCounters]") -> "TierCounters":

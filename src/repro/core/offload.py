@@ -104,6 +104,7 @@ class TransferQueue:
         window_ns: float = 1_000_000.0,
         extra_slow: Sequence[TierSpec] = (),
         sanitize=None,
+        trace: int = 0,
     ):
         self.fast = fast
         self.slow = slow
@@ -147,6 +148,22 @@ class TransferQueue:
             self._counters.attach_sanitizer(self._san.check_counter_deltas)
         else:
             self._san = None
+        # Sampled transfer tracing (repro.obs.trace): every Nth chunk's
+        # enqueue→service→complete span, request-shaped for to_chrome.
+        if trace:
+            from repro.obs.trace import TransferTracer
+
+            self._tracer: Optional[TransferTracer] = TransferTracer(
+                sample_every=int(trace)
+            )
+        else:
+            self._tracer = None
+        # Process-wide observability counters (repro.obs.metrics).
+        from repro.obs.metrics import default_registry
+
+        reg = default_registry()
+        self._m_transfers = reg.counter("offload.transfers")
+        self._m_bytes = reg.counter("offload.bytes")
 
     # -- substrate protocol -------------------------------------------------
     @property
@@ -247,6 +264,7 @@ class TransferQueue:
         done = max(self.now, link_free)
         dones: List[float] = []
         san = self._san
+        tr = self._tracer
         for i in range(n_chunks):
             done = done + service
             if cap is None or i < cap:
@@ -256,7 +274,11 @@ class TransferQueue:
             self._inflight.append(_InFlight(chunk, op, tier, enq, done))
             if san is not None:
                 san.on_submit(tier, chunk)
+            if tr is not None:
+                tr.on_chunk(tier, enq, done, service)
             dones.append(done)
+        self._m_transfers.inc(float(n_chunks))
+        self._m_bytes.inc(float(chunk * n_chunks))
         return done
 
     def slow_backlog(self, tier: Optional[str] = None) -> int:
@@ -312,3 +334,9 @@ class TransferQueue:
     @property
     def decision(self) -> Decision:
         return self._decision
+
+    @property
+    def trace_records(self) -> List[dict]:
+        """Sampled transfer spans (empty when tracing is off); the
+        request-shaped records :func:`repro.obs.trace.to_chrome` accepts."""
+        return [] if self._tracer is None else self._tracer.records

@@ -276,6 +276,13 @@ class ControlLoop:
         self._max_history = max_history
         self._on_window = on_window
         self._windows_run = 0
+        # Process-wide observability counters (repro.obs.metrics): every
+        # loop instance shares the registry's control.* series.
+        from repro.obs.metrics import default_registry
+
+        reg = default_registry()
+        self._m_windows = reg.counter("control.windows")
+        self._m_decisions = reg.counter("control.decisions")
 
     # -- driving ----------------------------------------------------------
     def due(self, now: Optional[float] = None) -> bool:
@@ -285,6 +292,7 @@ class ControlLoop:
     def fire(self) -> Optional[Any]:
         """Run one window now and advance the schedule by ``window_ns``."""
         self.next_window_ns += self.window_ns
+        self._m_windows.inc()
         if self.controller is None:
             return None
         delta = self.substrate.counters_delta()
@@ -296,6 +304,7 @@ class ControlLoop:
         else:
             decision = self.controller.window(*delta)
         self.decisions.append(decision)
+        self._m_decisions.inc()
         self._windows_run += 1
         if self._record or self._on_window is not None:
             rec = WindowRecord(

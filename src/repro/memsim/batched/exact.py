@@ -207,6 +207,18 @@ def run_exact(plan: CellPlan) -> SimResult:
     st.timeline = _timeline(tl_ret, tl_w, sim_ns, window_ns)
 
     names = e["tier_names"]
+    tier_hists = None
+    if getattr(plan.job, "latency_hist", False):
+        # Exact cells have the *full* latency vector — bucket it directly
+        # (better than the scalar reservoir, same mergeable layout).
+        from repro.obs.histogram import LatencyHistogram
+
+        hist = LatencyHistogram.from_samples(latencies)
+        st.latency_hist = hist
+        tier_hists = {
+            names[t]: (hist if t == tier else LatencyHistogram())
+            for t in range(e["n_tiers"])
+        }
     tcs = {}
     for t in range(e["n_tiers"]):
         tc = TierCounters()
@@ -231,4 +243,5 @@ def run_exact(plan: CellPlan) -> SimResult:
         },
         window_records=[],
         tiering=None,
+        tier_latency_hist=tier_hists,
     )

@@ -91,6 +91,30 @@ def run_fluid(
     record_mask = np.array(
         [bool(p.job.record_windows) for p in group.plans]
     )
+    # Analytic latency histograms (repro.obs): fluid cells have no per-
+    # request events, so each window contributes one weighted entry — the
+    # window's mean station latency at the window's completion count —
+    # per workload (and per tier from the device-station split).  Same
+    # mergeable bucket layout as the scalar lane; parity is toleranced,
+    # not exact (documented in docs/observability.md).
+    hist_mask = np.array(
+        [bool(getattr(p.job, "latency_hist", False)) for p in group.plans]
+    )
+    hist_on = bool(hist_mask.any())
+    LatencyHistogram = None
+    hist_w: Optional[list] = None
+    hist_t: Optional[list] = None
+    if hist_on:
+        from repro.obs.histogram import LatencyHistogram
+
+        hist_w = [
+            [LatencyHistogram() for _ in range(W)] if hist_mask[ci] else None
+            for ci in range(C)
+        ]
+        hist_t = [
+            [LatencyHistogram() for _ in range(T)] if hist_mask[ci] else None
+            for ci in range(C)
+        ]
 
     # Station-shaped constants: device service per (c, w, s) with the LLC
     # column; pipeline per station (LLC has none).
@@ -291,7 +315,25 @@ def run_fluid(
         bytes_win = ins_w * (frac * group.bytes_t).sum(axis=2)
         bytes_w += bytes_win
         completed_w += ins_w
-        latsum_w += ins_w * (R_tor + w_irq[:, None])
+        lat_mean = R_tor + w_irq[:, None]  # (C, W) analytic mean latency
+        latsum_w += ins_w * lat_mean
+        if hist_on:
+            lat_dev = r_sta[:, :, :T] + w_irq[:, None, None]
+            for ci in np.flatnonzero(hist_mask & active):
+                hw = hist_w[ci]
+                for wi in range(W):
+                    cnt = float(ins_w[ci, wi])
+                    if cnt > 0.0:
+                        hw[wi].record_weighted(float(lat_mean[ci, wi]), cnt)
+                ht = hist_t[ci]
+                for ti in range(T):
+                    cnt = float(ins_dev[ci, :, ti].sum())
+                    if cnt > 0.0:
+                        mean_t = float(
+                            (ins_dev[ci, :, ti] * lat_dev[ci, :, ti]).sum()
+                            / cnt
+                        )
+                        ht[ti].record_weighted(mean_t, cnt)
         tor_inserts += ins_w.sum(axis=1)
         pop = np.minimum((y * R_tor).sum(axis=1), group.tor_cap)
         tor_occ += pop * dt
@@ -395,7 +437,8 @@ def run_fluid(
         fired_count += fire
         for ci in np.flatnonzero(fire & record_mask):
             has_t = vt is not None and vt.cell_act[ci]
-            if not has_ctl[ci] and not has_t:
+            has_h = bool(hist_on and hist_mask[ci])
+            if not has_ctl[ci] and not has_t and not has_h:
                 continue  # scalar ControlLoop records nothing either
             rec: dict = {
                 "window": int(fired_count[ci]),
@@ -425,6 +468,17 @@ def run_fluid(
                     key: v for key, v in entry.items()
                     if key not in ("window", "t_ns")
                 }
+            if has_h:
+                # One weighted entry per workload — the window's analytic
+                # contribution, same shape as the scalar per-window blocks.
+                lh = {}
+                for wi, nm in enumerate(group.plans[ci].export["w_names"]):
+                    h = LatencyHistogram()
+                    cnt = float(ins_w[ci, wi])
+                    if cnt > 0.0:
+                        h.record_weighted(float(lat_mean[ci, wi]), cnt)
+                    lh[nm] = h.to_jsonable()
+                rec["latency_hist"] = lh
             records[ci].append(rec)
 
     # -- materialize SimResults -------------------------------------------
@@ -447,6 +501,8 @@ def run_fluid(
             st.timeline = [
                 (t, float(b[wi])) for t, b in timelines[ci]
             ]
+            if hist_on and hist_mask[ci]:
+                st.latency_hist = hist_w[ci][wi]
             stats[name] = st
         tcs = {}
         for t in range(nt):
@@ -471,5 +527,9 @@ def run_fluid(
             },
             window_records=records[ci] if plan.job.record_windows else [],
             tiering=vt.summary(ci) if vt is not None else None,
+            tier_latency_hist=(
+                {names[t]: hist_t[ci][t] for t in range(nt)}
+                if hist_on and hist_mask[ci] else None
+            ),
         ))
     return results

@@ -78,6 +78,12 @@ def can_batch(job) -> Optional[str]:
         san = sanitize_enabled()
     if san:
         return "sanitize"
+    # Traced jobs record per-request span chains — an event-level lens the
+    # closed-form/fluid engines cannot produce.  (``latency_hist`` jobs DO
+    # run batched: the exact lane buckets its full latency vector and the
+    # fluid lane synthesizes analytic histograms from station waits.)
+    if getattr(job, "trace", 0):
+        return "trace"
     return None
 
 

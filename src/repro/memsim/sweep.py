@@ -71,6 +71,21 @@ class SimJob:
     #: the ``REPRO_SANITIZE`` environment switch.  Sanitized jobs always
     #: run on the scalar DES (the batched lane cannot be instrumented).
     sanitize: Optional[object] = None
+    #: Sampled request-lifecycle tracing (:mod:`repro.obs.trace`): trace
+    #: every Nth ToR admission's span chain into ``SimResult.trace``
+    #: (0 = off).  Traced jobs always run on the scalar DES — the span
+    #: chain is an event-level lens the closed-form lanes cannot produce.
+    trace: int = 0
+    #: Collect mergeable log-bucketed latency histograms
+    #: (:mod:`repro.obs.histogram`) per workload and per tier — and per
+    #: window when combined with ``record_windows``.  Supported on every
+    #: lane: the exact lane buckets its full latency vector, the fluid
+    #: lane synthesizes analytic histograms from station waits.
+    latency_hist: bool = False
+    #: Record a wall-clock phase profile (setup / event loop / window
+    #: passes) into ``SimResult.profile`` via
+    #: :class:`repro.obs.metrics.PhaseProfiler` (scalar lane only).
+    profile: bool = False
 
     def __post_init__(self):
         # Fail at job construction (with the platform's tier list) rather
@@ -101,6 +116,12 @@ def run_job(job: SimJob) -> SimResult:
             controller = build(
                 job.platform, job.granularity, **job.miku_overrides
             )
+    prof = None
+    if job.profile:
+        from repro.obs.metrics import PhaseProfiler
+
+        prof = PhaseProfiler()
+        _t0 = prof.clock()
     sim = TieredMemorySim(
         job.platform,
         job.workloads,
@@ -113,7 +134,12 @@ def run_job(job: SimJob) -> SimResult:
         control_scope="edge" if job.miku and job.miku_law == "peredge"
         else "tier",
         sanitize=job.sanitize,
+        latency_hist=job.latency_hist,
+        trace=job.trace,
+        profiler=prof,
     )
+    if prof is not None:
+        prof.add("setup", prof.clock() - _t0)
     return sim.run(job.sim_ns)
 
 
@@ -159,6 +185,13 @@ def run_sweep(
             f"unknown sweep lane {lane!r}; expected 'scalar' or 'batched'"
         )
     jobs = list(jobs)
+    # Pool metrics on the parent-process registry (worker registries are
+    # per-process and not folded back; see docs/observability.md).
+    from repro.obs.metrics import default_registry
+
+    reg = default_registry()
+    reg.counter("sweep.jobs").inc(float(len(jobs)))
+    reg.counter(f"sweep.lane.{lane}").inc(float(len(jobs)))
     if lane == "batched":
         from repro.memsim.batched import run_sweep_batched
 

@@ -1,0 +1,214 @@
+"""Mergeable log-bucketed latency histograms (HDR-style).
+
+The bucket layout is *globally fixed* — it does not depend on the data —
+which is what makes the merge exact: two histograms recorded anywhere
+(different windows, different grid cells, different process-pool shards)
+always share bucket boundaries, so merging is per-index count addition
+and ``merge(h(a), h(b)) == h(a + b)`` bucket-for-bucket.
+
+Layout: each power-of-two octave ``[2^(e-1), 2^e)`` is split into 16
+linear sub-buckets.  For a value ``v > 0`` with ``m, e = math.frexp(v)``
+(``m in [0.5, 1)``), the sub-bucket is ``int((m - 0.5) * 32)`` (0..15)
+and the global index is ``e * 16 + sub``.  Bucket ``idx`` therefore
+covers ``[ldexp(1 + s/16, e-1), ldexp(1 + (s+1)/16, e-1))`` with
+``e, s = divmod(idx, 16)``.  The relative width of a bucket is
+``1/(16 + s) <= 1/16``, so any percentile read back from the histogram
+is within **6.25 %** of the true order statistic (the documented
+tolerance vs. the reservoir is 7 % to absorb interpolation slack).
+
+Counts may be floats: the batched fluid lane synthesizes analytic
+histograms from per-window station waits via :meth:`record_weighted`
+with fractional request counts.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, Optional, Tuple
+
+__all__ = ["LatencyHistogram", "bucket_bounds", "bucket_index"]
+
+_SUBBUCKETS = 16
+
+
+def bucket_index(v: float) -> int:
+    """Global bucket index for a positive value (see module docstring)."""
+    m, e = math.frexp(v)
+    return e * _SUBBUCKETS + int((m - 0.5) * 32)
+
+
+def bucket_bounds(idx: int) -> Tuple[float, float]:
+    """``[lo, hi)`` covered by global bucket ``idx``."""
+    e, s = divmod(idx, _SUBBUCKETS)
+    lo = math.ldexp(1.0 + s / 16.0, e - 1)
+    hi = math.ldexp(1.0 + (s + 1) / 16.0, e - 1)
+    return lo, hi
+
+
+class LatencyHistogram:
+    """Sparse log-bucketed histogram with exact merge.
+
+    Equality compares the exactly-mergeable state — ``n``, ``zero``, the
+    bucket counts, and the min/max water marks.  The running ``total``
+    is a float accumulation whose value depends on summation order, so
+    it is deliberately excluded from ``__eq__`` (it still merges
+    additively and is what :meth:`mean` reads).
+    """
+
+    __slots__ = ("counts", "n", "zero", "total", "vmin", "vmax")
+
+    def __init__(self) -> None:
+        self.counts: Dict[int, float] = {}
+        self.n: float = 0.0
+        self.zero: float = 0.0  # values <= 0 (defensive; latencies are > 0)
+        self.total: float = 0.0
+        self.vmin: float = math.inf
+        self.vmax: float = -math.inf
+
+    # -- recording ----------------------------------------------------
+    def record(self, v: float) -> None:
+        self.record_weighted(v, 1.0)
+
+    def record_weighted(self, v: float, count: float) -> None:
+        """Record ``count`` observations of value ``v`` (count may be float)."""
+        if count <= 0.0:
+            return
+        self.n += count
+        self.total += v * count
+        if v < self.vmin:
+            self.vmin = v
+        if v > self.vmax:
+            self.vmax = v
+        if v <= 0.0:
+            self.zero += count
+            return
+        idx = bucket_index(v)
+        self.counts[idx] = self.counts.get(idx, 0.0) + count
+
+    @classmethod
+    def from_samples(cls, values: Iterable[float]) -> "LatencyHistogram":
+        """Histogram of a sample vector (numpy fast path for long inputs)."""
+        h = cls()
+        vals = values if isinstance(values, list) else list(values)
+        if len(vals) >= 512:
+            try:
+                import numpy as np
+            except ImportError:  # pragma: no cover - numpy is a core dep
+                np = None
+            if np is not None:
+                arr = np.asarray(vals, dtype=float)
+                pos = arr[arr > 0.0]
+                nz = arr.size - pos.size
+                m, e = np.frexp(pos)
+                idx = e.astype(np.int64) * _SUBBUCKETS + ((m - 0.5) * 32).astype(
+                    np.int64
+                )
+                uniq, cnt = np.unique(idx, return_counts=True)
+                h.counts = {int(i): float(c) for i, c in zip(uniq, cnt)}
+                h.n = float(arr.size)
+                h.zero = float(nz)
+                h.total = float(math.fsum(vals))
+                h.vmin = float(arr.min())
+                h.vmax = float(arr.max())
+                return h
+        for v in vals:
+            h.record(float(v))
+        return h
+
+    # -- merge --------------------------------------------------------
+    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        """Exact merge: a new histogram with per-bucket counts added."""
+        out = LatencyHistogram()
+        out.counts = dict(self.counts)
+        for idx, c in other.counts.items():
+            out.counts[idx] = out.counts.get(idx, 0.0) + c
+        out.n = self.n + other.n
+        out.zero = self.zero + other.zero
+        out.total = self.total + other.total
+        out.vmin = min(self.vmin, other.vmin)
+        out.vmax = max(self.vmax, other.vmax)
+        return out
+
+    # -- reading ------------------------------------------------------
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+    def percentile(self, q: float) -> float:
+        """Approximate order statistic (rank ``q * (n - 1)``).
+
+        Walks the sorted buckets to the one containing the rank and
+        interpolates linearly inside it; the result is clamped to the
+        observed ``[vmin, vmax]``.  Max relative error is the bucket
+        relative width, <= 1/16.
+        """
+        if not self.n:
+            return 0.0
+        r = min(max(q, 0.0), 1.0) * (self.n - 1.0)
+        if r < self.zero:
+            return min(0.0, self.vmin)
+        cum = self.zero
+        for idx in sorted(self.counts):
+            c = self.counts[idx]
+            if r < cum + c:
+                lo, hi = bucket_bounds(idx)
+                pos = (r - cum + 0.5) / c
+                v = lo + pos * (hi - lo)
+                return min(max(v, self.vmin), self.vmax)
+            cum += c
+        return self.vmax
+
+    # -- (de)serialisation --------------------------------------------
+    def to_jsonable(self) -> dict:
+        return {
+            "scheme": "log16",
+            "n": self.n,
+            "zero": self.zero,
+            "total": self.total,
+            "min": self.vmin if self.n else None,
+            "max": self.vmax if self.n else None,
+            "counts": {str(idx): c for idx, c in sorted(self.counts.items())},
+        }
+
+    @classmethod
+    def from_jsonable(cls, blob: Optional[dict]) -> "LatencyHistogram":
+        h = cls()
+        if not blob:
+            return h
+        h.counts = {int(k): float(v) for k, v in blob.get("counts", {}).items()}
+        h.n = float(blob.get("n", 0.0))
+        h.zero = float(blob.get("zero", 0.0))
+        h.total = float(blob.get("total", 0.0))
+        h.vmin = blob["min"] if blob.get("min") is not None else math.inf
+        h.vmax = blob["max"] if blob.get("max") is not None else -math.inf
+        return h
+
+    # -- comparison / repr --------------------------------------------
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, LatencyHistogram):
+            return NotImplemented
+        return (
+            self.n == other.n
+            and self.zero == other.zero
+            and self.counts == other.counts
+            and (self.vmin == other.vmin or (not self.n and not other.n))
+            and (self.vmax == other.vmax or (not self.n and not other.n))
+        )
+
+    def __hash__(self) -> int:  # pragma: no cover - dict use only
+        return id(self)
+
+    def __repr__(self) -> str:
+        if not self.n:
+            return "LatencyHistogram(empty)"
+        return (
+            f"LatencyHistogram(n={self.n:g}, mean={self.mean():.1f}, "
+            f"p50={self.percentile(0.5):.1f}, p99={self.percentile(0.99):.1f})"
+        )
+
+
+def merge_all(hists: Iterable[LatencyHistogram]) -> LatencyHistogram:
+    """Fold :meth:`LatencyHistogram.merge` over an iterable."""
+    out = LatencyHistogram()
+    for h in hists:
+        out = out.merge(h)
+    return out

@@ -61,6 +61,7 @@ def _job(
     window_ns: float = 10_000.0,
     miku_law: str = "pertier",
     tiering=None,
+    latency_hist: bool = False,
 ) -> SimJob:
     return SimJob(
         platform=platform,
@@ -72,6 +73,7 @@ def _job(
         miku=miku,
         miku_law=miku_law,
         tiering=tiering,
+        latency_hist=latency_hist,
     )
 
 
@@ -225,18 +227,24 @@ register(Scenario(
 
 def _fig4_build(platform, cell) -> List[SimJob]:
     wl = lat_test(cell["tier"], OpClass.LOAD, cell["threads"])
-    return [_job(platform, [wl], 400_000.0, granularity=1)]
+    return [_job(platform, [wl], 400_000.0, granularity=1,
+                 latency_hist=True)]
 
 
 def _fig4_reduce(platform, cell, jobs, results) -> List[dict]:
     (job,), (res,) = jobs, results
     st = res.stats[job.workloads[0].name]
+    # p50/p99 stay on the reservoir (the pinned-golden source); p95 comes
+    # from the mergeable histogram (bucket relative error <= 1/16 — see
+    # docs/observability.md).
+    hist = st.latency_hist
     return [{
         "platform": cell["platform"],
         "tier": cell["tier"],
         "threads": cell["threads"],
         "avg_ns": st.mean_latency_ns(),
         "p50_ns": st.percentile_ns(0.50),
+        "p95_ns": hist.percentile(0.95) if hist is not None else 0.0,
         "p99_ns": st.percentile_ns(0.99),
     }]
 
@@ -252,10 +260,66 @@ register(Scenario(
         Axis("threads", (1, 2, 4, 8, 16), help="lat-test thread count"),
     ),
     metrics=(
-        Metric("avg_ns", "ns"), Metric("p50_ns", "ns"), Metric("p99_ns", "ns"),
+        Metric("avg_ns", "ns"), Metric("p50_ns", "ns"),
+        Metric("p95_ns", "ns", "from the mergeable latency histogram"),
+        Metric("p99_ns", "ns"),
     ),
     build=_fig4_build,
     reduce=_fig4_reduce,
+))
+
+
+# -- Loaded latency: a latency probe against a bandwidth load ladder ----------
+
+
+def _loaded_lat_build(platform, cell) -> List[SimJob]:
+    wls = [lat_test(cell["tier"], OpClass.LOAD, 1, name="probe")]
+    n = cell["load_threads"]
+    if n > 0:
+        wls.append(bw_test(cell["tier"], cell["op"], n, name="load",
+                           miku_managed=False))
+    return [_job(platform, wls, 400_000.0, granularity=1,
+                 latency_hist=True)]
+
+
+def _loaded_lat_reduce(platform, cell, jobs, results) -> List[dict]:
+    (job,), (res,) = jobs, results
+    st = res.stats["probe"]
+    hist = st.latency_hist
+    return [{
+        "platform": cell["platform"],
+        "tier": cell["tier"],
+        "load_threads": cell["load_threads"],
+        "load_gbps":
+            res.bandwidth("load") if cell["load_threads"] > 0 else 0.0,
+        "avg_ns": st.mean_latency_ns(),
+        "p50_ns": st.percentile_ns(0.50),
+        "p95_ns": hist.percentile(0.95) if hist is not None else 0.0,
+        "p99_ns": st.percentile_ns(0.99),
+    }]
+
+
+register(Scenario(
+    name="loaded_latency",
+    title="Latency-under-load curve: probe latency vs bandwidth load",
+    figure="Fig. 4",
+    module="loaded_latency",
+    axes=(
+        _platform_axis(),
+        Axis("tier", _TWO_TIERS, help="tier under test"),
+        Axis("load_threads", (0, 2, 4, 8, 16),
+             help="bw-test threads loading the same tier (0 = unloaded)"),
+        _op_axis(OpClass.LOAD),
+    ),
+    metrics=(
+        Metric("load_gbps", "GB/s", "bandwidth the load workload delivers"),
+        Metric("avg_ns", "ns", "probe mean latency"),
+        Metric("p50_ns", "ns"),
+        Metric("p95_ns", "ns", "from the mergeable latency histogram"),
+        Metric("p99_ns", "ns"),
+    ),
+    build=_loaded_lat_build,
+    reduce=_loaded_lat_reduce,
 ))
 
 

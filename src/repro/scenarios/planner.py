@@ -120,12 +120,26 @@ def run_scenario(
     *,
     trace: bool = False,
     lane: Optional[str] = None,
+    perfetto: bool = False,
+    profile: bool = False,
 ) -> ResultTable:
     """Execute a scenario and collect its uniform result table.
 
     ``trace=True`` (grid scenarios only) turns on per-window control-plane
     telemetry recording in every job and attaches the per-cell window
     records as ``ResultTable.traces``.
+
+    ``perfetto=True`` (grid scenarios only) turns on sampled
+    request-lifecycle tracing (:mod:`repro.obs.trace`, every 16th ToR
+    admission) in every job and attaches the per-cell span payloads as
+    ``ResultTable.request_traces`` — the records ``benchmarks/run.py
+    --perfetto`` exports as Chrome trace-event JSON.  Traced jobs always
+    run on the scalar DES.
+
+    ``profile=True`` records a wall-clock phase profile (plan / sweep /
+    reduce, plus each scalar job's setup / event-loop / window split) into
+    ``ResultTable.meta["profile"]`` and snapshots the process-wide
+    observability counters into ``meta["metrics"]``.
 
     ``lane="batched"`` routes the whole grid through the vectorized sweep
     lane (:mod:`repro.memsim.batched`); jobs it cannot express fall back to
@@ -139,6 +153,12 @@ def run_scenario(
     values = resolve_axes(sc, overrides)
     rows: List[Dict[str, Any]] = []
     traces: Optional[List[Dict[str, Any]]] = [] if trace else None
+    req_traces: Optional[List[Dict[str, Any]]] = [] if perfetto else None
+    prof = None
+    if profile:
+        from repro.obs.metrics import PhaseProfiler
+
+        prof = PhaseProfiler()
     # Resolve the effective lane up front so meta reports what actually ran
     # (lane=None defers to REPRO_SWEEP_LANE, exactly like run_sweep).
     lane = lane or default_lane()
@@ -149,13 +169,24 @@ def run_scenario(
                 f"scenario {sc.name!r} is multi-stage (run_cell); per-window "
                 "decision tracing supports grid scenarios only"
             )
+        if perfetto:
+            raise ValueError(
+                f"scenario {sc.name!r} is multi-stage (run_cell); request-"
+                "lifecycle tracing supports grid scenarios only"
+            )
         if lane == "batched":
             meta = {"lane": "scalar",
                     "note": "multi-stage (run_cell) scenario; the batched "
                             "lane applies to grid scenarios only"}
+        if prof is not None:
+            _pt = prof.clock()
         for cell, pm in _resolved_cells(sc, values):
             rows.extend(sc.run_cell(pm, cell, processes))
+        if prof is not None:
+            prof.add("run_cell", prof.clock() - _pt)
     else:
+        if prof is not None:
+            _pt = prof.clock()
         planned = [
             (cell, pm, sc.build(pm, cell))
             for cell, pm in _resolved_cells(sc, values)
@@ -166,6 +197,22 @@ def run_scenario(
                  [dataclasses.replace(j, record_windows=True) for j in jobs])
                 for cell, pm, jobs in planned
             ]
+        if perfetto:
+            # Every 16th ToR admission: dense enough that even a short CI
+            # cell lands spans, sparse enough to keep the export small.
+            planned = [
+                (cell, pm,
+                 [dataclasses.replace(j, trace=16) for j in jobs])
+                for cell, pm, jobs in planned
+            ]
+        if prof is not None:
+            planned = [
+                (cell, pm,
+                 [dataclasses.replace(j, profile=True) for j in jobs])
+                for cell, pm, jobs in planned
+            ]
+            prof.add("plan", prof.clock() - _pt)
+            _pt = prof.clock()
         all_jobs: List[SimJob] = [j for _, _, jobs in planned for j in jobs]
         if lane == "batched":
             from repro.memsim.batched import partition_jobs, run_sweep_batched
@@ -187,6 +234,9 @@ def run_scenario(
             )
         else:
             results = run_sweep(all_jobs, processes, lane=lane)
+        if prof is not None:
+            prof.add("sweep", prof.clock() - _pt)
+            _pt = prof.clock()
         i = 0
         for cell, pm, jobs in planned:
             chunk = results[i: i + len(jobs)]
@@ -205,8 +255,32 @@ def run_scenario(
                         for j, (job, res) in enumerate(zip(jobs, chunk))
                     ],
                 })
+            if req_traces is not None:
+                req_traces.append({
+                    "cell": {k: getattr(v, "value", v)
+                             for k, v in cell.items()},
+                    "jobs": [
+                        {
+                            "job": j,
+                            "workloads": [w.name for w in job.workloads],
+                            "trace": res.trace,
+                        }
+                        for j, (job, res) in enumerate(zip(jobs, chunk))
+                    ],
+                })
+        if prof is not None:
+            prof.add("reduce", prof.clock() - _pt)
+    if prof is not None:
+        from repro.obs.metrics import default_registry
+
+        meta["profile"] = prof.snapshot()
+        meta["profile"]["jobs"] = [
+            r.profile for r in results if getattr(r, "profile", None)
+        ] if sc.run_cell is None else []
+        meta["metrics"] = default_registry().snapshot()
     return ResultTable(scenario=sc.name, rows=rows, params=values,
-                       traces=traces, meta=meta)
+                       traces=traces, meta=meta,
+                       request_traces=req_traces)
 
 
 def parse_set_args(

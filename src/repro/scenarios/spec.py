@@ -173,6 +173,13 @@ class ResultTable:
     #: lane, how many jobs it expressed vs routed back to the scalar DES
     #: (``fallback_reasons`` says why) — see ``run_scenario(..., lane=)``.
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: Sampled request-lifecycle span records (one entry per cell, each
+    #: with its jobs' ``SimResult.trace`` payloads) — populated only under
+    #: ``run_scenario(..., perfetto=True)`` (``benchmarks/run.py
+    #: --perfetto``).  Excluded from :meth:`to_json`; the CLI exports it
+    #: separately as Chrome trace-event JSON via
+    #: :func:`repro.obs.trace.to_chrome`.
+    request_traces: Optional[List[Dict[str, Any]]] = None
 
     def __post_init__(self):
         self.rows = [{k: _plain(v) for k, v in r.items()} for r in self.rows]

@@ -279,9 +279,12 @@ class TieredServingCluster:
         controller: Optional[MikuController] = None,
         window_ns: float = 2e6,
         hbm_bw: float = HBM_TIER.bandwidth_gbps,  # B/ns per chip
+        trace: int = 0,
     ):
         self.engines = engines
-        self.queue = TransferQueue(controller=controller, window_ns=window_ns)
+        self.queue = TransferQueue(
+            controller=controller, window_ns=window_ns, trace=trace
+        )
         #: The cluster's control plane is the transfer queue's ControlLoop —
         #: same substrate interface as the DES and the launcher.
         self.control = self.queue.control
@@ -353,6 +356,9 @@ class TieredServingCluster:
                  **{f"tok_{k}": float(v) for k, v in produced.items()}}
             )
         out: Dict[str, Dict[str, float]] = {}
+        from repro.obs.metrics import default_registry
+
+        reg = default_registry()
         for eng in self.engines:
             name = eng.cfg.name
             toks = sum(len(r.output) for r in eng.done)
@@ -364,4 +370,6 @@ class TieredServingCluster:
                 "tokens_per_s": toks / span * 1e9,
                 "requests": float(len(eng.done)),
             }
+            reg.counter("serving.tokens").inc(float(toks))
+            reg.counter("serving.requests").inc(float(len(eng.done)))
         return out

@@ -97,11 +97,17 @@ def test_fig3_plan_matches_legacy_matrix():
 
 
 def test_fig4_plan_matches_legacy_matrix():
+    import dataclasses
+
     planned = plan("fig4_latency", {"platform": "A"})
     got = [j for _, _, jobs in planned for j in jobs]
+    # fig4 now also collects the mergeable latency histogram (p95_ns
+    # row); everything the seed runner pinned is otherwise unchanged.
     legacy = [
-        _legacy_job(P, [lat_test(tier, OpClass.LOAD, n)], 400_000.0,
-                    granularity=1)
+        dataclasses.replace(
+            _legacy_job(P, [lat_test(tier, OpClass.LOAD, n)], 400_000.0,
+                        granularity=1),
+            latency_hist=True)
         for tier in ("ddr", "cxl")
         for n in (1, 2, 4, 8, 16)
     ]
