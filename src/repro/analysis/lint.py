@@ -46,7 +46,7 @@ from typing import Iterable, List, Optional, Sequence, Set, Tuple
 #: Packages (relative to ``src/repro``) whose files are sim hot paths for
 #: the nondeterminism rule.
 _SIM_PACKAGES = ("core", "memsim", "tiering", "fabric", "scenarios",
-                 "analysis")
+                 "analysis", "workload")
 
 #: TierCounters fields only the substrate may write.
 _COUNTER_FIELDS = ("inserts", "occupancy_time")

@@ -24,6 +24,8 @@ check id                invariant
 ``counter-monotone``    cumulative per-tier counters never decrease
 ``counter-delta``       window deltas handed to the control loop are
                         non-negative (hooked into TierSetWindowedCounters)
+``arrival-conservation``  open-loop generated requests are conserved per
+                        workload (``generated == issued + shed + backlog``)
 ``token-bucket``        throttle token buckets never go negative
 ``migrate-debt``        MigrationEngine completion credit never goes
                         negative
@@ -113,6 +115,7 @@ class DesSanitizer:
         self._check_entry_limits(sim, window)
         self._check_station_occupancy(sim, window)
         self._check_counter_monotone(sim, window)
+        self._check_arrival_conservation(sim, window)
         self._check_token_buckets(sim, window)
         self._check_migrate_debt(sim, window)
         self._check_stall_cycles(sim, window)
@@ -292,6 +295,31 @@ class DesSanitizer:
                     )
         self._tc_ins_mark = list(ins)
         self._tc_occ_mark = list(occ)
+
+    def _check_arrival_conservation(self, sim: Any, window: int) -> None:
+        """Open-loop arrivals are conserved per workload: every generated
+        request was issued into the pipeline, shed at the queue limit, or
+        still waits in the backlog — exactly one of the three."""
+        for wi, is_open in enumerate(getattr(sim, "_w_open", ())):
+            if not is_open:
+                continue
+            gen = sim._arr_gen[wi]
+            issued = sim._arr_issued[wi]
+            shed = sim._arr_shed[wi]
+            backlog = len(sim._arr_q[wi])
+            if gen != issued + shed + backlog:
+                self.violate(
+                    "arrival-conservation",
+                    f"workload {sim.workloads[wi].name!r}: generated "
+                    f"({gen}) != issued ({issued}) + shed ({shed}) + "
+                    f"backlog ({backlog})",
+                    window=window,
+                    workload=sim.workloads[wi].name,
+                    generated=gen,
+                    issued=issued,
+                    shed=shed,
+                    backlog=backlog,
+                )
 
     def _check_token_buckets(self, sim: Any, window: int) -> None:
         for wi, tokens in enumerate(sim._tokens):

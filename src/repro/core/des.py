@@ -76,6 +76,7 @@ _EV_PHASE = 1
 _EV_WINDOW = 2
 _EV_TOKEN = 3
 _EV_RETIRE = 4  # data returned: ToR entry frees, core slot recycles
+_EV_ARRIVAL = 5  # open-loop arrival: one generated request joins its backlog
 
 _KIND_SHIFT = 32
 _SEQ_SHIFT = 36
@@ -137,6 +138,15 @@ class WorkloadSpec:
     #: (``PlatformModel.fabric``); default is the topology's first host.
     #: Must be None on fabric-less platforms.
     host: Optional[str] = None
+    #: Optional open-loop arrival process
+    #: (:class:`repro.workload.arrivals.ArrivalSpec`).  None — the default
+    #: and the bit-identical legacy path — keeps the closed-loop MLP
+    #: re-issue loop.  Set, the workload's cores only issue while the
+    #: arrival backlog is non-empty (still bounded by MLP / IRQ / ToR /
+    #: throttles), request latency is measured from *generation* time (so
+    #: it includes backlog wait), and generated/issued/shed/backlog
+    #: counts are accounted per window when the system falls behind.
+    arrival: Optional[object] = None
 
     def effective_mlp(self, granularity: int = 1) -> int:
         """Outstanding *simulated requests* per core (macro-request units)."""
@@ -174,6 +184,12 @@ def validate_workloads(
             raise ValueError(
                 f"workload {w.name!r}: placement and ddr_fraction are "
                 "mutually exclusive"
+            )
+        if w.arrival is not None and not hasattr(w.arrival, "kind"):
+            raise ValueError(
+                f"workload {w.name!r}: arrival= expects a "
+                "repro.workload.arrivals.ArrivalSpec, got "
+                f"{type(w.arrival).__name__}"
             )
         refs = [w.tier]
         if w.phases:
@@ -218,9 +234,15 @@ class WorkloadStats:
     def percentile_ns(self, q: float) -> float:
         """Reservoir percentile with linear interpolation between order
         statistics (rank ``q * (n - 1)``; see
-        :func:`repro.core.littles_law.linear_percentile`)."""
+        :func:`repro.core.littles_law.linear_percentile`).
+
+        NaN with no samples: an open-loop overload can starve a workload
+        (or a window) of completions entirely, and 0 ns would read as an
+        impossibly *good* latency in an SLO sweep.  NaN propagates
+        honestly through downstream aggregation and never satisfies a
+        ``p99 <= budget`` comparison."""
         if not self.latency_samples:
-            return 0.0
+            return float("nan")
         return linear_percentile(sorted(self.latency_samples), q)
 
     def bandwidth_gbps(self, sim_ns: float) -> float:
@@ -259,6 +281,11 @@ class SimResult:
     #: the request's tier; LLC hits count toward their tier).  None unless
     #: the sim ran with ``latency_hist=True``.
     tier_latency_hist: Optional[dict] = None
+    #: Open-loop arrival accounting per arrival-bearing workload
+    #: (generated / issued / shed counts and final backlog depth — the
+    #: conservation identity is generated == issued + shed + backlog).
+    #: None unless some workload carries an ``arrival=`` spec.
+    arrival: Optional[dict] = None
     #: Sampled request-lifecycle trace payload (finalized span records;
     #: see :meth:`repro.obs.trace.RequestTracer.run_payload`).  None unless
     #: the sim ran with ``trace`` enabled.
@@ -486,6 +513,48 @@ class TieredMemorySim:
                 self._rr_wi.append(wi)
                 self._rr_core.append(core)
                 self._out.append(0)
+
+        # -- open-loop arrivals (repro.workload) --------------------------
+        # A workload with an ``arrival=`` spec becomes open-loop: a
+        # generator feeds a per-workload backlog deque of (t_generated,
+        # key) pairs via _EV_ARRIVAL events, and the round-robin issue
+        # scan only lets its cores issue while the backlog is non-empty
+        # (popping the head and stamping the request's latency clock with
+        # its *generation* time).  Generators draw from their own seeded
+        # streams (never ``self.rng``), and with no arrival specs the
+        # only new cost on the issue path is one flag test per scan step
+        # — the arrival=None sim stays bit-identical to the goldens.
+        self._w_open: List[bool] = []
+        self._arr_q: List[deque] = []
+        self._arr_qlimit: List[Optional[int]] = []
+        self._arr_gen = [0] * n
+        self._arr_issued = [0] * n
+        self._arr_shed = [0] * n
+        self._arr_iter: List[Optional[object]] = []
+        self._arr_pending: List[Optional[Tuple[float, float]]] = []
+        for wi, w in enumerate(self.workloads):
+            arr = w.arrival
+            self._w_open.append(arr is not None)
+            self._arr_q.append(deque())
+            if arr is not None:
+                # Lazy import: the core only depends on repro.workload
+                # when a sim actually runs open-loop (same discipline as
+                # the sanitizer / obs imports).
+                from repro.workload.arrivals import arrival_iter
+
+                it = arrival_iter(arr, stream_seed=(seed << 8) ^ wi)
+                self._arr_qlimit.append(arr.queue_limit)
+                self._arr_iter.append(it)
+                self._arr_pending.append(next(it, None))
+            else:
+                self._arr_qlimit.append(None)
+                self._arr_iter.append(None)
+                self._arr_pending.append(None)
+        self._open_active = any(self._w_open)
+        self._arrival_log: List[dict] = []
+        self._arr_gen_mark = [0] * n
+        self._arr_issued_mark = [0] * n
+        self._arr_shed_mark = [0] * n
 
         # Device pipeline (return-flight) latency per tier.
         self._pipe = tuple(d.pipeline_ns for d in tiers)
@@ -1085,6 +1154,9 @@ class TieredMemorySim:
         unthrottled, svc = self._unthrottled, self._w_svc
         rnd = self.rng.random
         free = self._r_free
+        open_w, arr_q = self._w_open, self._arr_q
+        arr_issued = self._arr_issued
+        now = self.now
         misses = 0
         while len(irq) < cap and misses < n:
             gi = ptr
@@ -1099,34 +1171,51 @@ class TieredMemorySim:
             if lim is not None and rr_core[gi] >= lim:
                 misses += 1
                 continue
+            # Open-loop gate: an arrival-fed workload only issues while
+            # its backlog holds a generated request (the head's key draws
+            # keyed tier routing without touching the sim RNG).
+            if open_w[wi]:
+                aq = arr_q[wi]
+                if not aq:
+                    misses += 1
+                    continue
+                key = aq[0][1]
+            else:
+                key = -1.0
             frac = frac_of[wi]
             if frac is None:
                 cum = cum_of[wi]
                 if cum is None:
                     tier = cur_tier[wi]
                 else:  # general placement lottery (one draw, like frac)
-                    r = rnd()
+                    r = key if key >= 0.0 else rnd()
                     tier = 0
                     while r >= cum[tier]:
                         tier += 1
             else:
-                tier = _DDR if rnd() < frac else _CXL
+                r = key if key >= 0.0 else rnd()
+                tier = _DDR if r < frac else _CXL
             if not unthrottled[wi] and not self._take_token(wi, svc[wi][tier]):
                 misses += 1
                 continue
+            if open_w[wi]:
+                tissue = arr_q[wi].popleft()[0]
+                arr_issued[wi] += 1
+            else:
+                tissue = now
             if free:
                 rid = free.pop()
                 self._r_wl[rid] = wi
                 self._r_gi[rid] = gi
                 self._r_tier[rid] = tier
-                self._r_tissue[rid] = self.now
+                self._r_tissue[rid] = tissue
             else:
                 rid = len(self._r_wl)
                 self._r_wl.append(wi)
                 self._r_gi.append(gi)
                 self._r_tier.append(tier)
                 self._r_station.append(tier)
-                self._r_tissue.append(self.now)
+                self._r_tissue.append(tissue)
                 self._r_ttor.append(0.0)
                 self._r_service.append(0.0)
                 self._r_traced.append(0)
@@ -1168,6 +1257,8 @@ class TieredMemorySim:
         cum_of = self._w_cum
         unthrottled = self._unthrottled
         free = self._r_free
+        open_w, arr_q = self._w_open, self._arr_q
+        arr_issued = self._arr_issued
         tier_inflight = self._tier_inflight
         llc = self._llc
         fabric_on = self._fabric_active
@@ -1245,36 +1336,50 @@ class TieredMemorySim:
                     if lim is not None and rr_core[gi] >= lim:
                         misses += 1
                         continue
+                    if open_w[iwi]:
+                        aq = arr_q[iwi]
+                        if not aq:
+                            misses += 1
+                            continue
+                        key = aq[0][1]
+                    else:
+                        key = -1.0
                     frac = frac_of[iwi]
                     if frac is None:
                         icum = cum_of[iwi]
                         if icum is None:
                             itier = cur_tier[iwi]
                         else:
-                            r = rnd()
+                            r = key if key >= 0.0 else rnd()
                             itier = 0
                             while r >= icum[itier]:
                                 itier += 1
                     else:
-                        itier = _DDR if rnd() < frac else _CXL
+                        r = key if key >= 0.0 else rnd()
+                        itier = _DDR if r < frac else _CXL
                     if not unthrottled[iwi] and not self._take_token(
                         iwi, svc[iwi][itier]
                     ):
                         misses += 1
                         continue
+                    if open_w[iwi]:
+                        tissue = arr_q[iwi].popleft()[0]
+                        arr_issued[iwi] += 1
+                    else:
+                        tissue = now
                     if free:
                         nrid = free.pop()
                         r_wl[nrid] = iwi
                         r_gi[nrid] = gi
                         r_tier[nrid] = itier
-                        r_tissue[nrid] = now
+                        r_tissue[nrid] = tissue
                     else:
                         nrid = len(r_wl)
                         r_wl.append(iwi)
                         r_gi.append(gi)
                         r_tier.append(itier)
                         r_station.append(itier)
-                        r_tissue.append(now)
+                        r_tissue.append(tissue)
                         r_ttor.append(0.0)
                         r_service.append(0.0)
                         r_traced.append(0)
@@ -1338,6 +1443,32 @@ class TieredMemorySim:
             self._fill_irq()
         if self.irq and self.tor_used < self.tor_capacity:
             self._pump()
+
+    # -- open-loop arrivals ---------------------------------------------------
+    def _schedule_arrivals(self) -> None:
+        """Schedule each open-loop workload's first generated arrival."""
+        for wi, pend in enumerate(self._arr_pending):
+            if pend is not None:
+                self._push(pend[0], _EV_ARRIVAL, wi)
+
+    def _arrival(self, wi: int) -> None:
+        """One generated request lands: join the backlog (or shed at the
+        queue limit), schedule the generator's next arrival, and re-open
+        the issue path — the newly backlogged request may issue now."""
+        pend = self._arr_pending[wi]
+        self._arr_gen[wi] += 1
+        q = self._arr_q[wi]
+        lim = self._arr_qlimit[wi]
+        if lim is not None and len(q) >= lim:
+            self._arr_shed[wi] += 1
+        else:
+            q.append(pend)
+        nxt = next(self._arr_iter[wi], None)
+        self._arr_pending[wi] = nxt
+        if nxt is not None:
+            self._push(nxt[0], _EV_ARRIVAL, wi)
+        self._fill_irq()
+        self._pump()
 
     # -- phases / windows ------------------------------------------------------
     def _schedule_phases(self) -> None:
@@ -1411,6 +1542,29 @@ class TieredMemorySim:
                     for i, name in enumerate(self._link_names)
                 },
             })
+        if self._open_active and self._record_windows:
+            # Per-window open-loop accounting: arrival/issue/shed deltas
+            # since the previous boundary plus the instantaneous backlog
+            # depth (queue growth is *the* open-loop overload signal).
+            gen, iss = self._arr_gen, self._arr_issued
+            shed = self._arr_shed
+            self._arrival_log.append({
+                "window": self._n_windows,
+                "t_ns": self.now,
+                "workloads": {
+                    w.name: {
+                        "generated": gen[wi] - self._arr_gen_mark[wi],
+                        "issued": iss[wi] - self._arr_issued_mark[wi],
+                        "shed": shed[wi] - self._arr_shed_mark[wi],
+                        "queue_depth": len(self._arr_q[wi]),
+                    }
+                    for wi, w in enumerate(self.workloads)
+                    if self._w_open[wi]
+                },
+            })
+            self._arr_gen_mark = list(gen)
+            self._arr_issued_mark = list(iss)
+            self._arr_shed_mark = list(shed)
         if self._tiering is not None:
             # Per-window tiering pass: sample accesses into the PageMap, run
             # the migration policy, re-resolve placement vectors, gate the
@@ -1433,6 +1587,7 @@ class TieredMemorySim:
     # -- run --------------------------------------------------------------------
     def run(self, sim_ns: float) -> SimResult:
         self._schedule_phases()
+        self._schedule_arrivals()
         self._push(self.control.next_window_ns, _EV_WINDOW, 0)
         self._fill_irq()
         self._pump()
@@ -1444,6 +1599,7 @@ class TieredMemorySim:
         ev_complete, ev_retire, ev_phase, ev_window = (
             _EV_COMPLETE, _EV_RETIRE, _EV_PHASE, _EV_WINDOW,
         )
+        ev_arrival = _EV_ARRIVAL
         complete_bits = ev_complete << kshift
         retire_bits = ev_retire << kshift
         # Loop-stable array bindings for the two inlined hot handlers (these
@@ -1475,6 +1631,8 @@ class TieredMemorySim:
         frac_of, cur_tier = self._w_frac, self._phase_tier
         cum_of = self._w_cum
         unthrottled = self._unthrottled
+        open_w, arr_q = self._w_open, self._arr_q
+        arr_issued = self._arr_issued
         llc = self._llc
         fabric_on = self._fabric_active
         w_hops = self._w_hops
@@ -1621,36 +1779,50 @@ class TieredMemorySim:
                             if lim is not None and rr_core[gi] >= lim:
                                 misses += 1
                                 continue
+                            if open_w[iwi]:
+                                aq = arr_q[iwi]
+                                if not aq:
+                                    misses += 1
+                                    continue
+                                key = aq[0][1]
+                            else:
+                                key = -1.0
                             frac = frac_of[iwi]
                             if frac is None:
                                 icum = cum_of[iwi]
                                 if icum is None:
                                     itier = cur_tier[iwi]
                                 else:
-                                    r = rnd()
+                                    r = key if key >= 0.0 else rnd()
                                     itier = 0
                                     while r >= icum[itier]:
                                         itier += 1
                             else:
-                                itier = _DDR if rnd() < frac else _CXL
+                                r = key if key >= 0.0 else rnd()
+                                itier = _DDR if r < frac else _CXL
                             if not unthrottled[iwi] and not self._take_token(
                                 iwi, svc[iwi][itier]
                             ):
                                 misses += 1
                                 continue
+                            if open_w[iwi]:
+                                tissue = arr_q[iwi].popleft()[0]
+                                arr_issued[iwi] += 1
+                            else:
+                                tissue = t
                             if free:
                                 nrid = free.pop()
                                 r_wl[nrid] = iwi
                                 r_gi[nrid] = gi
                                 r_tier[nrid] = itier
-                                r_tissue[nrid] = t
+                                r_tissue[nrid] = tissue
                             else:
                                 nrid = len(r_wl)
                                 r_wl.append(iwi)
                                 r_gi.append(gi)
                                 r_tier.append(itier)
                                 r_station.append(itier)
-                                r_tissue.append(t)
+                                r_tissue.append(tissue)
                                 r_ttor.append(0.0)
                                 r_service.append(0.0)
                                 r_traced.append(0)
@@ -1691,6 +1863,8 @@ class TieredMemorySim:
                                     (seq << _SEQ_SHIFT) | retire_bits | rid))
                     else:
                         retire(rid)
+            elif kind == ev_arrival:
+                self._arrival(packed & amask)
             elif kind == ev_phase:
                 self._phase_flip(packed & amask)
             elif kind == ev_window:
@@ -1794,6 +1968,19 @@ class TieredMemorySim:
             sanitizer=(
                 self._san.summary(self) if self._san is not None else None
             ),
+            arrival=(
+                {
+                    w.name: {
+                        "generated": self._arr_gen[wi],
+                        "issued": self._arr_issued[wi],
+                        "shed": self._arr_shed[wi],
+                        "backlog": len(self._arr_q[wi]),
+                    }
+                    for wi, w in enumerate(self.workloads)
+                    if self._w_open[wi]
+                }
+                if self._open_active else None
+            ),
             tier_latency_hist=tier_hists,
             trace=(tracer.run_payload() if tracer is not None else None),
             profile=(prof.snapshot() if prof is not None else None),
@@ -1831,6 +2018,19 @@ class TieredMemorySim:
                     for wi, w in enumerate(self.workloads)
                 }
                 prev = lens
+            records.sort(key=lambda r: r["window"])
+        if self._arrival_log:
+            # Merge the open-loop arrival accounting in by window index
+            # (same model as the fabric log: base records are synthesized
+            # for windows the control loop never recorded).
+            by_idx = {r["window"]: r for r in records}
+            for entry in self._arrival_log:
+                rec = by_idx.get(entry["window"])
+                if rec is None:
+                    rec = {"window": entry["window"], "t_ns": entry["t_ns"]}
+                    by_idx[entry["window"]] = rec
+                    records.append(rec)
+                rec["arrival"] = entry["workloads"]
             records.sort(key=lambda r: r["window"])
         if self._fabric_log:
             # Merge the per-hop port telemetry in by window index,

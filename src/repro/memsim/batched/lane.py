@@ -78,6 +78,11 @@ def can_batch(job) -> Optional[str]:
         san = sanitize_enabled()
     if san:
         return "sanitize"
+    # Open-loop arrival workloads are event-driven by construction: each
+    # generated request enters a backlog and gates issue — queue growth
+    # and shed accounting have no fluid/closed-form counterpart yet.
+    if any(getattr(w, "arrival", None) is not None for w in job.workloads):
+        return "arrival"
     # Traced jobs record per-request span chains — an event-level lens the
     # closed-form/fluid engines cannot produce.  (``latency_hist`` jobs DO
     # run batched: the exact lane buckets its full latency vector and the

@@ -59,6 +59,36 @@ def lat_test(
     )
 
 
+def serve_test(
+    n_threads: int = 4,
+    *,
+    name: str = "serve",
+    arrival: Optional[object] = None,
+    ddr_fraction: Optional[float] = None,
+    mlp: int = 8,
+    op: OpClass = OpClass.LOAD,
+    host: Optional[str] = None,
+) -> WorkloadSpec:
+    """Open-loop serving workload: ``n_threads`` worker cores with bounded
+    per-core concurrency draining an arrival-fed backlog
+    (:mod:`repro.workload`).  ``ddr_fraction`` interleaves its requests
+    across DDR/CXL (the SLO scenarios' placement axis); the workload is
+    never MIKU-managed — it models the latency-critical tenant the
+    controller protects, not the batch traffic it throttles."""
+    return WorkloadSpec(
+        name=name,
+        op=op,
+        tier="ddr",
+        n_cores=n_threads,
+        mlp=mlp,
+        wss_mb=2048.0,
+        miku_managed=False,
+        ddr_fraction=ddr_fraction,
+        host=host,
+        arrival=arrival,
+    )
+
+
 def lat_share(n_threads: int = 2, *, name: str = "lat-share") -> WorkloadSpec:
     """Two threads CAS-updating one shared cacheline (coherence through the
     CHA/ToR; paper §4.4)."""

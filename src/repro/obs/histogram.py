@@ -140,9 +140,14 @@ class LatencyHistogram:
         interpolates linearly inside it; the result is clamped to the
         observed ``[vmin, vmax]``.  Max relative error is the bucket
         relative width, <= 1/16.
+
+        An empty histogram returns NaN: a zero-completion window (open-
+        loop overload can starve one entirely) has no order statistics,
+        and 0.0 would read as an impossibly good latency in an SLO sweep
+        — NaN propagates honestly and never passes a budget comparison.
         """
         if not self.n:
-            return 0.0
+            return float("nan")
         r = min(max(q, 0.0), 1.0) * (self.n - 1.0)
         if r < self.zero:
             return min(0.0, self.vmin)

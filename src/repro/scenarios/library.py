@@ -21,6 +21,13 @@ per-edge MIKU recovers it), ``fabric_port_overflow`` (the port-queue
 limit vs ToR limit crossover behind one switch port), and ``fabric_miku``
 (asymmetric uplinks: per-tier throttling punishes the innocent host,
 per-edge throttles only the congested route).
+
+Two SLO scenarios exercise the open-loop arrival layer
+(:mod:`repro.workload`): ``slo_knee`` sweeps offered load to find where
+each placement/policy blows the p99 budget (CXL-heavy placement knees at a
+fraction of the DDR rate; MIKU moves the knee well above racing), and
+``flash_crowd`` steps the offered rate mid-run to measure the control
+plane's transient response (peak backlog, surge p99, drain time).
 """
 
 from __future__ import annotations
@@ -39,7 +46,10 @@ from repro.memsim.workloads import (
     bw_test,
     lat_share,
     lat_test,
+    serve_test,
 )
+from repro.obs.histogram import LatencyHistogram
+from repro.workload import ArrivalSpec
 from repro.scenarios.registry import register
 from repro.scenarios.spec import Axis, Metric, Scenario
 
@@ -62,6 +72,7 @@ def _job(
     miku_law: str = "pertier",
     tiering=None,
     latency_hist: bool = False,
+    record_windows: bool = False,
 ) -> SimJob:
     return SimJob(
         platform=platform,
@@ -74,6 +85,7 @@ def _job(
         miku_law=miku_law,
         tiering=tiering,
         latency_hist=latency_hist,
+        record_windows=record_windows,
     )
 
 
@@ -1524,4 +1536,181 @@ register(Scenario(
     ),
     build=_fabric_miku_build,
     reduce=_fabric_miku_reduce,
+))
+
+
+# -- SLO scenarios: open-loop offered load (repro.workload) -------------------
+
+_SLO_SIM_NS = 300_000.0
+#: p99 latency budget for the serving tenant; NaN percentiles (a window
+#: with zero completions) never satisfy ``p99 <= budget`` and so count as
+#: blown.
+_SLO_BUDGET_NS = 10_000.0
+#: Placement axis: the serving tenant's DDR interleave fraction.
+_SLO_PLACEMENTS = {"ddr": 1.0, "split": 0.5, "cxl_heavy": 0.25}
+
+
+def _slo_workloads(cell, arrival) -> List[WorkloadSpec]:
+    """The SLO co-run: an open-loop latency-critical serving tenant
+    (never MIKU-managed) against a closed-loop CXL bandwidth hog (the
+    MIKU throttling candidate)."""
+    serve = serve_test(
+        4, arrival=arrival,
+        ddr_fraction=_SLO_PLACEMENTS[cell["placement"]],
+    )
+    hog = bw_test("cxl", cell["op"], 16, name="hog")
+    return [serve, hog]
+
+
+def _slo_knee_build(platform, cell) -> List[SimJob]:
+    arr = ArrivalSpec("poisson", rate=cell["rate"], seed=7)
+    return [_job(platform, _slo_workloads(cell, arr), cell["sim_ns"],
+                 miku=cell["policy"] == "miku", latency_hist=True)]
+
+
+def _slo_knee_reduce(platform, cell, jobs, results) -> List[dict]:
+    del platform, jobs
+    (res,) = results
+    st = res.stats["serve"]
+    a = res.arrival["serve"]
+    hist = st.latency_hist
+    p99 = st.percentile_ns(0.99)
+    budget = cell["budget_ns"]
+    return [{
+        "placement": cell["placement"],
+        "policy": cell["policy"],
+        "rate_rpns": cell["rate"],
+        "p50_ns": st.percentile_ns(0.50),
+        "p95_ns": hist.percentile(0.95) if hist is not None else float("nan"),
+        "p99_ns": p99,
+        "budget_ns": budget,
+        # `not (p99 <= budget)` so a NaN p99 (zero completions) is blown.
+        "budget_blown": int(not (p99 <= budget)),
+        "generated": a["generated"],
+        "issued": a["issued"],
+        "shed": a["shed"],
+        "backlog": a["backlog"],
+    }]
+
+
+register(Scenario(
+    name="slo_knee",
+    title="Offered-load sweep: where each placement/policy blows the "
+          "p99 latency budget",
+    module="",  # registry/CLI native
+    axes=(
+        _platform_axis(),
+        _op_axis(OpClass.LOAD),
+        Axis("placement", ("ddr", "cxl_heavy"),
+             help="serving tenant's tier placement "
+                  "(DDR interleave fraction: ddr=1.0, cxl_heavy=0.25)"),
+        Axis("policy", ("racing", "miku"),
+             help="control policy over the co-running CXL hog"),
+        Axis("rate", (0.002, 0.005, 0.010, 0.020, 0.032),
+             help="offered arrival rate (requests/ns), Poisson",
+             parse=float),
+        Axis("budget_ns", _SLO_BUDGET_NS,
+             help="p99 latency budget defining the knee", parse=float),
+        Axis("sim_ns", _SLO_SIM_NS, help="simulated horizon"),
+    ),
+    metrics=(
+        Metric("p50_ns", "ns", "serving tenant median latency "
+               "(arrival to retire, backlog wait included)"),
+        Metric("p95_ns", "ns", "from the mergeable latency histogram"),
+        Metric("p99_ns", "ns", "the SLO-governing tail"),
+        Metric("budget_blown", "", "1 when p99 exceeds budget_ns — the "
+               "knee is the lowest blown rate; CXL-heavy placement knees "
+               "before DDR, MIKU moves the knee above racing"),
+        Metric("generated", "", "open-loop arrivals generated"),
+        Metric("issued", "", "arrivals issued into the pipeline"),
+        Metric("shed", "", "arrivals shed at the queue limit"),
+        Metric("backlog", "", "arrival-queue depth at horizon end — "
+               "nonzero means the offered rate exceeds capacity"),
+    ),
+    build=_slo_knee_build,
+    reduce=_slo_knee_reduce,
+))
+
+
+def _flash_crowd_build(platform, cell) -> List[SimJob]:
+    arr = ArrivalSpec(
+        "flash_crowd", rate=cell["rate"], seed=7,
+        t_step_ns=cell["t_step_ns"], surge=cell["surge"],
+        surge_ns=cell["surge_ns"],
+    )
+    return [_job(platform, _slo_workloads(cell, arr), cell["sim_ns"],
+                 miku=cell["policy"] == "miku", latency_hist=True,
+                 record_windows=True)]
+
+
+def _flash_crowd_reduce(platform, cell, jobs, results) -> List[dict]:
+    del platform
+    (job,), (res,) = jobs, results
+    st = res.stats["serve"]
+    a = res.arrival["serve"]
+    t0 = cell["t_step_ns"]
+    t1 = t0 + cell["surge_ns"]
+    peak_q = 0
+    surge_hist = LatencyHistogram()
+    recovery_windows = 0
+    for rec in res.window_records or ():
+        arr_blk = rec.get("arrival", {}).get("serve")
+        if arr_blk is None:
+            continue
+        peak_q = max(peak_q, arr_blk["queue_depth"])
+        w_end = rec["t_ns"]
+        w_start = w_end - job.window_ns
+        if w_start < t1 and w_end > t0:  # window overlaps the surge
+            blob = rec.get("latency_hist", {}).get("serve")
+            if blob:
+                surge_hist = surge_hist.merge(
+                    LatencyHistogram.from_jsonable(blob))
+        elif w_start >= t1 and arr_blk["queue_depth"] > 0:
+            recovery_windows += 1
+    return [{
+        "placement": cell["placement"],
+        "policy": cell["policy"],
+        "peak_queue_depth": peak_q,
+        "surge_p99_ns": surge_hist.percentile(0.99),
+        "recovery_windows": recovery_windows,
+        "p99_ns": st.percentile_ns(0.99),
+        "shed": a["shed"],
+        "backlog": a["backlog"],
+    }]
+
+
+register(Scenario(
+    name="flash_crowd",
+    title="Flash crowd: control-plane transient response to an offered-"
+          "load step",
+    module="",  # registry/CLI native
+    axes=(
+        _platform_axis(),
+        _op_axis(OpClass.LOAD),
+        Axis("placement", "split",
+             help="serving tenant's tier placement (see slo_knee)"),
+        Axis("policy", ("racing", "miku"),
+             help="control policy over the co-running CXL hog"),
+        Axis("rate", 0.004, help="base offered rate (requests/ns)",
+             parse=float),
+        Axis("surge", 6.0, help="rate multiplier during the crowd",
+             parse=float),
+        Axis("t_step_ns", 100_000.0, help="crowd onset", parse=float),
+        Axis("surge_ns", 60_000.0, help="crowd duration", parse=float),
+        Axis("sim_ns", _SLO_SIM_NS, help="simulated horizon"),
+    ),
+    metrics=(
+        Metric("peak_queue_depth", "", "worst arrival-backlog depth — "
+               "racing lets the queue run away, MIKU caps it"),
+        Metric("surge_p99_ns", "ns",
+               "p99 over windows overlapping the surge"),
+        Metric("recovery_windows", "",
+               "post-surge windows with a nonzero backlog (drain time)"),
+        Metric("p99_ns", "ns", "whole-run serving p99"),
+        Metric("shed", "", "arrivals shed at the queue limit"),
+        Metric("backlog", "", "arrival-queue depth at horizon end — "
+               "nonzero means the crowd never drained"),
+    ),
+    build=_flash_crowd_build,
+    reduce=_flash_crowd_reduce,
 ))

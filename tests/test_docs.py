@@ -30,6 +30,7 @@ _PUBLIC_MODULES = (
     "repro.memsim",
     "repro.memsim.batched",
     "repro.fabric",
+    "repro.workload",
 )
 
 
@@ -118,9 +119,13 @@ def test_examples_index_covers_all_demos():
 
 @pytest.mark.parametrize("doc,needles", [
     ("telemetry.md", ("mytrace.trace.json", "max_concurrency",
-                      "t_slow_raw", "class_counts", "tiering")),
+                      "t_slow_raw", "class_counts", "tiering",
+                      "queue_depth", "arrival-conservation")),
     ("decision-laws.md", ("TierDecisions", "VectorMikuLadder",
                           "REPRO_BATCH_BACKEND", "fallback")),
+    ("workloads.md", ("ArrivalSpec", "poisson", "zipf", "bursty",
+                      "flash_crowd", "trace", "queue_limit", "slo_knee",
+                      "REPRO_REGEN")),
 ])
 def test_doc_files_exist_with_key_content(doc, needles):
     text = (REPO / "docs" / doc).read_text()
@@ -158,3 +163,23 @@ def test_telemetry_doc_matches_live_window_records():
             assert key in doc, f"undocumented decision field {key!r}"
     for key in ("window", "t_ns", "tiers", "decision"):
         assert f"`{key}`" in doc
+
+
+def test_telemetry_doc_matches_live_arrival_block():
+    """The documented open-loop `arrival` block must match a real run."""
+    from repro.core.device_model import platform_a
+    from repro.memsim.sweep import SimJob, run_job
+    from repro.memsim.workloads import serve_test
+    from repro.workload import ArrivalSpec
+
+    wl = serve_test(2, arrival=ArrivalSpec("poisson", rate=0.01, seed=1))
+    job = SimJob(platform=platform_a(), workloads=[wl], sim_ns=60_000.0,
+                 record_windows=True)
+    res = run_job(job)
+    recs = [r for r in res.window_records if "arrival" in r]
+    assert recs
+    doc = (REPO / "docs" / "telemetry.md").read_text()
+    for blk in recs[0]["arrival"].values():
+        assert set(blk) == {"generated", "issued", "shed", "queue_depth"}
+        for key in blk:
+            assert f"`{key}`" in doc, f"undocumented arrival field {key!r}"

@@ -170,7 +170,9 @@ def test_workload_stats_percentile_interpolates():
     st.latency_samples = [40.0, 10.0, 30.0, 20.0]  # unsorted on purpose
     assert st.percentile_ns(0.5) == 25.0
     assert st.percentile_ns(0.75) == 32.5
-    assert WorkloadStats().percentile_ns(0.5) == 0.0
+    # Zero completions → NaN, not a fake 0 ns latency: a NaN p99 can never
+    # satisfy an SLO budget comparison (see WorkloadStats.percentile_ns).
+    assert math.isnan(WorkloadStats().percentile_ns(0.5))
 
 
 # -- 3. tracing-off bit-identity ----------------------------------------------

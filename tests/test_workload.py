@@ -1,0 +1,540 @@
+"""The workload-layer hardening pass: arrival generators + SLO scenarios.
+
+Four groups:
+
+1. **Generator properties** — exact-seed determinism, empirical rate
+   within tolerance, Zipf skew monotone in ``s`` (exact, not
+   statistical: the same uniform draws bisect a pointwise-larger
+   cumulative table), bursty duty-cycle conservation (every arrival
+   inside the on-phase by construction), and bit-faithful trace replay.
+   Each runs as a hypothesis property when hypothesis is installed; the
+   container image does not ship it, so the same properties are also
+   exercised over a fixed spread of kinds and seeds.
+2. **Open-loop DES integration** — request conservation
+   (``generated == issued + shed + backlog``), queue-limit shedding,
+   the ``"arrival"`` batched-lane fallback with cross-lane equality,
+   zero-completion NaN percentiles, and the sanitizer's
+   ``arrival-conservation`` check via fault injection.
+3. **SLO scenario acceptance** — the ``slo_knee`` knee ordering the
+   ISSUE pins (CXL-heavy placement blows the p99 budget at a fraction
+   of the DDR rate; MIKU moves the knee above racing) and the
+   ``flash_crowd`` transient contrast (racing lets the backlog run
+   away, MIKU drains it).
+4. **Pinned golden** — one ``slo_knee`` cell's decision/telemetry trace
+   (``tests/data/slo_knee_trace_goldens.json``; ``REPRO_REGEN=1`` to
+   re-record), replayed law-only through a ReplaySubstrate AND
+   re-simulated end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+
+import pytest
+
+from repro.analysis import InvariantViolation
+from repro.core.des import TieredMemorySim, WorkloadStats
+from repro.core.device_model import platform_a
+from repro.core.littles_law import OpClass, TierCounters, TierWindow
+from repro.core.substrate import ControlLoop, ReplaySubstrate
+from repro.memsim.batched import partition_jobs
+from repro.memsim.calibration import default_miku
+from repro.memsim.sweep import SimJob, run_job, run_sweep
+from repro.memsim.workloads import bw_test, serve_test
+from repro.obs.histogram import LatencyHistogram
+from repro.scenarios import get
+from repro.workload import ArrivalSpec, arrival_times
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+GOLDEN = os.path.join(DATA, "slo_knee_trace_goldens.json")
+P = platform_a()
+
+_RANDOM_KINDS = ("poisson", "zipf", "bursty", "diurnal", "flash_crowd")
+_HORIZON = 2_000_000.0
+_RATE = 0.01
+
+
+def _spec(kind: str, seed: int = 0, **over) -> ArrivalSpec:
+    base = dict(rate=_RATE, seed=seed)
+    if kind == "flash_crowd":
+        base.update(t_step_ns=_HORIZON / 2, surge=3.0, surge_ns=0.0)
+    base.update(over)
+    return ArrivalSpec(kind, **base)
+
+
+# -- 1a. spec validation ------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", [
+    dict(kind="weibull", rate=1.0),
+    dict(kind="poisson"),  # rate defaults to 0.0
+    dict(kind="poisson", rate=-1.0),
+    dict(kind="zipf", rate=1.0, s=0.0),
+    dict(kind="zipf", rate=1.0, n_keys=0),
+    dict(kind="bursty", rate=1.0, duty=0.0),
+    dict(kind="bursty", rate=1.0, duty=1.5),
+    dict(kind="bursty", rate=1.0, period_ns=0.0),
+    dict(kind="diurnal", rate=1.0, amplitude=1.0),
+    dict(kind="flash_crowd", rate=1.0, surge=0.0),
+    dict(kind="trace"),  # path missing
+    dict(kind="poisson", rate=1.0, queue_limit=0),
+])
+def test_arrival_spec_validation(bad):
+    with pytest.raises(ValueError):
+        ArrivalSpec(**bad)
+
+
+def test_des_rejects_non_arrival_spec():
+    wl = dataclasses.replace(serve_test(2), arrival="poisson")
+    with pytest.raises(ValueError, match="arrival="):
+        SimJob(platform=P, workloads=[wl], sim_ns=10_000.0)
+
+
+# -- 1b. determinism + rate properties ----------------------------------------
+
+
+def _check_determinism(kind: str, seed: int, stream_seed: int) -> None:
+    spec = _spec(kind, seed)
+    a = arrival_times(spec, stream_seed=stream_seed, limit=256)
+    b = arrival_times(spec, stream_seed=stream_seed, limit=256)
+    assert a == b  # exact, not approximate
+    assert all(t0 <= t1 for (t0, _), (t1, _) in zip(a, a[1:]))
+    # A different stream or spec seed is a genuinely different stream.
+    c = arrival_times(spec, stream_seed=stream_seed + 1, limit=256)
+    d = arrival_times(dataclasses.replace(spec, seed=seed + 1),
+                      stream_seed=stream_seed, limit=256)
+    assert a != c and a != d
+
+
+def _check_rate(kind: str, seed: int) -> None:
+    spec = _spec(kind, seed)
+    n = len(arrival_times(spec, stream_seed=seed * 31 + 7,
+                          horizon_ns=_HORIZON))
+    if kind == "flash_crowd":
+        # rate until the midpoint step, rate * surge after it.
+        expected = spec.rate * _HORIZON / 2 + \
+            spec.rate * spec.surge * _HORIZON / 2
+    else:
+        expected = spec.rate * _HORIZON
+    assert n == pytest.approx(expected, rel=0.10), (kind, n, expected)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    @pytest.mark.parametrize("kind", _RANDOM_KINDS)
+    @pytest.mark.parametrize("seed,stream_seed",
+                             [(0, 0), (1, 17), (42, 3), (7, 1000003)])
+    def test_generator_determinism(kind, seed, stream_seed):
+        _check_determinism(kind, seed, stream_seed)
+
+    @pytest.mark.parametrize("kind", _RANDOM_KINDS)
+    @pytest.mark.parametrize("seed", [0, 5, 23])
+    def test_generator_empirical_rate(kind, seed):
+        _check_rate(kind, seed)
+else:
+    @given(kind=st.sampled_from(_RANDOM_KINDS), seed=st.integers(0, 2 ** 16),
+           stream_seed=st.integers(0, 2 ** 32))
+    @settings(max_examples=25, deadline=None)
+    def test_generator_determinism(kind, seed, stream_seed):
+        _check_determinism(kind, seed, stream_seed)
+
+    @given(kind=st.sampled_from(_RANDOM_KINDS), seed=st.integers(0, 2 ** 16))
+    @settings(max_examples=15, deadline=None)
+    def test_generator_empirical_rate(kind, seed):
+        _check_rate(kind, seed)
+
+
+def test_zipf_skew_monotone_in_s():
+    """Sharper skew concentrates mass on the hottest rank — *exactly*:
+    each arrival consumes one expovariate and one uniform regardless of
+    ``s``, and ``bisect`` over the cumulative table is pointwise monotone,
+    so with the draws held fixed the rank-0 count never decreases in s."""
+    for seed in (0, 9, 77):
+        counts = []
+        for s in (0.5, 0.8, 1.1, 1.5, 2.0):
+            spec = _spec("zipf", seed, s=s, n_keys=256)
+            keys = [k for _, k in arrival_times(spec, stream_seed=seed,
+                                                limit=2048)]
+            counts.append(sum(1 for k in keys if k == 0.0))
+        assert counts == sorted(counts), counts
+        assert counts[-1] > counts[0]  # strictly sharper over the range
+
+
+def test_zipf_keys_are_quantiles():
+    spec = _spec("zipf", 3, n_keys=64)
+    keys = [k for _, k in arrival_times(spec, stream_seed=1, limit=512)]
+    assert all(0.0 <= k < 1.0 for k in keys)
+    assert all(abs(k * 64 - round(k * 64)) < 1e-9 for k in keys)
+
+
+def test_bursty_duty_cycle_conservation():
+    """Every arrival lands inside the on-phase (offset < duty * period) —
+    exact by construction — and the time-average rate stays ``rate``."""
+    for duty in (0.1, 0.5, 0.9):
+        spec = _spec("bursty", 2, duty=duty, period_ns=10_000.0)
+        times = [t for t, _ in arrival_times(spec, stream_seed=5,
+                                             horizon_ns=_HORIZON)]
+        assert times, duty
+        for t in times:
+            assert t % spec.period_ns < duty * spec.period_ns + 1e-6
+        assert len(times) == pytest.approx(spec.rate * _HORIZON, rel=0.10)
+
+
+def test_flash_crowd_step_is_piecewise():
+    spec = _spec("flash_crowd", 4, t_step_ns=500_000.0, surge=5.0,
+                 surge_ns=500_000.0)
+    times = [t for t, _ in arrival_times(spec, stream_seed=2,
+                                         horizon_ns=1_500_000.0)]
+    pre = sum(1 for t in times if t < 500_000.0)
+    mid = sum(1 for t in times if 500_000.0 <= t < 1_000_000.0)
+    post = sum(1 for t in times if t >= 1_000_000.0)
+    assert pre == pytest.approx(spec.rate * 500_000.0, rel=0.15)
+    assert mid == pytest.approx(spec.rate * 5.0 * 500_000.0, rel=0.15)
+    assert post == pytest.approx(spec.rate * 500_000.0, rel=0.15)
+
+
+def test_diurnal_oscillates_about_mean():
+    spec = _spec("diurnal", 6, period_ns=200_000.0, amplitude=0.9)
+    times = [t for t, _ in arrival_times(spec, stream_seed=8,
+                                         horizon_ns=_HORIZON)]
+    assert len(times) == pytest.approx(spec.rate * _HORIZON, rel=0.10)
+    # First half-period runs above the mean rate, second half below.
+    crest = sum(1 for t in times if t % 200_000.0 < 100_000.0)
+    trough = len(times) - crest
+    assert crest > 1.3 * trough
+
+
+# -- 1c. trace replay ---------------------------------------------------------
+
+
+def test_trace_replay_is_bit_faithful(tmp_path):
+    path = tmp_path / "arrivals.txt"
+    rows = [(10.0, -1.0), (10.0, 0.25), (35.5, -1.0), (80.0, 0.5)]
+    path.write_text(
+        "# header comment\n\n10.0\n10.0,0.25\n35.5\n80.0,0.5\n")
+    spec = ArrivalSpec("trace", path=str(path))
+    got = arrival_times(spec, horizon_ns=1e9)
+    assert got == rows  # bit-faithful, stream_seed-independent
+    assert arrival_times(spec, stream_seed=99, horizon_ns=1e9) == rows
+
+
+def test_trace_replay_rejects_malformed(tmp_path):
+    bad = tmp_path / "bad.txt"
+    bad.write_text("10.0\nnot-a-number\n")
+    with pytest.raises(ValueError, match="t_ns"):
+        arrival_times(ArrivalSpec("trace", path=str(bad)), limit=10)
+    dec = tmp_path / "dec.txt"
+    dec.write_text("10.0\n5.0\n")
+    with pytest.raises(ValueError, match="non-decreasing"):
+        arrival_times(ArrivalSpec("trace", path=str(dec)), limit=10)
+
+
+def test_trace_driven_sim(tmp_path):
+    path = tmp_path / "t.txt"
+    path.write_text("".join(f"{t * 100.0}\n" for t in range(200)))
+    wl = serve_test(2, arrival=ArrivalSpec("trace", path=str(path)))
+    res = run_job(SimJob(platform=P, workloads=[wl], sim_ns=60_000.0))
+    a = res.arrival["serve"]
+    assert a["generated"] == 200
+    assert a["generated"] == a["issued"] + a["shed"] + a["backlog"]
+
+
+# -- 2. open-loop DES integration ---------------------------------------------
+
+
+def _open_job(**over) -> SimJob:
+    params = dict(
+        platform=P,
+        workloads=[
+            serve_test(4, arrival=ArrivalSpec("poisson", rate=0.01, seed=7),
+                       ddr_fraction=0.5),
+            bw_test("cxl", OpClass.LOAD, 8, name="hog"),
+        ],
+        sim_ns=100_000.0,
+        seed=3,
+    )
+    params.update(over)
+    return SimJob(**params)
+
+
+def test_open_loop_conservation_and_latency_includes_wait():
+    res = run_job(_open_job(latency_hist=True))
+    a = res.arrival["serve"]
+    st = res.stats["serve"]
+    assert a["generated"] == a["issued"] + a["shed"] + a["backlog"]
+    assert a["shed"] == 0  # unbounded queue
+    assert 0 < st.completed <= a["issued"]
+    # Latency is measured from *generation* (backlog wait included), so
+    # the mean must be at least the unloaded pipeline latency.
+    assert st.mean_latency_ns() > 0.0
+
+
+def test_queue_limit_sheds_and_bounds_backlog():
+    wl = serve_test(2, arrival=ArrivalSpec("poisson", rate=0.05, seed=4,
+                                           queue_limit=16))
+    res = run_job(SimJob(platform=P, workloads=[wl], sim_ns=100_000.0))
+    a = res.arrival["serve"]
+    assert a["shed"] > 0
+    assert a["backlog"] <= 16
+    assert a["generated"] == a["issued"] + a["shed"] + a["backlog"]
+
+
+def test_closed_loop_jobs_have_no_arrival_block():
+    res = run_job(SimJob(platform=P,
+                         workloads=[bw_test("cxl", OpClass.LOAD, 4)],
+                         sim_ns=50_000.0))
+    assert res.arrival is None
+
+
+def test_window_records_carry_arrival_deltas():
+    res = run_job(_open_job(record_windows=True))
+    recs = [r for r in res.window_records if "arrival" in r]
+    assert recs, "open-loop run recorded no arrival blocks"
+    a = res.arrival["serve"]
+    gen = sum(r["arrival"]["serve"]["generated"] for r in recs)
+    issued = sum(r["arrival"]["serve"]["issued"] for r in recs)
+    shed = sum(r["arrival"]["serve"]["shed"] for r in recs)
+    # Per-window deltas fold back to the run totals (the final partial
+    # window past the last boundary is the only slack).
+    assert gen <= a["generated"] and issued <= a["issued"]
+    assert shed <= a["shed"]
+    last = recs[-1]["arrival"]["serve"]
+    assert last["queue_depth"] >= 0
+    # The hog is closed-loop: it never appears in arrival blocks.
+    assert all("hog" not in r["arrival"] for r in recs)
+
+
+def test_open_loop_runs_are_deterministic():
+    """Same job, same seeds → bit-identical everything: the arrival
+    generators draw from dedicated streams (never wall-clock, never the
+    process-global RNG), so open-loop runs replay exactly."""
+    r1, r2 = run_job(_open_job()), run_job(_open_job())
+    assert r1.arrival == r2.arrival
+    for name in ("serve", "hog"):
+        assert r1.stats[name].bytes == r2.stats[name].bytes
+        assert r1.stats[name].latency_sum == r2.stats[name].latency_sum
+
+
+# -- 2b. cross-lane equivalence -----------------------------------------------
+
+
+def test_batched_lane_falls_back_with_arrival_reason():
+    jobs = [_open_job(), SimJob(platform=P,
+                                workloads=[bw_test("cxl", OpClass.LOAD, 8)],
+                                sim_ns=50_000.0)]
+    plans, fallbacks = partition_jobs(jobs)
+    assert dict(fallbacks) == {0: "arrival"}  # closed-loop job batches
+    batched = run_sweep(jobs, lane="batched")
+    scalar = run_sweep(jobs, lane="scalar")
+    # The fallback is a scalar rerun: bit-identical, conservation intact.
+    assert batched[0].arrival == scalar[0].arrival
+    for name in ("serve", "hog"):
+        assert batched[0].stats[name].bytes == scalar[0].stats[name].bytes
+    assert batched[1].arrival is None
+
+
+# -- 2c. zero-completion NaN regression ---------------------------------------
+
+
+def test_empty_percentiles_are_nan_not_zero():
+    assert math.isnan(WorkloadStats().percentile_ns(0.99))
+    assert math.isnan(LatencyHistogram().percentile(0.99))
+    # NaN never satisfies a budget comparison — the property the SLO
+    # scenarios rely on to mark zero-completion cells as blown.
+    assert not (WorkloadStats().percentile_ns(0.99) <= 1e12)
+    assert not (LatencyHistogram().percentile(0.99) <= 1e12)
+
+
+def test_zero_completion_window_hist_is_nan_safe():
+    # A rate so low nothing arrives within the horizon: stats exist, the
+    # histogram is empty, and every percentile is NaN (not 0.0).
+    wl = serve_test(1, arrival=ArrivalSpec("poisson", rate=1e-9, seed=1))
+    res = run_job(SimJob(platform=P, workloads=[wl], sim_ns=20_000.0,
+                         latency_hist=True))
+    st = res.stats["serve"]
+    assert st.completed == 0
+    assert math.isnan(st.percentile_ns(0.5))
+    assert math.isnan(st.latency_hist.percentile(0.99))
+
+
+# -- 2d. sanitizer ------------------------------------------------------------
+
+
+def test_sanitized_open_loop_run_is_clean():
+    res = run_job(_open_job(sanitize="record"))
+    assert res.sanitizer["violations"] == []
+
+
+def test_injected_arrival_miscount_trips_conservation():
+    sim = TieredMemorySim(
+        P, _open_job().workloads, seed=3, sanitize=True,
+    )
+    sim._san.add_mutation(1, lambda s: s._arr_gen.__setitem__(
+        0, s._arr_gen[0] + 3))
+    with pytest.raises(InvariantViolation) as ei:
+        sim.run(100_000.0)
+    assert ei.value.check == "arrival-conservation"
+    assert ei.value.context["workload"] == "serve"
+
+
+# -- 3. SLO scenario acceptance -----------------------------------------------
+
+
+def _slo_cell(placement, policy, rate):
+    return {
+        "platform": "A", "op": OpClass.LOAD, "placement": placement,
+        "policy": policy, "rate": rate, "budget_ns": 10_000.0,
+        "sim_ns": 300_000.0,
+    }
+
+
+def _slo_row(placement, policy, rate):
+    sc = get("slo_knee")
+    cell = _slo_cell(placement, policy, rate)
+    jobs = sc.build(P, cell)
+    results = [run_job(j) for j in jobs]
+    (row,) = sc.reduce(P, cell, jobs, results)
+    return row
+
+
+@pytest.fixture(scope="module")
+def knee_rows():
+    rows = {}
+    for placement, policy in (("cxl_heavy", "racing"), ("cxl_heavy", "miku"),
+                              ("ddr", "racing")):
+        for rate in (0.005, 0.020):
+            rows[(placement, policy, rate)] = _slo_row(
+                placement, policy, rate)
+    return rows
+
+
+def test_slo_knee_orders_placements_and_policies(knee_rows):
+    """The ISSUE's acceptance pins: under racing, CXL-heavy placement
+    blows the p99 budget at a fraction of the rate DDR sustains; MIKU
+    moves the CXL-heavy knee above the racing knee."""
+    blown = {k: r["budget_blown"] for k, r in knee_rows.items()}
+    # racing, cxl_heavy: knee at 0.005 (the lowest swept blown rate).
+    assert blown[("cxl_heavy", "racing", 0.005)] == 1
+    # racing, ddr: survives 0.005, blows at 0.020 — the knee is higher.
+    assert blown[("ddr", "racing", 0.005)] == 0
+    assert blown[("ddr", "racing", 0.020)] == 1
+    # miku, cxl_heavy: survives the rate racing died at — the knee moved.
+    assert blown[("cxl_heavy", "miku", 0.005)] == 0
+    assert blown[("cxl_heavy", "miku", 0.020)] == 1
+
+
+def test_slo_knee_rows_conserve_and_report_tails(knee_rows):
+    for row in knee_rows.values():
+        assert row["generated"] == \
+            row["issued"] + row["shed"] + row["backlog"]
+        p50, p95, p99 = row["p50_ns"], row["p95_ns"], row["p99_ns"]
+        assert p50 <= p95 * 1.0001 and p95 <= p99 * 1.07  # hist tolerance
+    # Overload shows up as unbounded backlog growth, not silence.
+    assert knee_rows[("cxl_heavy", "racing", 0.020)]["backlog"] > 0
+    assert knee_rows[("cxl_heavy", "miku", 0.005)]["backlog"] == 0
+
+
+def test_flash_crowd_transient_contrast():
+    sc = get("flash_crowd")
+    rows = {}
+    for policy in ("racing", "miku"):
+        cell = {
+            "platform": "A", "op": OpClass.LOAD, "placement": "split",
+            "policy": policy, "rate": 0.004, "surge": 6.0,
+            "t_step_ns": 100_000.0, "surge_ns": 60_000.0,
+            "sim_ns": 300_000.0,
+        }
+        jobs = sc.build(P, cell)
+        results = [run_job(j) for j in jobs]
+        (rows[policy],) = sc.reduce(P, cell, jobs, results)
+    racing, miku = rows["racing"], rows["miku"]
+    # The control plane's transient response: racing lets the crowd's
+    # backlog run away and never drains it; MIKU caps the excursion and
+    # drains the queue before the horizon.
+    assert miku["peak_queue_depth"] < racing["peak_queue_depth"]
+    assert miku["backlog"] == 0
+    assert racing["backlog"] > 0
+    assert miku["surge_p99_ns"] < racing["surge_p99_ns"] * 0.75
+    assert miku["recovery_windows"] <= racing["recovery_windows"]
+
+
+# -- 4. pinned golden: one slo_knee cell --------------------------------------
+
+_GOLDEN_CELL = ("cxl_heavy", "miku", 0.005)
+
+
+def _golden_job() -> SimJob:
+    sc = get("slo_knee")
+    (job,) = sc.build(P, _slo_cell(*_GOLDEN_CELL))
+    return dataclasses.replace(job, record_windows=True)
+
+
+def _strip(rec: dict) -> dict:
+    return {k: v for k, v in rec.items() if k != "latency_hist"}
+
+
+@pytest.fixture(scope="module")
+def golden_blob():
+    if os.environ.get("REPRO_REGEN"):
+        res = run_job(_golden_job())
+        blob = {
+            "scenario": "slo_knee",
+            "placement": _GOLDEN_CELL[0],
+            "policy": _GOLDEN_CELL[1],
+            "rate": _GOLDEN_CELL[2],
+            "window_ns": 10_000.0,
+            "sim_ns": 300_000.0,
+            "tier_names": ["ddr", "cxl"],
+            "windows": [_strip(r) for r in res.window_records],
+        }
+        with open(GOLDEN, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+            f.write("\n")
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def _counters(d) -> TierCounters:
+    return TierCounters(
+        inserts=d["inserts"],
+        occupancy_time=d["occupancy_time"],
+        class_counts={OpClass(k): v for k, v in d["class_counts"].items()},
+    )
+
+
+def test_golden_replayed_law_only(golden_blob):
+    """The recorded counter windows, replayed through a ReplaySubstrate
+    (no DES), drive the MIKU law to the identical decision sequence."""
+    names = tuple(golden_blob["tier_names"])
+    deltas = [
+        TierWindow(tuple(_counters(w["tiers"][t]) for t in names), names)
+        for w in golden_blob["windows"]
+    ]
+    sub = ReplaySubstrate(deltas)
+    loop = ControlLoop(sub, default_miku(P), window_ns=1.0)
+    while not sub.exhausted:
+        loop.fire()
+    assert len(loop.decisions) == len(golden_blob["windows"])
+    for d, w in zip(loop.decisions, golden_blob["windows"]):
+        g = w["decision"]["cxl"]
+        dt = d.for_tier("cxl")
+        assert dt.max_concurrency == g["max_concurrency"]
+        assert dt.rate_factor == g["rate_factor"]
+        assert dt.phase.value == g["phase"]
+
+
+def test_golden_resimulates_bit_identically(golden_blob):
+    """End to end: re-running the cell reproduces every recorded window —
+    tier counters, decisions, AND the per-window arrival deltas."""
+    res = run_job(_golden_job())
+    got = [_strip(r) for r in res.window_records]
+    want = golden_blob["windows"]
+    assert json.loads(json.dumps(got)) == want, (
+        "slo_knee golden trace drifted from tests/data/"
+        "slo_knee_trace_goldens.json; if intentional, re-record with "
+        "REPRO_REGEN=1 pytest tests/test_workload.py"
+    )
